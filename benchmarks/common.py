@@ -1,0 +1,49 @@
+"""Shared helpers for the figure benchmarks: run a sim config, time it, and
+emit ``name,us_per_call,derived`` CSV rows (one per paper table/figure)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import metrics as M
+from repro.core import simulator as sim
+
+
+def run_sim(cfg, params, seed: int = 0, warmup_frac: float = 0.3):
+    t0 = time.time()
+    final, trace = sim.simulate(cfg, params, jax.random.PRNGKey(seed))
+    jax.block_until_ready(trace["now"])
+    wall = time.time() - t0
+    m = M.analyze(trace, n=cfg.n, warmup_frac=warmup_frac)
+    return m, trace, wall
+
+
+def response_stats(m, censor_penalty: float | None = None):
+    """Mean/percentiles; censored jobs (never finished in-sim — unbounded
+    queues) get reported separately and, if censor_penalty is set, folded in
+    at that value (the paper's '>2000ms' bucket)."""
+    r = m.response_times
+    out = {
+        "n": int(m.num_jobs),
+        "censored_frac": m.censored / max(m.num_jobs, 1),
+    }
+    if censor_penalty is not None and m.censored:
+        r = np.concatenate([r, np.full(m.censored, censor_penalty)])
+    if r.size:
+        out.update(
+            mean=float(np.mean(r)),
+            p5=float(np.percentile(r, 5)),
+            p25=float(np.percentile(r, 25)),
+            p50=float(np.percentile(r, 50)),
+            p75=float(np.percentile(r, 75)),
+            p95=float(np.percentile(r, 95)),
+        )
+    else:
+        out.update(mean=float("inf"), p5=0, p25=0, p50=0, p75=0, p95=float("inf"))
+    return out
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.2f},{derived}"

@@ -1,0 +1,55 @@
+"""Beyond-paper: PPoT expert routing vs top-k — max expert load and
+capacity-overflow fraction (DESIGN.md §3.2). The paper's Lemma 4 predicts
+two-choice routing flattens the load distribution (O(log log E) max load);
+here that means fewer dropped tokens at equal capacity factor."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.models import moe as MOE
+from repro.models.config import ModelConfig
+
+
+def run(T: int = 8192, E: int = 64, k: int = 6, seed: int = 0):
+    cfg = ModelConfig(
+        arch="bench", family="moe", n_layers=1, d_model=64, n_heads=1,
+        n_kv_heads=1, d_head=64, d_ff=0, vocab=16, n_experts=E, top_k=k,
+        moe_dff=64, capacity_factor=1.25,
+    )
+    key = jax.random.PRNGKey(seed)
+    # skewed gates (realistic: a few hot experts)
+    logits = jax.random.normal(key, (T, E)) * 1.5 + jnp.linspace(2, 0, E)[None, :]
+    gates = jax.nn.softmax(logits, axis=-1)
+
+    rows, derived = [], {}
+    for name, route in [
+        ("topk", lambda: MOE.topk_route(cfg, gates)),
+        ("ppot", lambda: MOE.ppot_route(cfg, gates, jax.random.fold_in(key, 1))),
+    ]:
+        t0 = time.time()
+        idx, w = jax.jit(lambda *_: route())()
+        jax.block_until_ready(idx)
+        wall = time.time() - t0
+        stats = MOE.expert_load_stats(cfg, gates, idx)
+        stats = {kk: float(v) for kk, v in stats.items()}
+        derived[name] = stats
+        rows.append(csv_row(
+            f"moe_balance_{name}", wall / T * 1e6,
+            f"max_load={stats['max_load']:.0f};overflow={stats['overflow_frac']:.4f};"
+            f"capacity={stats['capacity']:.0f}"))
+    ok = derived["ppot"]["overflow_frac"] < derived["topk"]["overflow_frac"]
+    red = (derived["topk"]["max_load"] - derived["ppot"]["max_load"]) / max(
+        derived["topk"]["max_load"], 1)
+    rows.append(csv_row("moe_balance_claim_ppot_flattens", 0.0,
+                        f"ok={ok};max_load_reduction={red:.2%}"))
+    return rows, derived
+
+
+if __name__ == "__main__":
+    for r in run()[0]:
+        print(r)

@@ -1,0 +1,93 @@
+"""Benchmark harness — one entry per paper table/figure + framework perf.
+Prints ``name,us_per_call,derived`` CSV (plus a roofline summary block).
+
+  PYTHONPATH=src python -m benchmarks.run            # everything (~15 min)
+  PYTHONPATH=src python -m benchmarks.run --quick    # reduced rounds (~4 min)
+  PYTHONPATH=src python -m benchmarks.run --only fig8,fig13
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (
+    fig8_response_time,
+    fig9_tpch,
+    fig10_known_speeds,
+    fig11_volatile,
+    fig12_fake_jobs,
+    fig13_sq2_ll2,
+    moe_balance,
+    sched_throughput,
+    recovery_coupling,
+    straggler_bench,
+    theory_validation,
+    window_ablation,
+)
+
+SUITES = {
+    "fig8": lambda q: fig8_response_time.run(rounds=40_000 if q else 120_000),
+    "fig9": lambda q: fig9_tpch.run(rounds=40_000 if q else 100_000),
+    "fig10": lambda q: fig10_known_speeds.run(rounds=30_000 if q else 80_000),
+    "fig11": lambda q: fig11_volatile.run(rounds=30_000 if q else 90_000),
+    "fig12": lambda q: fig12_fake_jobs.run(rounds=30_000 if q else 90_000),
+    "fig13": lambda q: fig13_sq2_ll2.run(rounds=40_000 if q else 120_000),
+    "window": lambda q: window_ablation.run(rounds=30_000 if q else 90_000),
+    "recovery": lambda q: recovery_coupling.run(),
+    "theory": lambda q: theory_validation.run(),
+    "sched": lambda q: sched_throughput.run(),
+    "moe": lambda q: moe_balance.run(),
+    "straggler": lambda q: straggler_bench.run(),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None, help="comma-separated suite names")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args()
+
+    names = args.only.split(",") if args.only else list(SUITES)
+    print("name,us_per_call,derived")
+    failures = []
+    for name in names:
+        t0 = time.time()
+        try:
+            rows, _ = SUITES[name](args.quick)
+            for r in rows:
+                print(r, flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            print(f"{name}_ERROR,0.0,{type(e).__name__}")
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+    if not args.skip_roofline:
+        try:
+            from benchmarks.roofline import build_table
+
+            rows = build_table()
+            ok = [r for r in rows if r.get("status") == "ok"]
+            fits = sum(r["fits_16g"] for r in ok)
+            by_dom = {}
+            for r in ok:
+                by_dom[r["dominant"]] = by_dom.get(r["dominant"], 0) + 1
+            dom_s = str(by_dom).replace(",", ";")
+            print(f"roofline_cells,0.0,ok={len(ok)};fits_16g={fits};"
+                  f"dominant={dom_s}")
+            for r in ok:
+                print(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']},0.0,"
+                      f"dom={r['dominant']};frac={r['roofline_frac']:.3f};"
+                      f"tc={r['t_compute_s']:.2e};tm={r['t_memory_s']:.2e};"
+                      f"tl={r['t_collective_s']:.2e}")
+        except FileNotFoundError:
+            print("roofline,0.0,missing_dryrun_artifacts(run repro.launch.dryrun)")
+
+    if failures:
+        print(f"# FAILURES: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Pytest path setup ONLY — no jax/device configuration here (smoke tests
+must see the real single device; the 512-device override lives exclusively
+in repro/launch/dryrun.py)."""
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.abspath(__file__))
+for p in (ROOT, os.path.join(ROOT, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)

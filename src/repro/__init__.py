@@ -1,0 +1,2 @@
+"""repro — Rosella (self-driving distributed scheduler) as a multi-pod JAX
+training/serving framework. See README.md / DESIGN.md."""

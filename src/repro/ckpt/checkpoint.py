@@ -1,0 +1,120 @@
+"""Checkpoint save/restore with elastic resharding — the fault-tolerance
+substrate (DESIGN.md §5).
+
+Format: one ``step_<N>/`` directory per checkpoint containing
+  * ``arrays.npz``    — flat {path: ndarray} of every leaf (gathered)
+  * ``manifest.json`` — step, pytree structure token, dtypes/shapes, wall
+                        metadata (config hash) for integrity checks
+
+Restore is *mesh-agnostic*: arrays are loaded host-side and ``device_put``
+against the CURRENT mesh's NamedShardings — restoring a 256-chip checkpoint
+onto a 512-chip (or 8-chip test) mesh just works (elastic rescale). Atomic
+rename + ``latest`` pointer give crash consistency; ``keep`` bounds disk.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path
+        )
+        out[key] = leaf
+    return out
+
+
+def save(ckpt_dir: str, step: int, state, *, keep: int = 3, extra: dict | None = None):
+    """Gather + write ``state`` (any pytree of arrays) atomically."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten_with_paths(state)
+    arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
+    try:
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        manifest = {
+            "step": step,
+            "keys": sorted(arrays.keys()),
+            "shapes": {k: list(v.shape) for k, v in arrays.items()},
+            "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+            "extra": extra or {},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        final = os.path.join(ckpt_dir, f"step_{step:08d}")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    with open(os.path.join(ckpt_dir, "latest"), "w") as f:
+        f.write(f"step_{step:08d}")
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    ptr = os.path.join(ckpt_dir, "latest")
+    if not os.path.exists(ptr):
+        return None
+    with open(ptr) as f:
+        name = f.read().strip()
+    if not os.path.exists(os.path.join(ckpt_dir, name, "arrays.npz")):
+        return None
+    return int(name.split("_")[1])
+
+
+def restore(ckpt_dir: str, template, *, step: int | None = None, shardings=None):
+    """Load into the structure of ``template``. ``shardings``: matching
+    pytree of NamedSharding (or None → host arrays). Elastic: the target
+    mesh may differ from the one that saved the checkpoint."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(d, "arrays.npz"))
+
+    flat_tpl = jax.tree_util.tree_flatten_with_path(template)
+    paths, treedef = flat_tpl[0], flat_tpl[1]
+    shard_flat = (
+        jax.tree.flatten(shardings, is_leaf=lambda x: x is None or hasattr(x, "spec"))[0]
+        if shardings is not None
+        else [None] * len(paths)
+    )
+    leaves = []
+    for (path, tpl_leaf), shard in zip(paths, shard_flat):
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path
+        )
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(tpl_leaf.shape):
+            raise ValueError(
+                f"{key}: checkpoint shape {arr.shape} != template {tpl_leaf.shape}"
+            )
+        arr = arr.astype(tpl_leaf.dtype)
+        leaves.append(jax.device_put(arr, shard) if shard is not None else arr)
+    return jax.tree.unflatten(treedef, leaves), manifest

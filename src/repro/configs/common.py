@@ -1,0 +1,129 @@
+"""Shared shape/spec machinery for the assigned architecture × shape grid.
+
+Four LM shapes (assigned):
+  train_4k     seq 4096,   global_batch 256  → train_step
+  prefill_32k  seq 32768,  global_batch 32   → prefill (inference)
+  decode_32k   seq 32768,  global_batch 128  → serve_step (1 token, KV cache)
+  long_500k    seq 524288, global_batch 1    → serve_step; SSM/hybrid only
+                                               (full-attention archs skip —
+                                               DESIGN.md §4)
+
+``input_specs(cfg, shape)`` returns jax.ShapeDtypeStruct stand-ins for every
+model input — weak-type-correct, shardable, zero allocation — consumed by
+``launch/dryrun.py`` via .lower().
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    step: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+# families with an O(L²) full-attention path → long_500k is skipped
+FULL_ATTENTION_FAMILIES = ("dense", "moe", "vlm", "encdec")
+
+
+def shape_applicable(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    if shape == "long_500k" and cfg.family in FULL_ATTENTION_FAMILIES:
+        return False, "skipped(full-attention O(L^2))"
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> dict:
+    """ShapeDtypeStruct stand-ins for one (arch × shape) cell."""
+    ss = SHAPES[shape]
+    B, S = ss.global_batch, ss.seq_len
+    i32, f32 = jnp.int32, jnp.float32
+    act = jnp.dtype(cfg.dtype)
+
+    if ss.step == "train":
+        specs = {
+            "tokens": _sds((B, S), i32),
+            "labels": _sds((B, S), i32),
+            "mask": _sds((B, S), f32),
+        }
+        if cfg.family == "vlm":
+            specs["patch_embeds"] = _sds((B, cfg.n_patches, cfg.d_model), act)
+        if cfg.family == "encdec":
+            specs["frame_embeds"] = _sds((B, cfg.enc_len, cfg.d_model), act)
+        return specs
+
+    if ss.step == "prefill":
+        specs = {"tokens": _sds((B, S), i32)}
+        if cfg.family == "vlm":
+            specs["patch_embeds"] = _sds((B, cfg.n_patches, cfg.d_model), act)
+        if cfg.family == "encdec":
+            specs["frame_embeds"] = _sds((B, cfg.enc_len, cfg.d_model), act)
+        return specs
+
+    # decode: one new token against a seq_len-deep cache
+    specs = {"tokens": _sds((B, 1), i32), "pos": _sds((), i32)}
+    if cfg.family == "encdec":
+        specs["enc_out"] = _sds((B, cfg.enc_len, cfg.d_model), act)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, shape: str) -> dict | None:
+    """ShapeDtypeStructs for the decode cache (KV / SSM state)."""
+    ss = SHAPES[shape]
+    if ss.step != "decode":
+        return None
+    from repro.models import api
+
+    cache = jax.eval_shape(lambda: api.init_cache(cfg, ss.global_batch, ss.seq_len))
+    return cache
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Smoke-test config: same family/wiring, tiny dims, CPU-friendly."""
+    small = dict(
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads else 2,
+        d_head=16,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab=256,
+        dtype="float32",
+        param_dtype="float32",
+        remat="none",
+        attn_chunk=64,
+        loss_chunk=32,
+        scan_layers=True,
+    )
+    if cfg.family == "moe":
+        small.update(n_experts=4, top_k=2, moe_dff=64,
+                     n_shared=min(cfg.n_shared, 1),
+                     first_k_dense=min(cfg.first_k_dense, 1), d_ff=128)
+    if cfg.family in ("ssm", "hybrid"):
+        small.update(ssm_state=16, ssm_headdim=16, ssm_chunk=32)
+    if cfg.family == "hybrid":
+        small.update(attn_window=32)
+    if cfg.family == "encdec":
+        small.update(n_enc_layers=2, enc_len=32)
+    if cfg.family == "vlm":
+        small.update(n_patches=8)
+    small.update(overrides)
+    return dataclasses.replace(cfg, **small)

@@ -1,0 +1,23 @@
+"""Rosella core: the paper's contribution as composable JAX modules.
+
+- policies   — uniform / PoT / PSS / PPoT-SQ(2) / PPoT-LL(2) / Sparrow /
+               bandit / Halo scheduling policies (§2.1, §3.1, §6)
+- estimator  — arrival-rate estimator (§3.3)
+- learner    — performance learner: LEARNER-DISPATCHER/-AGGREGATE (§3.2)
+- scheduler  — the deployable Rosella runtime (Fig. 1) incl. multi-scheduler
+               μ̂ synchronization (§5)
+- simulator  — the paper's discrete-time coupled chain (§4) as lax.scan
+- metrics    — trace → response times / queue histograms / learning curves
+- theory     — §4 closed forms (Lemma 4 tail, O(log log n) bound, R2/R3)
+"""
+from repro.core import estimator, learner, metrics, policies, scheduler, simulator, theory
+
+__all__ = [
+    "estimator",
+    "learner",
+    "metrics",
+    "policies",
+    "scheduler",
+    "simulator",
+    "theory",
+]

@@ -1,0 +1,79 @@
+"""Arrival estimator (paper §3.3).
+
+Estimates λ from the mean inter-arrival time of the last ``S`` jobs. ``S``
+is the paper's hyper-parameter: large S → accurate but slow to react; small
+S → noisy but fast. We keep the exact sliding-window estimator (ring buffer
+of the last S arrival timestamps) plus an EMA variant used by the serving
+router where a fixed-size buffer per scheduler shard is wasteful.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.struct import pytree_dataclass
+
+
+@pytree_dataclass
+class ArrivalEstimatorState:
+    times: jax.Array  # f32[S] ring of arrival timestamps
+    idx: jax.Array  # i32 next write slot
+    count: jax.Array  # i32 total arrivals seen
+    lam_hat: jax.Array  # f32 current estimate
+
+
+def init_arrival_estimator(window: int, lam_init: float = 0.0) -> ArrivalEstimatorState:
+    return ArrivalEstimatorState(
+        times=jnp.zeros((window,), jnp.float32),
+        idx=jnp.int32(0),
+        count=jnp.int32(0),
+        lam_hat=jnp.float32(lam_init),
+    )
+
+
+def observe_arrival(state: ArrivalEstimatorState, now: jax.Array) -> ArrivalEstimatorState:
+    """Record one arrival at time ``now`` and refresh λ̂.
+
+    λ̂ = (k − 1) / (t_newest − t_oldest) over the last k = min(count, S)
+    arrivals, i.e. 1 / mean-inter-arrival — paper §3.3.
+    """
+    S = state.times.shape[0]
+    times = state.times.at[state.idx].set(now)
+    idx = (state.idx + 1) % S
+    count = state.count + 1
+
+    k = jnp.minimum(count, S)
+    # Oldest retained arrival sits at slot ``idx`` once the ring wrapped,
+    # else at slot 0.
+    oldest = jnp.where(count >= S, times[idx % S], times[0])
+    span = now - oldest
+    lam = jnp.where((k >= 2) & (span > 0), (k - 1).astype(jnp.float32) / span, state.lam_hat)
+    return ArrivalEstimatorState(times=times, idx=idx, count=count, lam_hat=lam)
+
+
+@pytree_dataclass
+class EmaArrivalState:
+    """EMA variant: inter-arrival EMA with decay 1/S (serving router)."""
+
+    last_time: jax.Array  # f32
+    mean_gap: jax.Array  # f32 EMA of inter-arrival time
+    count: jax.Array  # i32
+
+
+def init_ema_arrival() -> EmaArrivalState:
+    return EmaArrivalState(
+        last_time=jnp.float32(0.0), mean_gap=jnp.float32(0.0), count=jnp.int32(0)
+    )
+
+
+def observe_arrival_ema(state: EmaArrivalState, now: jax.Array, window: int) -> EmaArrivalState:
+    gap = now - state.last_time
+    beta = 1.0 / float(window)
+    mean_gap = jnp.where(
+        state.count == 0, gap, (1.0 - beta) * state.mean_gap + beta * gap
+    )
+    return EmaArrivalState(last_time=now, mean_gap=mean_gap, count=state.count + 1)
+
+
+def lam_hat_ema(state: EmaArrivalState) -> jax.Array:
+    return jnp.where(state.mean_gap > 0, 1.0 / jnp.clip(state.mean_gap, 1e-9), 0.0)

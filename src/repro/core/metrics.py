@@ -1,0 +1,135 @@
+"""Numpy post-processing of simulator traces → paper metrics.
+
+The simulator emits a flat event trace (one row per chain jump). Here we
+reconstruct per-job response times (time from job arrival until its LAST
+task completes — paper §6.1), queue-length histograms, estimate-error
+trajectories, and percentile summaries used by the figure benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import simulator as sim
+
+
+@dataclasses.dataclass
+class TraceMetrics:
+    response_times: np.ndarray  # f64[num_completed_jobs]
+    arrival_times: np.ndarray  # f64[num_jobs]
+    censored: int  # jobs whose tasks didn't all finish in-sim
+    num_jobs: int
+    max_queue: np.ndarray  # i64[T] running max queue length (if traced)
+    mean_queue: np.ndarray  # f64[T]
+    final_q: np.ndarray
+    mu_hat_trace: np.ndarray | None  # f32[T, n] (if traced)
+    times: np.ndarray  # f64[T] event times
+    lam_hat: np.ndarray  # f32[T]
+
+
+def analyze(trace, n: int, warmup_frac: float = 0.0) -> TraceMetrics:
+    code = np.asarray(trace["code"])
+    worker = np.asarray(trace["worker"])
+    now = np.asarray(trace["now"], dtype=np.float64)
+    T = code.shape[0]
+
+    # --- per-worker real-completion timestamps, in order -------------------
+    comp_times: list[np.ndarray] = []
+    for w in range(n):
+        mask = (code == sim.EV_REAL_DONE) & (worker == w)
+        comp_times.append(now[mask])
+
+    # --- job response times -------------------------------------------------
+    arr_mask = code == sim.EV_ARRIVAL
+    arr_rows = np.nonzero(arr_mask)[0]
+    t_arr = now[arr_rows]
+    tw = np.asarray(trace["task_workers"])[arr_rows]  # [J, mt]
+    tg = np.asarray(trace["task_targets"])[arr_rows]  # [J, mt]
+
+    responses, censored = [], 0
+    t_warm = warmup_frac * now[-1]
+    kept_arrivals = []
+    for ji in range(arr_rows.shape[0]):
+        if t_arr[ji] < t_warm:
+            continue
+        kept_arrivals.append(t_arr[ji])
+        done, tmax = True, t_arr[ji]
+        for k in range(tw.shape[1]):
+            w, tgt = int(tw[ji, k]), int(tg[ji, k])
+            if w < 0:
+                continue
+            ct = comp_times[w]
+            if tgt - 1 < ct.shape[0]:
+                tmax = max(tmax, float(ct[tgt - 1]))
+            else:
+                done = False
+                break
+        if done:
+            responses.append(tmax - t_arr[ji])
+        else:
+            censored += 1
+
+    q = np.asarray(trace["q_real"])
+    if q.size:
+        max_queue = q.max(axis=1)
+        mean_queue = q.mean(axis=1)
+        final_q = q[-1]
+    else:
+        max_queue = np.zeros((T,), np.int64)
+        mean_queue = np.zeros((T,))
+        final_q = np.zeros((n,), np.int64)
+
+    mu_hat = np.asarray(trace["mu_hat"]) if np.asarray(trace["mu_hat"]).size else None
+
+    return TraceMetrics(
+        response_times=np.asarray(responses, dtype=np.float64),
+        arrival_times=np.asarray(kept_arrivals, dtype=np.float64),
+        censored=censored,
+        num_jobs=len(kept_arrivals),
+        max_queue=max_queue,
+        mean_queue=mean_queue,
+        final_q=final_q,
+        mu_hat_trace=mu_hat,
+        times=now,
+        lam_hat=np.asarray(trace["lam_hat"]),
+    )
+
+
+def percentiles(x: np.ndarray, ps=(5, 25, 50, 75, 95)) -> dict[int, float]:
+    if x.size == 0:
+        return {p: float("nan") for p in ps}
+    return {p: float(np.percentile(x, p)) for p in ps}
+
+
+def queue_length_histogram(trace, worker: int, warmup_frac: float = 0.5):
+    """Time-weighted histogram of one worker's queue length (Fig. 13)."""
+    q = np.asarray(trace["q_real"])[:, worker]
+    now = np.asarray(trace["now"], dtype=np.float64)
+    t0 = warmup_frac * now[-1]
+    keep = now >= t0
+    qk, tk = q[keep], now[keep]
+    if qk.size < 2:
+        return np.zeros(1)
+    dt = np.diff(tk, append=tk[-1])
+    hist = np.zeros(int(qk.max()) + 1)
+    np.add.at(hist, qk, dt)
+    return hist / hist.sum()
+
+
+def estimate_error(trace, mu_true: np.ndarray) -> np.ndarray:
+    """Mean relative |μ̂ − μ|/μ over time (learning-curve metric, R2)."""
+    mu_hat = np.asarray(trace["mu_hat"], dtype=np.float64)
+    mu = np.asarray(mu_true, dtype=np.float64)[None, :]
+    return np.abs(mu_hat - mu).sum(axis=1) / mu.sum()
+
+
+def stationary_tail(trace, warmup_frac: float = 0.5) -> np.ndarray:
+    """P[queue ≥ k] pooled over workers & (post-warmup) time — Lemma 4."""
+    q = np.asarray(trace["q_real"])
+    now = np.asarray(trace["now"], dtype=np.float64)
+    keep = now >= warmup_frac * now[-1]
+    qk = q[keep].ravel()
+    kmax = int(qk.max()) + 1
+    tail = np.array([(qk >= k).mean() for k in range(kmax + 1)])
+    return tail

@@ -1,0 +1,209 @@
+"""Scheduling policies (paper §2.1, §3.1, §6 baselines).
+
+Every policy is a pure function
+
+    policy(key, q_real, mu_hat, mu_true, cfg) -> worker index (int32)
+
+operating on device arrays so it can run inside ``lax.scan`` (simulator),
+inside the serving router's jitted dispatch step, or vmapped over a batch of
+jobs. ``q_real`` is the per-worker queue length the scheduler observes via
+probing, ``mu_hat`` the learner's current estimates, ``mu_true`` ground truth
+(only Halo may read it — paper §6: Halo "assumes the knowledge of worker
+speeds").
+
+Policies (paper names):
+  uniform      — uniform random worker                        (§2.1.1)
+  pot          — classical power-of-two-choices, SQ(2)        (§2.1.1)
+  pss          — proportional sampling schedule               (§3.1.1)
+  ppot_sq2     — Rosella: proportional sampling + PoT, SQ(2)  (§3.1.2, Fig. 5)
+  ppot_ll2     — same probes, join-least-loaded LL(2)         (§3.1, Fig. 4)
+  bandit       — η-uniform explore else PPoT                  (§6 baseline v)
+  halo         — single proportional probe on TRUE speeds     (§6 baseline vi)
+  sparrow      — batch sampling d·m probes + late binding     (§6 baseline iii)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.struct import pytree_dataclass
+
+# Policy ids (static trace-time selectors).
+UNIFORM = "uniform"
+POT = "pot"
+PSS = "pss"
+PPOT_SQ2 = "ppot_sq2"
+PPOT_LL2 = "ppot_ll2"
+BANDIT = "bandit"
+HALO = "halo"
+SPARROW = "sparrow"
+
+ALL_POLICIES = (UNIFORM, POT, PSS, PPOT_SQ2, PPOT_LL2, BANDIT, HALO, SPARROW)
+
+
+@pytree_dataclass(static_fields=("sparrow_d",))
+class PolicyConfig:
+    """Hyper-parameters shared by the policies."""
+
+    bandit_eta: jax.Array  # η for the multi-armed-bandit baseline
+    sparrow_d: int  # probe ratio d (d·m probes for m tasks) — static
+
+
+def default_policy_config(bandit_eta: float = 0.2, sparrow_d: int = 2) -> PolicyConfig:
+    return PolicyConfig(bandit_eta=jnp.float32(bandit_eta), sparrow_d=sparrow_d)
+
+
+def _safe_logits(weights: jax.Array) -> jax.Array:
+    """log-weights for categorical sampling; all-zero weights → uniform.
+
+    Lemma 5 can set every μ̂ to 0 right after a shock; the scheduler must
+    still make progress, so we fall back to uniform sampling then.
+    """
+    total = jnp.sum(weights)
+    w = jnp.where(total > 0, weights, jnp.ones_like(weights))
+    return jnp.log(jnp.clip(w, min=1e-30))
+
+
+def proportional_sample(key: jax.Array, mu_hat: jax.Array) -> jax.Array:
+    """One draw from the multinomial (p_i = μ̂_i / Σ μ̂) — paper Fig. 5 l.2-4."""
+    return jax.random.categorical(key, _safe_logits(mu_hat)).astype(jnp.int32)
+
+
+def uniform_policy(key, q_real, mu_hat, mu_true, cfg: PolicyConfig):
+    del q_real, mu_hat, cfg
+    n = mu_true.shape[0]
+    return jax.random.randint(key, (), 0, n, dtype=jnp.int32)
+
+
+def pot_policy(key, q_real, mu_hat, mu_true, cfg: PolicyConfig):
+    """Classical PoT: two *uniform* probes, join the shorter queue."""
+    del mu_hat, cfg
+    n = mu_true.shape[0]
+    j = jax.random.randint(key, (2,), 0, n, dtype=jnp.int32)
+    shorter = q_real[j[0]] <= q_real[j[1]]
+    return jnp.where(shorter, j[0], j[1])
+
+
+def pss_policy(key, q_real, mu_hat, mu_true, cfg: PolicyConfig):
+    del q_real, mu_true, cfg
+    return proportional_sample(key, mu_hat)
+
+
+def _two_proportional(key, mu_hat):
+    k1, k2 = jax.random.split(key)
+    # Independent draws WITH replacement — Fig. 5 line 4. A doubly-drawn
+    # worker competes with itself (degenerates to PSS for that job).
+    return proportional_sample(k1, mu_hat), proportional_sample(k2, mu_hat)
+
+
+def ppot_sq2_policy(key, q_real, mu_hat, mu_true, cfg: PolicyConfig):
+    """Rosella's policy: PSS twice, join the SHORTER QUEUE (Fig. 5)."""
+    del mu_true, cfg
+    j1, j2 = _two_proportional(key, mu_hat)
+    shorter = q_real[j1] <= q_real[j2]
+    return jnp.where(shorter, j1, j2)
+
+
+def ppot_ll2_policy(key, q_real, mu_hat, mu_true, cfg: PolicyConfig):
+    """LL(2): PSS twice, join the LEAST-LOADED queue (shorter expected wait).
+
+    Expected wait at j = (q_j + 1) / μ̂_j; dead workers (μ̂=0) are infinitely
+    slow. Paper §3.1 Example 3 / Fig. 13 shows this congests fast workers.
+    """
+    del mu_true, cfg
+    j1, j2 = _two_proportional(key, mu_hat)
+    mu = jnp.clip(mu_hat, min=1e-9)
+    w1 = (q_real[j1] + 1.0) / mu[j1]
+    w2 = (q_real[j2] + 1.0) / mu[j2]
+    return jnp.where(w1 <= w2, j1, j2)
+
+
+def bandit_policy(key, q_real, mu_hat, mu_true, cfg: PolicyConfig):
+    """η-greedy multi-armed bandit: uniform explore w.p. η else PPoT."""
+    ke, ku, kp = jax.random.split(key, 3)
+    explore = jax.random.uniform(ke) < cfg.bandit_eta
+    n = mu_true.shape[0]
+    j_uni = jax.random.randint(ku, (), 0, n, dtype=jnp.int32)
+    j_ppot = ppot_sq2_policy(kp, q_real, mu_hat, mu_true, cfg)
+    return jnp.where(explore, j_uni, j_ppot)
+
+
+def halo_policy(key, q_real, mu_hat, mu_true, cfg: PolicyConfig):
+    """Halo [10]: proportional sampling with KNOWN true speeds, one probe."""
+    del q_real, mu_hat, cfg
+    return proportional_sample(key, mu_true)
+
+
+def sparrow_policy(key, q_real, mu_hat, mu_true, cfg: PolicyConfig):
+    """Sparrow for a single task: batch sampling degenerates to PoT probes
+    (d uniform probes, take least-loaded). Multi-task jobs use
+    ``sparrow_batch`` below, which implements d·m probes → m placements
+    (batch sampling + late binding at placement granularity)."""
+    return pot_policy(key, q_real, mu_hat, mu_true, cfg)
+
+
+POLICY_FNS = {
+    UNIFORM: uniform_policy,
+    POT: pot_policy,
+    PSS: pss_policy,
+    PPOT_SQ2: ppot_sq2_policy,
+    PPOT_LL2: ppot_ll2_policy,
+    BANDIT: bandit_policy,
+    HALO: halo_policy,
+    SPARROW: sparrow_policy,
+}
+
+
+def get_policy(name: str):
+    if name not in POLICY_FNS:
+        raise ValueError(f"unknown policy {name!r}; choose from {ALL_POLICIES}")
+    return POLICY_FNS[name]
+
+
+# ---------------------------------------------------------------------------
+# Batched variants
+# ---------------------------------------------------------------------------
+
+
+def schedule_batch(policy_name: str, key, q_real, mu_hat, mu_true, cfg, m: int):
+    """Schedule ``m`` tasks sequentially, updating the observed queue after
+    each placement (the scheduler sees its own in-flight assignments —
+    matches a frontend placing a job's tasks back-to-back).
+
+    Returns (workers[m] int32, q_after).
+    """
+    if policy_name == SPARROW:
+        return sparrow_batch(key, q_real, mu_true, cfg, m)
+    policy = get_policy(policy_name)
+
+    def body(carry, k):
+        q = carry
+        j = policy(k, q, mu_hat, mu_true, cfg)
+        return q.at[j].add(1), j
+
+    keys = jax.random.split(key, m)
+    q_after, workers = jax.lax.scan(body, q_real, keys)
+    return workers, q_after
+
+
+def sparrow_batch(key, q_real, mu_true, cfg, m: int):
+    """Sparrow batch sampling (+late binding): probe d·m uniform workers,
+    place the m tasks on the least-loaded probed workers. Late binding means
+    a task commits to whichever probed worker frees up first; at placement
+    granularity this is equivalent to choosing the m least-loaded probes and
+    charging each placement to the queue. (§6 baseline iii; DESIGN.md §8.5.)
+    """
+    n = q_real.shape[0]
+    n_probe = max(int(cfg.sparrow_d) * m, m)
+    probes = jax.random.randint(key, (n_probe,), 0, n, dtype=jnp.int32)
+
+    def body(carry, _):
+        q = carry
+        loads = q[probes]
+        pick = jnp.argmin(loads)
+        j = probes[pick]
+        return q.at[j].add(1), j
+
+    q_after, workers = jax.lax.scan(body, q_real, None, length=m)
+    del mu_true
+    return workers, q_after

@@ -1,0 +1,178 @@
+"""Rosella runtime scheduler — the deployable composition of the three
+components (arrival estimator + scheduling policy + performance learner),
+paper Fig. 1, as a jittable state machine.
+
+Unlike ``simulator.py`` (which owns the event clock for reproducing the
+paper's experiments), the runtime is *driven by the caller*: the serving
+router / training straggler-mitigator feed it arrivals and completion
+telemetry and ask it to place batches of jobs. All methods are pure
+``state → state`` functions so they compose with jit/shard_map; the
+``RosellaScheduler`` class is a thin convenience wrapper.
+
+Distributed mode (paper §5): each scheduler shard keeps its own state;
+``sync_shard_estimates`` is called inside ``shard_map`` and ``pmean``s μ̂
+over the scheduler axis — "they need only synchronize the estimates of
+worker speeds regularly".
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import estimator as est
+from repro.core import learner as lrn
+from repro.core import policies as pol
+from repro.utils.struct import pytree_dataclass
+
+
+@pytree_dataclass
+class RosellaState:
+    q_view: jax.Array  # i32[n] scheduler's view of outstanding work
+    arr: est.EmaArrivalState
+    learner: lrn.LearnerState
+    last_fake_time: jax.Array  # f32 — fake-job Poisson bookkeeping
+
+
+def init_rosella(
+    n: int, lcfg: lrn.LearnerConfig, mu_init: float | jax.Array = 1.0
+) -> RosellaState:
+    return RosellaState(
+        q_view=jnp.zeros((n,), jnp.int32),
+        arr=est.init_ema_arrival(),
+        learner=lrn.init_learner(n, lcfg, mu_init),
+        last_fake_time=jnp.float32(0.0),
+    )
+
+
+@functools.partial(jax.jit, static_argnums=(3, 4))
+def schedule(
+    state: RosellaState,
+    key: jax.Array,
+    now: jax.Array,
+    m: int,
+    policy: str = pol.PPOT_SQ2,
+) -> tuple[jax.Array, RosellaState]:
+    """Place ``m`` jobs arriving at ``now``; returns (workers[m], state').
+
+    The scheduler's queue view is incremented optimistically per placement
+    (the paper's probe sees the queue including in-flight assignments from
+    this frontend)."""
+    arr = est.observe_arrival_ema(state.arr, now, window=64)
+    mu_true = state.learner.mu_hat  # runtime has no oracle speeds
+    workers, q_after = pol.schedule_batch(
+        policy, key, state.q_view, state.learner.mu_hat, mu_true,
+        pol.default_policy_config(), m,
+    )
+    return workers, state.replace(q_view=q_after, arr=arr)
+
+
+@jax.jit
+def report_completions(
+    state: RosellaState,
+    workers: jax.Array,  # i32[B] worker ids (pad with -1)
+    service_times: jax.Array,  # f32[B]
+    now: jax.Array,
+) -> RosellaState:
+    """Feed completion telemetry (LEARNER-AGGREGATE input) for a batch."""
+
+    def body(s, wt):
+        w, t = wt
+        valid = w >= 0
+        wc = jnp.maximum(w, 0)
+
+        def upd(s):
+            learner = lrn.record_completion(s.learner, wc, t, now)
+            return s.replace(
+                learner=learner,
+                q_view=s.q_view.at[wc].add(-1),
+            )
+
+        return jax.lax.cond(valid, upd, lambda s: s, s), None
+
+    state, _ = jax.lax.scan(body, state, (workers, service_times))
+    return state.replace(q_view=jnp.maximum(state.q_view, 0))
+
+
+@jax.jit
+def refresh(state: RosellaState, lcfg: lrn.LearnerConfig, now: jax.Array) -> RosellaState:
+    lam_hat = est.lam_hat_ema(state.arr)
+    return state.replace(
+        learner=lrn.refresh_estimates(state.learner, lcfg, lam_hat, now)
+    )
+
+
+@functools.partial(jax.jit, static_argnums=(4,))
+def fake_jobs_due(
+    state: RosellaState,
+    lcfg: lrn.LearnerConfig,
+    key: jax.Array,
+    now: jax.Array,
+    max_fake: int = 8,
+) -> tuple[jax.Array, RosellaState]:
+    """LEARNER-DISPATCHER tick: Poisson(ν·Δt) benchmark jobs since the last
+    tick, each aimed at a uniform worker. Returns (workers[max_fake] padded
+    with -1, state')."""
+    lam_hat = est.lam_hat_ema(state.arr)
+    nu = lrn.fake_job_rate(lcfg, lam_hat)
+    dt = jnp.maximum(now - state.last_fake_time, 0.0)
+    kn, kj = jax.random.split(key)
+    k = jnp.minimum(jax.random.poisson(kn, nu * dt), max_fake).astype(jnp.int32)
+    n = state.q_view.shape[0]
+    js = jax.random.randint(kj, (max_fake,), 0, n, dtype=jnp.int32)
+    js = jnp.where(jnp.arange(max_fake) < k, js, -1)
+    return js, state.replace(last_fake_time=now)
+
+
+def sync_shard_estimates(state: RosellaState, axis_name: str) -> RosellaState:
+    """Inside shard_map: average μ̂ across scheduler shards (paper §5)."""
+    mu = jax.lax.pmean(state.learner.mu_hat, axis_name)
+    q = jax.lax.pmean(state.q_view.astype(jnp.float32), axis_name)
+    return state.replace(
+        learner=state.learner.replace(mu_hat=mu),
+        q_view=jnp.round(q).astype(jnp.int32),
+    )
+
+
+class RosellaScheduler:
+    """Convenience OO wrapper holding (state, config) for host-side drivers."""
+
+    def __init__(self, n: int, mu_bar: float, *, c0: float = 0.1,
+                 c_window: float = 10.0, window_mode: str = "practical",
+                 mu_init: float = 1.0, seed: int = 0):
+        self.n = n
+        self.lcfg = lrn.default_learner_config(
+            mu_bar, c0=c0, c_window=c_window, window_mode=window_mode
+        )
+        self.state = init_rosella(n, self.lcfg, mu_init)
+        self.key = jax.random.PRNGKey(seed)
+
+    def _next_key(self):
+        self.key, k = jax.random.split(self.key)
+        return k
+
+    def schedule(self, now: float, m: int, policy: str = pol.PPOT_SQ2):
+        workers, self.state = schedule(
+            self.state, self._next_key(), jnp.float32(now), m, policy
+        )
+        return workers
+
+    def report(self, workers, service_times, now: float):
+        self.state = report_completions(
+            self.state,
+            jnp.asarray(workers, jnp.int32),
+            jnp.asarray(service_times, jnp.float32),
+            jnp.float32(now),
+        )
+        self.state = refresh(self.state, self.lcfg, jnp.float32(now))
+
+    def fake_jobs(self, now: float, max_fake: int = 8):
+        js, self.state = fake_jobs_due(
+            self.state, self.lcfg, self._next_key(), jnp.float32(now), max_fake
+        )
+        return js
+
+    @property
+    def mu_hat(self):
+        return self.state.learner.mu_hat

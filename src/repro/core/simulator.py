@@ -1,0 +1,328 @@
+"""Discrete-event queueing simulator — the paper's coupled chain (§4).
+
+One ``lax.scan`` round = one jump of the uniformized continuous-time chain:
+
+  * with prob λ/R        → a job arrives (1..max_tasks tasks), the policy
+                            places each task, the arrival estimator updates;
+  * with prob μmax_i/R   → a potential service event at worker i, accepted
+                            with prob μ_i(t)/μmax_i (thinning handles
+                            time-varying speeds); real queue drains before
+                            the low-priority fake queue (paper §5);
+  * with prob νmax/R     → a potential benchmark-job dispatch, accepted with
+                            prob c0(μ̄−λ̂)/νmax (LEARNER-DISPATCHER), target
+                            worker uniform, throttled by ``fake_cap``;
+  * otherwise            → self-loop.
+
+R = λ + Σ_i μmax_i + νmax is constant, so ``dt ~ Exp(R)`` gives exact
+continuous timestamps (uniformization, paper's discrete-time counterpart
+[24]). Worker speeds follow a phase schedule ``mu_schedule[K, n]`` switching
+every ``phase_period`` time units — the paper's "randomly permute worker
+speeds every minute" volatility model (§6.1/§6.2).
+
+Service-time samples fed to LEARNER-AGGREGATE are exact: ``busy_start[i]``
+tracks when the head-of-queue job began service, so a completion at time t
+contributes the Exp(μ_i) variate ``t − busy_start[i]``.
+
+The scan emits a flat event trace; response-time percentiles, queue
+histograms and learning curves are computed in numpy (``core/metrics.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import estimator as est
+from repro.core import learner as lrn
+from repro.core import policies as pol
+from repro.utils.struct import pytree_dataclass
+
+# Event codes in the trace.
+EV_ARRIVAL = 0
+EV_REAL_DONE = 1
+EV_FAKE_DONE = 2
+EV_FAKE_DISPATCH = 3
+EV_SELF_LOOP = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    """Static simulation configuration (hashable → jit static arg)."""
+
+    n: int  # number of workers
+    policy: str  # one of policies.ALL_POLICIES
+    rounds: int  # scan length T
+    max_tasks: int = 1  # max tasks per job
+    use_learner: bool = True  # False → policy sees true μ(t) ("known speeds")
+    use_fake_jobs: bool = True
+    fake_cap: int = 4  # per-worker fake-queue throttle (paper §5)
+    arrival_window: int = 64  # S for the arrival estimator
+    window_mode: str = "practical"  # learner window mode
+    c_window: float = 10.0
+    c0: float = 0.1
+    learner_refresh: int = 8  # rounds between LEARNER-AGGREGATE refreshes
+    trace_queues: bool = True
+    trace_mu: bool = True
+    constrained_frac: float = 0.0  # fraction of tasks pinned to a random worker
+    ring_cap: int = lrn.RING_CAP
+
+
+@pytree_dataclass
+class SimParams:
+    """Dynamic inputs."""
+
+    lam: jax.Array  # f32 arrival rate
+    mu_schedule: jax.Array  # f32[K, n] per-phase worker speeds
+    phase_period: jax.Array  # f32 time between speed shuffles (inf → static)
+    mu_bar: jax.Array  # f32 guaranteed total throughput μ̄
+    mu_hat0: jax.Array  # f32[n] initial estimates
+    task_logits: jax.Array  # f32[max_tasks] P(job has k+1 tasks) ∝ softmax
+
+
+@pytree_dataclass
+class SimState:
+    now: jax.Array
+    q_real: jax.Array  # i32[n]
+    q_fake: jax.Array  # i32[n]
+    s_real: jax.Array  # i32[n] cumulative real completions
+    busy_start: jax.Array  # f32[n]
+    arr: est.ArrivalEstimatorState
+    learner: lrn.LearnerState
+
+
+def make_params(
+    lam: float,
+    mu: "list[float] | jnp.ndarray",
+    *,
+    mu_schedule=None,
+    phase_period: float = float("inf"),
+    mu_bar: float | None = None,
+    mu_hat0=None,
+    task_probs=None,
+    max_tasks: int = 1,
+) -> SimParams:
+    mu = jnp.asarray(mu, jnp.float32)
+    sched = (
+        jnp.asarray(mu_schedule, jnp.float32)
+        if mu_schedule is not None
+        else mu[None, :]
+    )
+    if mu_bar is None:
+        mu_bar = float(jnp.sum(sched[0]))
+    if mu_hat0 is None:
+        mu_hat0 = jnp.ones_like(mu)
+    if task_probs is None:
+        probs = jnp.zeros((max_tasks,), jnp.float32).at[0].set(1.0)
+    else:
+        probs = jnp.asarray(task_probs, jnp.float32)
+        probs = probs / jnp.sum(probs)
+    return SimParams(
+        lam=jnp.float32(lam),
+        mu_schedule=sched,
+        phase_period=jnp.float32(phase_period),
+        mu_bar=jnp.float32(mu_bar),
+        mu_hat0=jnp.asarray(mu_hat0, jnp.float32),
+        task_logits=jnp.log(jnp.clip(probs, 1e-30)),
+    )
+
+
+def _current_mu(params: SimParams, now: jax.Array) -> jax.Array:
+    K = params.mu_schedule.shape[0]
+    if K == 1:
+        return params.mu_schedule[0]
+    phase = jnp.where(
+        jnp.isfinite(params.phase_period),
+        (now / params.phase_period).astype(jnp.int32) % K,
+        0,
+    )
+    return params.mu_schedule[phase]
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def simulate(cfg: SimConfig, params: SimParams, key: jax.Array):
+    """Run the chain for ``cfg.rounds`` jumps. Returns (final_state, trace)."""
+    n, mt = cfg.n, cfg.max_tasks
+    pcfg = pol.default_policy_config()
+    lcfg = lrn.default_learner_config(
+        mu_bar=1.0, c0=cfg.c0, c_window=cfg.c_window,
+        window_mode=cfg.window_mode, ring_cap=cfg.ring_cap,
+    ).replace(mu_bar=params.mu_bar)
+
+    mu_max = jnp.max(params.mu_schedule, axis=0)  # f32[n]
+    nu_max = jnp.where(cfg.use_fake_jobs, cfg.c0 * params.mu_bar, 0.0)
+    rates = jnp.concatenate([params.lam[None], mu_max, nu_max[None]])
+    R = jnp.sum(rates)
+    logits = jnp.log(jnp.clip(rates, 1e-30))
+
+    state0 = SimState(
+        now=jnp.float32(0.0),
+        q_real=jnp.zeros((n,), jnp.int32),
+        q_fake=jnp.zeros((n,), jnp.int32),
+        s_real=jnp.zeros((n,), jnp.int32),
+        busy_start=jnp.zeros((n,), jnp.float32),
+        arr=est.init_arrival_estimator(cfg.arrival_window, lam_init=float("nan")),
+        learner=lrn.init_learner(n, lcfg, mu_init=1.0).replace(mu_hat=params.mu_hat0),
+    )
+    # NaN lam_hat init → fake rate clips to c0·μ̄ until first estimate.
+    state0 = state0.replace(arr=state0.arr.replace(lam_hat=jnp.float32(0.0)))
+
+    def scheduler_view_mu(state, mu_now):
+        if cfg.use_learner:
+            return state.learner.mu_hat
+        return mu_now  # "known speeds" mode (Fig. 10 / Fig. 13)
+
+    def arrival_branch(state: SimState, key):
+        k_tasks, k_sched = jax.random.split(key)
+        n_tasks = 1 + jax.random.categorical(k_tasks, params.task_logits).astype(jnp.int32)
+        arr2 = est.observe_arrival(state.arr, state.now)
+        mu_now = _current_mu(params, state.now)
+        mu_view = scheduler_view_mu(state, mu_now)
+
+        if cfg.policy == pol.SPARROW:
+            n_probe = int(pcfg.sparrow_d) * mt
+            probes = jax.random.randint(
+                jax.random.fold_in(k_sched, 1), (max(n_probe, 1),), 0, n, dtype=jnp.int32
+            )
+        else:
+            probes = jnp.zeros((1,), jnp.int32)
+
+        def place(carry, slot):
+            q_real, q_fake, busy, workers, targets = carry
+            kk = jax.random.fold_in(k_sched, slot)
+            active = slot < n_tasks
+            kc, ku, kp = jax.random.split(kk, 3)
+            constrained = jax.random.uniform(kc) < cfg.constrained_frac
+            j_uni = jax.random.randint(ku, (), 0, n, dtype=jnp.int32)
+            if cfg.policy == pol.SPARROW:
+                # batch sampling: among the d·m probes, current least-loaded.
+                j_pol = probes[jnp.argmin(q_real[probes])]
+            else:
+                j_pol = pol.get_policy(cfg.policy)(kp, q_real, mu_view, mu_now, pcfg)
+            j = jnp.where(constrained, j_uni, j_pol)
+
+            was_idle = (q_real[j] + q_fake[j]) == 0
+            busy = jnp.where(
+                active & was_idle, busy.at[j].set(state.now), busy
+            )
+            q_real = jnp.where(active, q_real.at[j].add(1), q_real)
+            target = state.s_real[j] + q_real[j]  # completion ordinal
+            workers = workers.at[slot].set(jnp.where(active, j, -1))
+            targets = targets.at[slot].set(jnp.where(active, target, -1))
+            return (q_real, q_fake, busy, workers, targets), None
+
+        init = (
+            state.q_real,
+            state.q_fake,
+            state.busy_start,
+            jnp.full((mt,), -1, jnp.int32),
+            jnp.full((mt,), -1, jnp.int32),
+        )
+        (q_real, q_fake, busy, workers, targets), _ = jax.lax.scan(
+            place, init, jnp.arange(mt)
+        )
+        new_state = state.replace(q_real=q_real, busy_start=busy, arr=arr2)
+        ev = dict(
+            code=jnp.int32(EV_ARRIVAL), worker=jnp.int32(-1),
+            n_tasks=n_tasks, task_workers=workers, task_targets=targets,
+        )
+        return new_state, ev
+
+    def service_branch(state: SimState, key, widx):
+        mu_now = _current_mu(params, state.now)
+        accept = jax.random.uniform(key) < (mu_now[widx] / jnp.clip(mu_max[widx], 1e-30))
+        busy = (state.q_real[widx] + state.q_fake[widx]) > 0
+        do_real = accept & (state.q_real[widx] > 0)
+        do_fake = accept & (~(state.q_real[widx] > 0)) & (state.q_fake[widx] > 0)
+        fired = do_real | do_fake
+
+        service_time = state.now - state.busy_start[widx]
+        learner = jax.lax.cond(
+            fired,
+            lambda l: lrn.record_completion(l, widx, service_time, state.now),
+            lambda l: l,
+            state.learner,
+        )
+        q_real = jnp.where(do_real, state.q_real.at[widx].add(-1), state.q_real)
+        q_fake = jnp.where(do_fake, state.q_fake.at[widx].add(-1), state.q_fake)
+        s_real = jnp.where(do_real, state.s_real.at[widx].add(1), state.s_real)
+        busy_start = jnp.where(
+            fired, state.busy_start.at[widx].set(state.now), state.busy_start
+        )
+        code = jnp.where(
+            do_real, EV_REAL_DONE, jnp.where(do_fake, EV_FAKE_DONE, EV_SELF_LOOP)
+        ).astype(jnp.int32)
+        new_state = state.replace(
+            q_real=q_real, q_fake=q_fake, s_real=s_real,
+            busy_start=busy_start, learner=learner,
+        )
+        del busy
+        ev = dict(
+            code=code, worker=widx, n_tasks=jnp.int32(0),
+            task_workers=jnp.full((mt,), -1, jnp.int32),
+            task_targets=jnp.full((mt,), -1, jnp.int32),
+        )
+        return new_state, ev
+
+    def fake_branch(state: SimState, key):
+        ka, kj = jax.random.split(key)
+        nu = lrn.fake_job_rate(lcfg, state.arr.lam_hat)
+        accept = jax.random.uniform(ka) < (nu / jnp.clip(nu_max, 1e-30))
+        j = jax.random.randint(kj, (), 0, n, dtype=jnp.int32)
+        room = state.q_fake[j] < cfg.fake_cap
+        fire = accept & room & jnp.bool_(cfg.use_fake_jobs)
+        was_idle = (state.q_real[j] + state.q_fake[j]) == 0
+        busy_start = jnp.where(
+            fire & was_idle, state.busy_start.at[j].set(state.now), state.busy_start
+        )
+        q_fake = jnp.where(fire, state.q_fake.at[j].add(1), state.q_fake)
+        code = jnp.where(fire, EV_FAKE_DISPATCH, EV_SELF_LOOP).astype(jnp.int32)
+        new_state = state.replace(q_fake=q_fake, busy_start=busy_start)
+        ev = dict(
+            code=code, worker=j, n_tasks=jnp.int32(0),
+            task_workers=jnp.full((mt,), -1, jnp.int32),
+            task_targets=jnp.full((mt,), -1, jnp.int32),
+        )
+        return new_state, ev
+
+    def round_fn(state: SimState, xs):
+        t, key = xs
+        k_dt, k_ev, k_br, k_refresh = jax.random.split(key, 4)
+        dt = jax.random.exponential(k_dt) / R
+        state = state.replace(now=state.now + dt)
+
+        ev_idx = jax.random.categorical(k_ev, logits)  # 0=arrival, 1..n=svc, n+1=fake
+
+        def do_arrival(s):
+            return arrival_branch(s, k_br)
+
+        def do_service(s):
+            return service_branch(s, k_br, (ev_idx - 1).astype(jnp.int32))
+
+        def do_fake(s):
+            return fake_branch(s, k_br)
+
+        branch = jnp.where(ev_idx == 0, 0, jnp.where(ev_idx <= n, 1, 2))
+        state, ev = jax.lax.switch(branch, [do_arrival, do_service, do_fake], state)
+
+        if cfg.use_learner:
+            def refresh(s):
+                return s.replace(
+                    learner=lrn.refresh_estimates(s.learner, lcfg, s.arr.lam_hat, s.now)
+                )
+            state = jax.lax.cond(
+                (t % cfg.learner_refresh) == 0, refresh, lambda s: s, state
+            )
+
+        out = dict(ev, now=state.now, lam_hat=state.arr.lam_hat)
+        out["q_real"] = state.q_real if cfg.trace_queues else jnp.zeros((0,), jnp.int32)
+        out["mu_hat"] = (
+            state.learner.mu_hat if cfg.trace_mu else jnp.zeros((0,), jnp.float32)
+        )
+        return state, out
+
+    keys = jax.random.split(key, cfg.rounds)
+    ts = jnp.arange(cfg.rounds)
+    final, trace = jax.lax.scan(round_fn, state0, (ts, keys))
+    return final, trace

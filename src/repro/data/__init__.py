@@ -1,0 +1,3 @@
+from repro.data.pipeline import MemmapLM, Prefetcher, SyntheticLM
+
+__all__ = ["SyntheticLM", "MemmapLM", "Prefetcher"]

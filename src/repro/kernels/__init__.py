@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Each kernel package ships kernel.py (pl.pallas_call + BlockSpec VMEM
+tiling), ops.py (jit'd public wrapper), ref.py (pure-jnp oracle):
+
+- ppot_dispatch/   — batched PPoT scheduling decisions (the paper's §1
+                     "millions of tasks per second" hot loop)
+- flash_attention/ — blocked online-softmax attention forward
+- ssd_scan/        — Mamba2 SSD chunked scan with VMEM state carry
+"""

@@ -1,0 +1,121 @@
+"""Pallas TPU flash-attention (forward) kernel.
+
+Tiling: grid (BH, Sq/BQ, Sk/BK) — the kv index is the innermost (fastest)
+grid dim, so the [BQ, D] fp32 accumulator + running (m, l) live in VMEM
+scratch across the kv sweep for one q tile. Block sizes default to 128×128
+(MXU-aligned: both the QKᵀ [BQ, BK] product and the PV [BQ, D] product hit
+the 128×128 systolic array; D = head_dim is 64/128 for every assigned arch).
+
+VMEM budget per step (BQ=BK=128, D=128, fp32 scratch + bf16 tiles):
+q 32 KiB + k/v 64 KiB + acc 64 KiB + s 64 KiB ≈ 0.25 MiB — far under the
+~16 MiB/core VMEM, leaving room for the double-buffered pipeline.
+
+Causal / sliding-window masking is positional (q_offset supports decode
+batches); fully-masked tiles are cheap but not skipped (grid is static) —
+the XLA-path wrapper (models/layers.flash_attention_xla) is used for
+training where the backward matters; this kernel is the serving/prefill
+fast path.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale, causal, window, q_offset, nk):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]  # [BQ, D]
+    k = k_ref[0]  # [BK, D]
+    v = v_ref[0]
+    BQ, D = q.shape
+    BK = k.shape[0]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # [BQ, BK]
+
+    qpos = q_offset + qi * BQ + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 0)
+    kpos = kj * BK + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 1)
+    dif = qpos - kpos
+    ok = jnp.ones((BQ, BK), jnp.bool_)
+    if causal:
+        ok &= dif >= 0
+    if window > 0:
+        ok &= dif < window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]  # [BQ, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(ok, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)  # [BQ, 1]
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        l = l_ref[...]
+        o_ref[0] = (acc_ref[...] / jnp.where(l > 0, l, 1.0)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_offset", "bq", "bk", "interpret"),
+)
+def flash_attention_fwd(q, k, v, *, causal=True, window=0, q_offset=0,
+                        bq=DEFAULT_BQ, bk=DEFAULT_BK, interpret=False):
+    """q [BH, Sq, D]; k,v [BH, Sk, D] → [BH, Sq, D]."""
+    BH, Sq, D = q.shape
+    Sk = k.shape[1]
+    bq = min(bq, Sq)
+    bk = min(bk, Sk)
+    if Sq % bq:
+        bq = math.gcd(Sq, bq)
+    if Sk % bk:
+        bk = math.gcd(Sk, bk)
+    nq, nk = Sq // bq, Sk // bk
+    scale = 1.0 / math.sqrt(D)
+
+    kern = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        q_offset=q_offset, nk=nk,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

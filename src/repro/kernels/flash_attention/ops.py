@@ -1,0 +1,31 @@
+"""Public wrapper: [B,S,H,D]-layout flash attention with Pallas forward and
+the flash-style custom-VJP XLA backward (models/layers.flash_attention_xla)
+for training. On CPU the Pallas path runs interpret=True."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+
+
+def flash_attention(q, k, v, *, q_pos=None, k_pos=None, causal=True,
+                    window=0, interpret=None):
+    """q,k,v: [B, S, H, D] (equal head counts — GQA repeat upstream).
+    Positions default to arange; a scalar q-offset is derived when q_pos is
+    a shifted arange (decode)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    q_offset = 0
+    if q_pos is not None:
+        q_offset = int(q_pos[0]) if not isinstance(q_pos, jax.core.Tracer) else 0
+    qr = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * H, Sk, D)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * H, Sk, D)
+    o = flash_attention_fwd(
+        qr, kr, vr, causal=causal, window=window, q_offset=q_offset,
+        interpret=interpret,
+    )
+    return o.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the flash attention kernel: naive materialized
+softmax(QKᵀ)V with causal / sliding-window masking."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  q_offset: int = 0):
+    """q [BH, Sq, D]; k,v [BH, Sk, D]. q positions are q_offset + arange(Sq),
+    k positions arange(Sk). Returns [BH, Sq, D] in q.dtype."""
+    D = q.shape[-1]
+    s = jnp.einsum(
+        "bqd,bkd->bqk", q, k, preferred_element_type=jnp.float32
+    ) / math.sqrt(D)
+    qp = q_offset + jnp.arange(q.shape[1])
+    kp = jnp.arange(k.shape[1])
+    dif = qp[:, None] - kp[None, :]
+    ok = jnp.ones(dif.shape, bool)
+    if causal:
+        ok &= dif >= 0
+    if window > 0:
+        ok &= dif < window
+    s = jnp.where(ok[None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    # rows with no valid key (can happen with window+offset): define as 0
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    return jnp.einsum("bqk,bkd->bqd", p.astype(v.dtype), v)

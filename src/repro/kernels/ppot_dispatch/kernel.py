@@ -1,0 +1,77 @@
+"""Pallas TPU kernel for batched PPoT dispatch (the paper's per-decision hot
+path at "millions of tasks per second", §1).
+
+HARDWARE ADAPTATION (DESIGN.md §2): a CPU scheduler does a per-job binary
+search over the CDF. On TPU, branchy binary search wastes the VPU; instead
+each grid step loads the whole worker state (CDF + queue lengths, n ≤ 2048
+→ ≤ 16 KiB, trivially VMEM-resident) and a block of B_BLK jobs, and computes
+the inverse-CDF sample as a dense [B_BLK, n] comparison — sum(cdf <= u) —
+which is one vectorized reduce per candidate. Two candidates + SQ(2) argmin
+are elementwise. Queue-length gathers become one-hot dot products (gathers
+are slow on TPU; one-hot matmuls hit the MXU).
+
+Grid: (B // B_BLK,). BlockSpecs place the job block in VMEM and replicate
+the (small) worker state per step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+B_BLK = 256  # jobs per grid step (8×128 lanes)
+
+
+def _kernel(cdf_ref, q_ref, u1_ref, u2_ref, out_ref):
+    cdf = cdf_ref[...]  # [n]
+    q = q_ref[...]  # [n] (float32 for one-hot dot)
+    u1 = u1_ref[...]  # [B_BLK]
+    u2 = u2_ref[...]
+    n = cdf.shape[0]
+
+    # inverse-CDF sampling as a dense comparison (VPU-friendly)
+    j1 = jnp.sum((cdf[None, :] <= u1[:, None]).astype(jnp.int32), axis=1)
+    j2 = jnp.sum((cdf[None, :] <= u2[:, None]).astype(jnp.int32), axis=1)
+    j1 = jnp.minimum(j1, n - 1)
+    j2 = jnp.minimum(j2, n - 1)
+
+    # queue lengths via one-hot contraction (gather → MXU dot)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (B_BLK, n), 1)
+    oh1 = (iota == j1[:, None]).astype(jnp.float32)
+    oh2 = (iota == j2[:, None]).astype(jnp.float32)
+    q1 = jax.lax.dot_general(
+        oh1, q, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    q2 = jax.lax.dot_general(
+        oh2, q, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    out_ref[...] = jnp.where(q1 <= q2, j1, j2).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ppot_dispatch(cdf, q, u1, u2, *, interpret: bool = False):
+    """cdf f32[n], q i32[n], u1/u2 f32[B] → i32[B] worker choices.
+    B must be a multiple of B_BLK (pad with zeros and slice if not)."""
+    B = u1.shape[0]
+    n = cdf.shape[0]
+    pad = (-B) % B_BLK
+    if pad:
+        u1 = jnp.pad(u1, (0, pad))
+        u2 = jnp.pad(u2, (0, pad))
+    grid = ((B + pad) // B_BLK,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),  # cdf: replicated per step
+            pl.BlockSpec((n,), lambda i: (0,)),  # q
+            pl.BlockSpec((B_BLK,), lambda i: (i,)),
+            pl.BlockSpec((B_BLK,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((B_BLK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((B + pad,), jnp.int32),
+        interpret=interpret,
+    )(cdf, q.astype(jnp.float32), u1, u2)
+    return out[:B]

@@ -1,0 +1,46 @@
+"""Jit'd public wrapper for the PPoT dispatch kernel.
+
+On CPU (this container) the Pallas path runs in interpret mode; on TPU it
+compiles to Mosaic. ``schedule_batch_kernel`` is the drop-in batched
+replacement for ``core.policies.schedule_batch(PPOT_SQ2, ...)`` when the
+caller can tolerate a *stale queue view within a batch* (all B jobs see the
+same queue lengths — the distributed-scheduler reality; the returned counts
+let the caller fold the batch back into its view).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ppot_dispatch import ref
+from repro.kernels.ppot_dispatch.kernel import ppot_dispatch
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def dispatch(key, mu_hat, q, B: int, *, interpret: bool | None = None):
+    """Draw B PPoT-SQ(2) choices against a fixed queue snapshot."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    cdf = ref.make_cdf(mu_hat)
+    k1, k2 = jax.random.split(key)
+    u1 = jax.random.uniform(k1, (B,))
+    u2 = jax.random.uniform(k2, (B,))
+    workers = ppot_dispatch(cdf, q, u1, u2, interpret=interpret)
+    new_q = q + jnp.zeros_like(q).at[workers].add(1)
+    return workers, new_q
+
+
+def dispatch_ref(key, mu_hat, q, B: int):
+    """Oracle path (pure jnp) with the same RNG stream."""
+    cdf = ref.make_cdf(mu_hat)
+    k1, k2 = jax.random.split(key)
+    u1 = jax.random.uniform(k1, (B,))
+    u2 = jax.random.uniform(k2, (B,))
+    workers = ref.ppot_dispatch_ref(cdf, q, u1, u2)
+    new_q = q + jnp.zeros_like(q).at[workers].add(1)
+    return workers, new_q

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the batched PPoT dispatch kernel.
+
+Semantics (paper Fig. 5, batched): for each job b:
+  j1 = smallest j with u1[b] < cdf[j]     (proportional sample via inverse CDF)
+  j2 = smallest j with u2[b] < cdf[j]
+  out[b] = j1 if q[j1] <= q[j2] else j2   (SQ(2))
+
+``cdf`` is the inclusive prefix sum of μ̂ normalized to cdf[-1] = 1. All-zero
+μ̂ (dead cluster) degenerates to uniform sampling — same guard as
+core/policies._safe_logits.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def make_cdf(mu_hat):
+    total = jnp.sum(mu_hat)
+    w = jnp.where(total > 0, mu_hat, jnp.ones_like(mu_hat))
+    c = jnp.cumsum(w)
+    return c / c[-1]
+
+
+def ppot_dispatch_ref(cdf, q, u1, u2):
+    """cdf f32[n] (inclusive, cdf[-1]==1), q i32[n], u1/u2 f32[B] ∈ [0,1).
+    Returns i32[B] chosen workers."""
+    # count of cdf entries <= u  ==  index of first cdf entry > u
+    j1 = jnp.sum(cdf[None, :] <= u1[:, None], axis=1).astype(jnp.int32)
+    j2 = jnp.sum(cdf[None, :] <= u2[:, None], axis=1).astype(jnp.int32)
+    n = cdf.shape[0]
+    j1 = jnp.clip(j1, 0, n - 1)
+    j2 = jnp.clip(j2, 0, n - 1)
+    take1 = q[j1] <= q[j2]
+    return jnp.where(take1, j1, j2)

@@ -1,0 +1,111 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan.
+
+HARDWARE ADAPTATION (DESIGN.md §2/§6): the CUDA Mamba2 kernel leans on warp
+shuffles for the intra-chunk cumulative products; on TPU we use the SSD
+matrix form — per chunk Q=128 the intra-chunk part is two MXU matmuls
+(CBᵀ⊙decay [Q,Q] then ·X [Q,P]) and the inter-chunk state is a [N,P] fp32
+VMEM scratch carried across the (sequential) chunk grid dimension:
+
+  grid (BH, S/Q)   — chunk index innermost, state scratch persists per BH
+  y_c = (C Bᵀ ⊙ D_c) (dt·x)  +  (C ⊙ exp(cum)) h_in     (intra + inter)
+  h' = exp(cum_end)·h_in + Σ_k exp(cum_end − cum_k) B_k ⊗ (dt_k x_k)
+
+All decay math in fp32 (exp underflow-safe: A < 0, dt > 0).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_Q = 128
+
+
+def _kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, hf_ref, h_ref, *, nc):
+    cj = pl.program_id(1)
+
+    @pl.when(cj == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0].astype(jnp.float32)  # [Q, P]
+    dt = dt_ref[0].astype(jnp.float32)  # [Q]
+    b = b_ref[0].astype(jnp.float32)  # [Q, N]
+    c = c_ref[0].astype(jnp.float32)  # [Q, N]
+    a = a_ref[0]  # scalar (negative)
+    Q, P = x.shape
+
+    la = dt * a  # [Q] log decay per step (≤ 0)
+    cum = jnp.cumsum(la)  # [Q]
+
+    # intra-chunk: scores[q, k] = (c_q · b_k) * exp(cum_q - cum_k) for q >= k
+    cb = jax.lax.dot_general(
+        c, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [Q, Q]
+    dmask = cum[:, None] - cum[None, :]
+    qi = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    ki = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    dec = jnp.where(qi >= ki, jnp.exp(dmask), 0.0)
+    scores = cb * dec
+    xdt = x * dt[:, None]  # [Q, P]
+    y_intra = jax.lax.dot_general(
+        scores, xdt, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    # inter-chunk: y += (C ⊙ exp(cum)) · h_in
+    h_in = h_ref[...]  # [N, P]
+    c_dec = c * jnp.exp(cum)[:, None]
+    y_inter = jax.lax.dot_general(
+        c_dec, h_in, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state update: h' = exp(cum_end) h_in + Σ_k exp(cum_end - cum_k) b_k ⊗ xdt_k
+    decay_to_end = jnp.exp(cum[-1] - cum)  # [Q]
+    b_scaled = b * decay_to_end[:, None]  # [Q, N]
+    h_new = h_in * jnp.exp(cum[-1]) + jax.lax.dot_general(
+        b_scaled, xdt, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    h_ref[...] = h_new
+
+    @pl.when(cj == nc - 1)
+    def _emit_state():
+        hf_ref[0] = h_new
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = DEFAULT_Q, interpret: bool = False):
+    """x [BH,S,P]; dt [BH,S]; A [BH]; Bm/Cm [BH,S,N] →
+    (y [BH,S,P] f32, h_final [BH,N,P] f32). S must divide by ``chunk``."""
+    BH, S, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, f"S={S} must be a multiple of chunk={Q}"
+    nc = S // Q
+
+    kern = functools.partial(_kernel, nc=nc)
+    y, hf = pl.pallas_call(
+        kern,
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, c: (b,)),
+            pl.BlockSpec((1, Q, P), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, Q), lambda b, c: (b, c)),
+            pl.BlockSpec((1, Q, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, P), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, N, P), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, P), jnp.float32),
+            jax.ShapeDtypeStruct((BH, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(A, x, dt, Bm, Cm)
+    return y, hf

@@ -1,0 +1,27 @@
+"""Public wrapper: [B,S,H,P]-layout SSD matching models/ssm.ssd_chunked."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan
+
+
+def ssd(x, dt, A, Bm, Cm, *, chunk: int = 128, interpret=None):
+    """x [B,S,H,P]; dt [B,S,H]; A [H]; Bm/Cm [B,S,N] (shared across heads).
+    Returns (y [B,S,H,P] f32, h [B,H,N,P] f32) — same contract as
+    models.ssm.ssd_chunked."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    xr = x.transpose(0, 2, 1, 3).reshape(B * H, S, P)
+    dtr = dt.transpose(0, 2, 1).reshape(B * H, S)
+    Ar = jnp.broadcast_to(A[None], (B, H)).reshape(B * H)
+    Br = jnp.broadcast_to(Bm[:, None], (B, H, S, N)).reshape(B * H, S, N)
+    Cr = jnp.broadcast_to(Cm[:, None], (B, H, S, N)).reshape(B * H, S, N)
+    y, h = ssd_scan(xr, dtr, Ar, Br, Cr, chunk=chunk, interpret=interpret)
+    return (
+        y.reshape(B, H, S, P).transpose(0, 2, 1, 3),
+        h.reshape(B, H, N, P),
+    )

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the chunked SSD kernel: the sequential recurrence
+  h_t = a_t · h_{t-1} + dt_t · B_t ⊗ x_t ;   y_t = C_t · h_t
+evaluated directly (O(S·N·P) per head) — slow but unambiguous."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, Bm, Cm):
+    """x [BH, S, P]; dt [BH, S]; A [BH] (negative); Bm/Cm [BH, S, N].
+    Returns (y [BH, S, P] f32, h_final [BH, N, P] f32)."""
+    BH, S, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, bt, ct, a = inp
+        at = jnp.exp(dtt * a)
+        h = h * at[..., None, None] + jnp.einsum(
+            "bn,b,bp->bnp", bt, dtt, xt.astype(jnp.float32)
+        )
+        y = jnp.einsum("bn,bnp->bp", ct, h)
+        return h, y
+
+    h0 = jnp.zeros((BH, N, P), jnp.float32)
+    hT, ys = jax.lax.scan(
+        step,
+        h0,
+        (
+            x.transpose(1, 0, 2),
+            dt.transpose(1, 0),
+            Bm.transpose(1, 0, 2),
+            Cm.transpose(1, 0, 2),
+            jnp.broadcast_to(A[None], (S, BH)),
+        ),
+    )
+    return ys.transpose(1, 0, 2), hT

@@ -1,0 +1,5 @@
+"""Launchers: mesh builders, the multi-pod dry-run, train and serve drivers.
+
+NOTE: do not import dryrun from here — it sets XLA device-count flags at
+import time and must only be imported as the __main__ entry point.
+"""

@@ -1,0 +1,281 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: ``.lower().compile()`` every (architecture × input
+shape × mesh) cell on the production mesh, with zero real allocation
+(abstract params via ``jax.eval_shape``; inputs via ShapeDtypeStruct).
+
+Per cell we record, into ``artifacts/dryrun.json``:
+  * ``compiled.memory_analysis()``  — per-device argument/temp/output bytes
+    (proves the cell FITS a 16 GB v5e chip),
+  * ``compiled.cost_analysis()``    — per-device HLO FLOPs + bytes accessed,
+  * collective bytes by op kind, parsed from the optimized HLO,
+  * compile wall time.
+
+The roofline analysis (benchmarks/roofline.py, EXPERIMENTS.md §Roofline)
+reads this JSON. Resumable: cells already present are skipped unless
+--force. Usage:
+
+  PYTHONPATH=src python -m repro.launch.dryrun                 # everything
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh multi_pod
+"""
+import argparse
+import functools
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.dist import sharding as SH
+from repro.dist import steps as ST
+from repro.launch.mesh import make_production_mesh
+from repro.models import api
+from repro.optim import adamw
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "..", "artifacts")
+
+COLLECTIVE_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|s32|s16|s8|u64|u32|u16|u8|pred)\[([\d,]*)\]")
+
+DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result bytes per collective kind over the per-device program."""
+    out: dict[str, float] = {}
+    for m in COLLECTIVE_RE.finditer(hlo_text):
+        type_str, kind = m.group(1), m.group(2)
+        out[kind] = out.get(kind, 0) + _shape_bytes(type_str)
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def _abstract_params(cfg):
+    return jax.eval_shape(lambda: api.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def _ns_tree(ctx, spec_tree):
+    return jax.tree.map(ctx.ns, spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def build_cell(cfg, ctx, shape_name: str, *, microbatches: int = 4,
+               grad_sync: str = "auto"):
+    """Returns (jitted_fn, example_args as ShapeDtypeStructs)."""
+    ss = configs.SHAPES[shape_name]
+    batch_sds = configs.input_specs(cfg, shape_name)
+    params_sds = _abstract_params(cfg)
+    pspecs = SH.param_specs(cfg, ctx, params_sds)
+    bspecs = SH.batch_specs(cfg, ctx, batch_sds)
+
+    if ss.step == "train":
+        opt_sds = jax.eval_shape(adamw.init, params_sds)
+        opt_cfg = adamw.AdamWConfig()
+        train = ST.make_train_step(
+            cfg, ctx, opt_cfg, microbatches=microbatches, grad_sync=grad_sync
+        )
+
+        def step(params, opt_state, batch, seed):
+            rng = jax.random.PRNGKey(seed)
+            return train(params, opt_state, batch, rng)
+
+        ospecs_leaf = SH.opt_state_specs(cfg, ctx, pspecs, params_sds)
+        ospecs = adamw.AdamWState(
+            master=ospecs_leaf, m=ospecs_leaf, v=ospecs_leaf, count=P()
+        )
+        fn = jax.jit(
+            step,
+            in_shardings=(
+                _ns_tree(ctx, pspecs), _ns_tree(ctx, ospecs),
+                _ns_tree(ctx, bspecs), None,
+            ),
+            out_shardings=(_ns_tree(ctx, pspecs), _ns_tree(ctx, ospecs), None),
+            donate_argnums=(0, 1),
+        )
+        args = (params_sds, opt_sds, batch_sds, jax.ShapeDtypeStruct((), jnp.int32))
+        return fn, args
+
+    if ss.step == "prefill":
+        pre = ST.make_prefill_step(cfg, ctx)
+        fn = jax.jit(
+            pre, in_shardings=(_ns_tree(ctx, pspecs), _ns_tree(ctx, bspecs))
+        )
+        return fn, (params_sds, batch_sds)
+
+    # decode
+    cache_sds = configs.cache_specs(cfg, shape_name)
+    cspecs = SH.cache_specs(cfg, ctx, cache_sds)
+    dec = ST.make_decode_step(cfg, ctx)
+    fn = jax.jit(
+        dec,
+        in_shardings=(
+            _ns_tree(ctx, pspecs), _ns_tree(ctx, bspecs), _ns_tree(ctx, cspecs)
+        ),
+        out_shardings=(None, _ns_tree(ctx, cspecs)),
+        donate_argnums=(2,),
+    )
+    return fn, (params_sds, configs.input_specs(cfg, shape_name), cache_sds)
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, *, cfg_overrides=None,
+             extra_ctx=None, microbatches: int = 4, grad_sync: str = "auto") -> dict:
+    multi = mesh_name == "multi_pod"
+    mesh = make_production_mesh(multi_pod=multi)
+    cfg = configs.get_config(arch, **(cfg_overrides or {}))
+    ok, why = configs.shape_applicable(cfg, shape_name)
+    if not ok:
+        return {"status": why}
+    ctx = SH.make_ctx(mesh, **(extra_ctx or {}))
+
+    t0 = time.time()
+    fn, args = build_cell(cfg, ctx, shape_name, microbatches=microbatches,
+                          grad_sync=grad_sync)
+    lowered = fn.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    colls = collective_bytes(hlo)
+
+    rec = {
+        "status": "ok",
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "chips": int(np.prod(mesh.devices.shape)),
+        "flops_per_device": float(cost.get("flops", 0.0)),
+        "bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes_per_device": colls,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_estimate_bytes": mem.argument_size_in_bytes
+            + mem.temp_size_in_bytes
+            + mem.output_size_in_bytes
+            - mem.alias_size_in_bytes,
+        },
+        "model_params": configs.get_config(arch).num_params(),
+        "active_params": configs.get_config(arch).active_params(),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "hlo_bytes": len(hlo),
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="single arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="single shape (default: all)")
+    ap.add_argument("--mesh", default=None, choices=[None, "single_pod", "multi_pod"])
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="baseline", help="experiment tag")
+    ap.add_argument("--seq-shard", action="store_true", help="sequence-parallel activations")
+    ap.add_argument("--fsdp", action="store_true",
+                    help="batch over the model axis; gather weights per layer")
+    ap.add_argument("--remat", default=None, help="override remat policy")
+    ap.add_argument("--kv-quant", action="store_true", help="int8 KV cache")
+    ap.add_argument("--microbatches", type=int, default=4,
+                    help="gradient-accumulation microbatches for train cells")
+    ap.add_argument("--grad-sync", default="auto", choices=["auto", "int8"])
+    args = ap.parse_args()
+
+    out_path = args.out or os.path.join(
+        os.path.abspath(ARTIFACTS), f"dryrun_{args.tag}.json"
+    )
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    results = {}
+    if os.path.exists(out_path) and not args.force:
+        with open(out_path) as f:
+            results = json.load(f)
+
+    archs = [args.arch] if args.arch else list(configs.ARCHS)
+    shapes = [args.shape] if args.shape else list(configs.SHAPES)
+    meshes = [args.mesh] if args.mesh else ["single_pod", "multi_pod"]
+    overrides = {}
+    if args.remat:
+        overrides["remat"] = args.remat
+    if args.kv_quant:
+        overrides["kv_quant"] = True
+    extra_ctx = {}
+    if args.seq_shard:
+        extra_ctx["seq_shard"] = True
+    if args.fsdp:
+        extra_ctx["fsdp"] = True
+    extra_ctx = extra_ctx or None
+
+    n_ok = n_skip = n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_name in meshes:
+                key = f"{arch}|{shape}|{mesh_name}"
+                if key in results and results[key].get("status") in ("ok",) and not args.force:
+                    n_skip += 1
+                    continue
+                print(f"[dryrun] {key} ...", flush=True)
+                try:
+                    rec = run_cell(arch, shape, mesh_name,
+                                   cfg_overrides=overrides, extra_ctx=extra_ctx,
+                                   microbatches=args.microbatches,
+                                   grad_sync=args.grad_sync)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    rec = {"status": f"error: {type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-2000:]}
+                results[key] = rec
+                if rec["status"] == "ok":
+                    n_ok += 1
+                    mem_gb = rec["memory"]["peak_estimate_bytes"] / 2**30
+                    print(
+                        f"  ok: {rec['flops_per_device']:.3e} flops/dev, "
+                        f"{mem_gb:.2f} GiB/dev, "
+                        f"coll {rec['collective_bytes_per_device'].get('total', 0)/2**20:.1f} MiB, "
+                        f"compile {rec['compile_s']}s",
+                        flush=True,
+                    )
+                elif rec["status"].startswith("skipped"):
+                    n_skip += 1
+                    print(f"  {rec['status']}")
+                else:
+                    n_fail += 1
+                    print(f"  FAIL: {rec['status']}", flush=True)
+                with open(out_path, "w") as f:
+                    json.dump(results, f, indent=1)
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_fail} failed → {out_path}")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

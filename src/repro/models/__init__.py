@@ -1,0 +1,4 @@
+from repro.models.config import ModelConfig
+from repro.models import api, layers, lm, moe, ssm, encdec
+
+__all__ = ["ModelConfig", "api", "layers", "lm", "moe", "ssm", "encdec"]

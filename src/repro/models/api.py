@@ -1,0 +1,107 @@
+"""Unified model API — family dispatch + losses + step functions.
+
+Everything downstream (dist/, launch/, examples/) goes through:
+
+    init_params(cfg, key)            -> params
+    loss_fn(cfg, params, batch, rng) -> (loss, metrics)
+    prefill(cfg, params, batch)      -> (logits_last, cache)
+    decode_fn(cfg, params, batch, cache) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as ED
+from repro.models import lm as LM
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+
+def init_params(cfg: ModelConfig, key):
+    if cfg.family == "encdec":
+        return ED.init_params(cfg, key)
+    return LM.init_params(cfg, key)
+
+
+def chunked_xent(cfg: ModelConfig, params, hidden, labels, mask, logits_fn):
+    """Cross-entropy without materializing [B,S,V]: scan over sequence
+    chunks, remat each chunk's logits (memory ~ [B,chunk,V_shard])."""
+    B, S, d = hidden.shape
+    C = min(cfg.loss_chunk, S)
+    if S % C:
+        C = S
+    nc = S // C
+    h = hidden.reshape(B, nc, C, d).transpose(1, 0, 2, 3)
+    y = labels.reshape(B, nc, C).transpose(1, 0, 2)
+    m = mask.reshape(B, nc, C).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_loss(hc, yc, mc):
+        logits = logits_fn(cfg, params, hc).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mc
+        return jnp.sum(nll), jnp.sum(mc)
+
+    def body(carry, inp):
+        tot, cnt = carry
+        s, c = chunk_loss(*inp)
+        return (tot + s, cnt + c), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)), (h, y, m))
+    return tot / jnp.clip(cnt, 1.0)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, rng=None, shard_ctx=None):
+    """batch: dict with tokens [B,S], labels [B,S], mask [B,S] (+family
+    extras: patch_embeds, frame_embeds). Returns (loss, metrics)."""
+    if cfg.family == "encdec":
+        enc_out = ED.encode(cfg, params, batch["frame_embeds"])
+        hidden, _ = ED.decode(cfg, params, batch["tokens"], enc_out)
+        ce = chunked_xent(cfg, params, hidden, batch["labels"], batch["mask"],
+                          lambda c, p, h: ED.logits_head(c, p, h))
+        return ce, {"ce": ce, "aux": jnp.float32(0.0)}
+
+    hidden, aux = LM.forward(
+        cfg, params, batch["tokens"],
+        patch_embeds=batch.get("patch_embeds"), rng=rng, shard_ctx=shard_ctx,
+    )
+    ce = chunked_xent(cfg, params, hidden, batch["labels"], batch["mask"],
+                      lambda c, p, h: LM.logits_head(c, p, h))
+    loss = ce + 0.01 * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    if cfg.family == "encdec":
+        return ED.init_cache(cfg, batch, max_len)
+    return LM.init_cache(cfg, batch, max_len)
+
+
+def decode_fn(cfg: ModelConfig, params, batch, cache, shard_ctx=None):
+    """One-token decode against a filled cache. batch: tokens [B,1],
+    pos scalar (current write position) + frame_embeds/enc_out for encdec."""
+    if cfg.family == "encdec":
+        enc_out = batch["enc_out"]
+        hidden, nc = ED.decode(
+            cfg, params, batch["tokens"], enc_out, cache=cache, pos0=batch["pos"]
+        )
+        return ED.logits_head(cfg, params, hidden), nc
+    return LM.decode_step(
+        cfg, params, batch["tokens"], batch["pos"], cache, shard_ctx=shard_ctx
+    )
+
+
+def prefill(cfg: ModelConfig, params, batch, shard_ctx=None):
+    """Forward over the prompt, returning last-position logits (inference
+    prefill path — no loss)."""
+    if cfg.family == "encdec":
+        enc_out = ED.encode(cfg, params, batch["frame_embeds"])
+        hidden, _ = ED.decode(cfg, params, batch["tokens"], enc_out)
+        return ED.logits_head(cfg, params, hidden[:, -1:, :])
+    hidden, _ = LM.forward(
+        cfg, params, batch["tokens"], patch_embeds=batch.get("patch_embeds"),
+        shard_ctx=shard_ctx,
+    )
+    return LM.logits_head(cfg, params, hidden[:, -1:, :])

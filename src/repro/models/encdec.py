@@ -1,0 +1,144 @@
+"""Whisper-style encoder-decoder backbone (audio frontend is a STUB:
+``input_specs()`` supplies precomputed frame embeddings [B, enc_len, d] —
+the conv1d×2 + mel spectrogram stack is out of scope per the assignment).
+
+Encoder: non-causal self-attention + GELU MLP, sinusoidal positions,
+LayerNorm (pre-norm). Decoder: causal self-attention + cross-attention to
+the encoder output + GELU MLP, learned positions. Logits tie to the token
+embedding (Whisper convention).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+
+def _init_enc_layer(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 2)
+    return {
+        "norm1": L.init_norm(cfg),
+        "attn": L.init_attention(cfg, ks[0]),
+        "norm2": L.init_norm(cfg),
+        "mlp": L.init_mlp(cfg, ks[1]),
+    }
+
+
+def _init_dec_layer(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 3)
+    return {
+        "norm1": L.init_norm(cfg),
+        "self_attn": L.init_attention(cfg, ks[0]),
+        "norm2": L.init_norm(cfg),
+        "cross_attn": L.init_attention(cfg, ks[1], cross=True),
+        "norm3": L.init_norm(cfg),
+        "mlp": L.init_mlp(cfg, ks[2]),
+    }
+
+
+def init_params(cfg: ModelConfig, key):
+    ke, kd, kt, kp = jax.random.split(key, 4)
+    n_enc = cfg.n_enc_layers
+    n_dec = cfg.n_layers
+    params = {
+        "embed": L.dense_init(kt, (cfg.vocab, cfg.d_model), L._pdtype(cfg), scale=0.02),
+        # learned decoder positions; sized for the largest assigned decode
+        # context (32k — long_500k is skipped for full-attention archs)
+        "dec_pos": L.dense_init(kp, (32768, cfg.d_model), L._pdtype(cfg), scale=0.02),
+        "enc_norm": L.init_norm(cfg),
+        "dec_norm": L.init_norm(cfg),
+    }
+    params["enc_layers"] = jax.vmap(lambda k: _init_enc_layer(cfg, k))(
+        jax.random.split(ke, n_enc)
+    )
+    params["dec_layers"] = jax.vmap(lambda k: _init_dec_layer(cfg, k))(
+        jax.random.split(kd, n_dec)
+    )
+    return params
+
+
+def _enc_layer_apply(cfg, p, x, positions):
+    a, _ = L.attention_apply(
+        cfg, p["attn"], L.norm_apply(cfg, p["norm1"], x),
+        positions=positions, causal=False,
+    )
+    x = x + a
+    x = x + L.mlp_apply(cfg, p["mlp"], L.norm_apply(cfg, p["norm2"], x))
+    return x
+
+
+def _dec_layer_apply(cfg, p, x, enc_out, positions, enc_positions, cache=None):
+    a, ca = L.attention_apply(
+        cfg, p["self_attn"], L.norm_apply(cfg, p["norm1"], x),
+        positions=positions, causal=True, cache=cache,
+    )
+    x = x + a
+    c, _ = L.attention_apply(
+        cfg, p["cross_attn"], L.norm_apply(cfg, p["norm2"], x),
+        positions=positions, causal=False, kv_x=enc_out,
+        kv_positions=enc_positions,
+    )
+    x = x + c
+    x = x + L.mlp_apply(cfg, p["mlp"], L.norm_apply(cfg, p["norm3"], x))
+    return x, ca
+
+
+def encode(cfg: ModelConfig, params, frame_embeds):
+    """frame_embeds [B, enc_len, d] (stub frontend output)."""
+    B, S, d = frame_embeds.shape
+    x = frame_embeds.astype(L._dtype(cfg))
+    x = x + L.sincos_positions(d, S)[None].astype(x.dtype)
+    positions = jnp.arange(S)
+
+    def body(xc, lp):
+        return _enc_layer_apply(cfg, lp, xc, positions), None
+
+    body = jax.checkpoint(body) if cfg.remat != "none" else body
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return L.norm_apply(cfg, params["enc_norm"], x)
+
+
+def decode(cfg: ModelConfig, params, tokens, enc_out, *, cache=None, pos0=None):
+    """tokens [B, S]; enc_out [B, enc_len, d]. Returns (hidden, new_cache)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(L._dtype(cfg))
+    start = jnp.int32(0) if pos0 is None else pos0
+    positions = start + jnp.arange(S)
+    x = x + jnp.take(params["dec_pos"], positions, axis=0)[None].astype(x.dtype)
+    enc_positions = jnp.arange(enc_out.shape[1])
+
+    def body(carry, inp):
+        xc = carry
+        lp, lcache = inp
+        xo, nc = _dec_layer_apply(cfg, lp, xc, enc_out, positions, enc_positions,
+                                  cache=lcache)
+        return xo, nc
+
+    if cache is None:
+        bodyr = jax.checkpoint(lambda c, lp: (body(c, (lp, None))[0], None)) \
+            if cfg.remat != "none" else (lambda c, lp: (body(c, (lp, None))[0], None))
+        x, _ = jax.lax.scan(bodyr, x, params["dec_layers"])
+        new_cache = None
+    else:
+        x, new_cache = jax.lax.scan(body, x, (params["dec_layers"], cache["layers"]))
+        new_cache = {"layers": new_cache}
+    x = L.norm_apply(cfg, params["dec_norm"], x)
+    return x, new_cache
+
+
+def logits_head(cfg: ModelConfig, params, hidden):
+    return hidden @ params["embed"].astype(L._dtype(cfg)).T
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    one = {
+        "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.d_head), jnp.dtype(cfg.dtype)),
+        "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.d_head), jnp.dtype(cfg.dtype)),
+        "len": jnp.int32(0),
+    }
+    n = cfg.n_layers
+    return {
+        "layers": jax.tree.map(lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), one)
+    }

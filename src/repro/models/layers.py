@@ -1,0 +1,460 @@
+"""Model building blocks — pure functions over param pytrees (no flax).
+
+Every block ships ``init_*`` (params) and ``*_apply`` (forward). Shapes are
+chosen to shard cleanly on the (pod, data, model) mesh: head and expert and
+ff dimensions lead where the TP/EP axis cuts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    if scale is None:
+        scale = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(cfg: ModelConfig, d: int | None = None):
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), _pdtype(cfg))}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), _pdtype(cfg))
+    return p
+
+
+def norm_apply(cfg: ModelConfig, p, x):
+    """Norm with fp32 STATISTICS but elementwise math in the input dtype.
+
+    A full ``x.astype(f32)`` elementwise chain makes XLA materialize an fp32
+    twin of the scan-over-layers remat stack (measured 2× activation memory
+    on the 32B train cell); reductions alone fuse without materializing."""
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        inv = jax.lax.rsqrt(var + cfg.norm_eps)
+        y = (x - mean.astype(x.dtype)) * inv.astype(x.dtype)
+        y = y * p["scale"].astype(x.dtype) + p["bias"].astype(x.dtype)
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        inv = jax.lax.rsqrt(ms + cfg.norm_eps)
+        y = x * inv.astype(x.dtype) * p["scale"].astype(x.dtype)
+    return y
+
+
+def rms_head_norm(x, scale, eps):
+    """Per-head RMSNorm over the head dim (qwen3 qk_norm)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(cfg: ModelConfig, rot_dim: int):
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+    return inv  # [rot_dim/2]
+
+
+def apply_rope(cfg: ModelConfig, x, positions):
+    """x: [..., S, H, D]; positions: [..., S] (broadcastable). neox rotate-half
+    over the first ``rope_frac`` of the head dim (chatglm: 0.5, 2d-RoPE's
+    rotary half)."""
+    if cfg.rope == "none":
+        return x
+    D = x.shape[-1]
+    rot = int(D * cfg.rope_frac)
+    rot -= rot % 2
+    inv = rope_freqs(cfg, rot)
+    ang = positions[..., :, None].astype(jnp.float32) * inv[None, :]  # [..., S, rot/2]
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    sin = sin[..., :, None, :]  # broadcast over heads
+    cos = cos[..., :, None, :]
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x1, x2 = x_rot[..., : rot // 2], x_rot[..., rot // 2 :]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1.astype(x.dtype), y2.astype(x.dtype), x_pass], axis=-1)
+
+
+def sincos_positions(d: int, length: int):
+    """Whisper-style fixed sinusoidal table [length, d]."""
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, causal / sliding-window / cross, chunked-online-softmax)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(cfg: ModelConfig, key, cross: bool = False):
+    ks = jax.random.split(key, 6)
+    d, dq, dkv = cfg.d_model, cfg.d_qkv, cfg.d_kv
+    p = {
+        "wq": dense_init(ks[0], (d, dq), _pdtype(cfg)),
+        "wk": dense_init(ks[1], (d, dkv), _pdtype(cfg)),
+        "wv": dense_init(ks[2], (d, dkv), _pdtype(cfg)),
+        "wo": dense_init(ks[3], (dq, d), _pdtype(cfg), scale=1.0 / math.sqrt(dq)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((cfg.d_head,), _pdtype(cfg))
+        p["k_norm"] = jnp.ones((cfg.d_head,), _pdtype(cfg))
+    del cross
+    return p
+
+
+def _repeat_kv(k, n_rep: int):
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)).reshape(
+        b, s, h * n_rep, d
+    )
+
+
+def _attn_scores_mask(q_pos, k_pos, causal: bool, window: int):
+    """[Sq, Sk] additive mask."""
+    dif = q_pos[:, None] - k_pos[None, :]
+    ok = jnp.ones(dif.shape, bool)
+    if causal:
+        ok &= dif >= 0
+    if window > 0:
+        ok &= dif < window
+    return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+def _pick_chunk(S1, S2, pref):
+    C = min(pref, S1, S2)
+    if S1 % C or S2 % C:
+        C = min(math.gcd(S1, S2), pref)
+    return C
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def flash_attention_xla(q, k, v, q_pos, k_pos, causal, window, chunk):
+    """Flash-style attention in pure XLA with a flash-style BACKWARD.
+
+    Standard AD through a blocked softmax stacks every [Cq,Ck] probability
+    block as a scan residual (O(S²) memory — measured 15 GiB/device on the
+    smollm train_4k cell). The custom VJP keeps the O(S) flash memory
+    footprint: the forward saves only (out, logsumexp); the backward
+    recomputes probability blocks on the fly. This function is also the
+    dataflow oracle for the Pallas flash kernel (kernels/flash_attention).
+
+    q: [B,Sq,H,D]; k,v: [B,Sk,H,D] (GQA repeat happens OUTSIDE so grads
+    reduce back through the broadcast). Returns [B,Sq,H,D].
+    """
+    out, _ = _flash_fwd_impl(q, k, v, q_pos, k_pos, causal, window, chunk)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, q_pos, k_pos, causal, window, chunk):
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    scale = 1.0 / math.sqrt(D)
+    C = _pick_chunk(Sq, Sk, chunk)
+    nq, nk = Sq // C, Sk // C
+
+    qc = q.reshape(B, nq, C, H, D).transpose(1, 0, 3, 2, 4)  # [nq,B,H,C,D]
+    kc = k.reshape(B, nk, C, H, D).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(B, nk, C, H, D).transpose(1, 0, 3, 2, 4)
+    qp = q_pos.reshape(nq, C)
+    kp = k_pos.reshape(nk, C)
+
+    def q_block(carry, inp):
+        qi, qpos = inp  # [B,H,C,D], [C]
+
+        def kv_step(c, kv):
+            acc, m, l = c
+            ki, vi, kpos = kv
+            s = jnp.einsum(
+                "bhqd,bhkd->bhqk", qi, ki, preferred_element_type=jnp.float32
+            ) * scale
+            s = s + _attn_scores_mask(qpos, kpos, causal, window)[None, None]
+            m_new = jnp.maximum(jnp.maximum(m, jnp.max(s, axis=-1)), -1e30)
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(vi.dtype), vi,
+                preferred_element_type=jnp.float32,
+            )
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, H, C, D), jnp.float32)
+        m0 = jnp.full((B, H, C), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, H, C), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0), (kc, vc, kp))
+        o = (acc / jnp.clip(l[..., None], 1e-30)).astype(q.dtype)
+        lse = m + jnp.log(jnp.clip(l, 1e-30))  # [B,H,C]
+        return carry, (o, lse)
+
+    _, (oc, lsec) = jax.lax.scan(q_block, 0, (qc, qp))
+    out = oc.transpose(1, 0, 3, 2, 4).reshape(B, Sq, H, D)
+    lse = lsec.transpose(1, 2, 0, 3).reshape(B, H, Sq)  # [nq,B,H,C] → [B,H,Sq]
+    return out, lse
+
+
+def _flash_fwd(q, k, v, q_pos, k_pos, causal, window, chunk):
+    out, lse = _flash_fwd_impl(q, k, v, q_pos, k_pos, causal, window, chunk)
+    return out, (q, k, v, q_pos, k_pos, out, lse)
+
+
+def _flash_bwd(causal, window, chunk, res, dout):
+    q, k, v, q_pos, k_pos, out, lse = res
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    scale = 1.0 / math.sqrt(D)
+    C = _pick_chunk(Sq, Sk, chunk)
+    nq, nk = Sq // C, Sk // C
+
+    qc = q.reshape(B, nq, C, H, D).transpose(1, 0, 3, 2, 4)  # [nq,B,H,C,D]
+    kc = k.reshape(B, nk, C, H, D).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(B, nk, C, H, D).transpose(1, 0, 3, 2, 4)
+    doc = dout.reshape(B, nq, C, H, D).transpose(1, 0, 3, 2, 4)
+    lsec = lse.reshape(B, H, nq, C).transpose(2, 0, 1, 3)  # [nq,B,H,C]
+    # delta_i = rowsum(dout ⊙ out)
+    delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+    deltac = delta.reshape(B, nq, C, H).transpose(1, 0, 3, 2)  # [nq,B,H,C]
+    qp = q_pos.reshape(nq, C)
+    kp = k_pos.reshape(nk, C)
+
+    def kv_block(dq_acc, inp):
+        ki, vi, kpos = inp  # [B,H,C,D], [C]
+
+        def q_step(c, qin):
+            dkj, dvj, dq_acc = c
+            qi, doi, lsei, deli, qpos, idx = qin
+            s = jnp.einsum(
+                "bhqd,bhkd->bhqk", qi, ki, preferred_element_type=jnp.float32
+            ) * scale
+            s = s + _attn_scores_mask(qpos, kpos, causal, window)[None, None]
+            p = jnp.exp(s - lsei[..., None])  # [B,H,Cq,Ck]
+            dv_c = jnp.einsum(
+                "bhqk,bhqd->bhkd", p, doi.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+            dp = jnp.einsum(
+                "bhqd,bhkd->bhqk", doi.astype(jnp.float32), vi.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+            ds = p * (dp - deli[..., None]) * scale
+            dk_c = jnp.einsum(
+                "bhqk,bhqd->bhkd", ds, qi.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+            dq_c = jnp.einsum(
+                "bhqk,bhkd->bhqd", ds, ki.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+            dq_acc = jax.lax.dynamic_update_index_in_dim(
+                dq_acc, dq_acc[idx] + dq_c, idx, 0
+            )
+            return (dkj + dk_c, dvj + dv_c, dq_acc), None
+
+        z = jnp.zeros((B, H, C, D), jnp.float32)
+        (dkj, dvj, dq_acc), _ = jax.lax.scan(
+            q_step, (z, z, dq_acc),
+            (qc, doc, lsec, deltac, qp, jnp.arange(nq)),
+        )
+        return dq_acc, (dkj, dvj)
+
+    dq0 = jnp.zeros((nq, B, H, C, D), jnp.float32)
+    dq_acc, (dk, dv) = jax.lax.scan(kv_block, dq0, (kc, vc, kp))
+    dq = dq_acc.transpose(1, 0, 3, 2, 4).reshape(B, Sq, H, D).astype(q.dtype)
+    dkf = dk.transpose(1, 0, 3, 2, 4).reshape(B, Sk, H, D).astype(k.dtype)
+    dvf = dv.transpose(1, 0, 3, 2, 4).reshape(B, Sk, H, D).astype(v.dtype)
+    zp_q = np.zeros(q_pos.shape, jax.dtypes.float0)
+    zp_k = np.zeros(k_pos.shape, jax.dtypes.float0)
+    return dq, dkf, dvf, zp_q, zp_k
+
+
+flash_attention_xla.defvjp(_flash_fwd, _flash_bwd)
+
+
+def chunked_attention(
+    cfg: ModelConfig, q, k, v, *, q_pos, k_pos, causal: bool, window: int = 0
+):
+    """Memory-bounded attention (flash dataflow, custom VJP). q: [B,Sq,Hq,D];
+    k,v: [B,Sk,Hkv,D] — GQA repeat outside the VJP so kv grads reduce
+    through the broadcast."""
+    Hq, Hkv = q.shape[2], k.shape[2]
+    k = _repeat_kv(k, Hq // Hkv)
+    v = _repeat_kv(v, Hq // Hkv)
+    if cfg.use_pallas:
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        return fa_ops.flash_attention(
+            q, k, v, q_pos=q_pos, k_pos=k_pos, causal=causal, window=window,
+        )
+    return flash_attention_xla(
+        q, k, v, q_pos, k_pos, causal, window, cfg.attn_chunk
+    )
+
+
+def plain_attention(q, k, v, *, q_pos, k_pos, causal, window):
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    k = _repeat_kv(k, Hq // Hkv)
+    v = _repeat_kv(v, Hq // Hkv)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32)
+    s = s / math.sqrt(D) + _attn_scores_mask(q_pos, k_pos, causal, window)[None, None]
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+def _kv_quantize(x):
+    """[B,S,H,D] → (int8 values, per-(B,S,H) bf16 scales)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.bfloat16)
+
+
+def attention_apply(
+    cfg: ModelConfig,
+    p,
+    x,
+    *,
+    positions,
+    causal: bool = True,
+    window: int | None = None,
+    kv_x=None,
+    kv_positions=None,
+    cache=None,
+):
+    """Full attention block: qkv proj → (qk_norm) → rope → attention → out.
+
+    cache: optional dict(k=[B,Smax,Hkv,D], v=..., len=i32) — decode mode
+    appends the new kv then attends over the filled prefix.
+    Returns (out, new_cache).
+    """
+    B, S, _ = x.shape
+    H, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    window = cfg.attn_window if window is None else window
+    dt = _dtype(cfg)
+
+    q = (x @ p["wq"].astype(dt)).reshape(B, S, H, D)
+    kv_src = x if kv_x is None else kv_x
+    Skv = kv_src.shape[1]
+    k = (kv_src @ p["wk"].astype(dt)).reshape(B, Skv, Hkv, D)
+    v = (kv_src @ p["wv"].astype(dt)).reshape(B, Skv, Hkv, D)
+
+    if cfg.qk_norm:
+        q = rms_head_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_head_norm(k, p["k_norm"], cfg.norm_eps)
+
+    kv_pos = positions if kv_positions is None else kv_positions
+    if kv_x is None:  # self-attention: rope on q and k
+        q = apply_rope(cfg, q, positions)
+        k = apply_rope(cfg, k, kv_pos)
+
+    new_cache = None
+    if cache is not None:
+        # decode: write new kv at cache['len'], attend over the prefix.
+        idx = cache["len"]
+        if cfg.kv_quant:
+            # int8 cache: per-(pos, head) scales; 2× HBM and 2× cache-read
+            # bandwidth vs bf16 (§Perf decode iteration)
+            kq, ks = _kv_quantize(k)
+            vq, vs = _kv_quantize(v)
+            ck_q = jax.lax.dynamic_update_slice(cache["k_q"], kq, (0, idx, 0, 0))
+            ck_s = jax.lax.dynamic_update_slice(cache["k_s"], ks, (0, idx, 0))
+            cv_q = jax.lax.dynamic_update_slice(cache["v_q"], vq, (0, idx, 0, 0))
+            cv_s = jax.lax.dynamic_update_slice(cache["v_s"], vs, (0, idx, 0))
+            new_cache = {"k_q": ck_q, "k_s": ck_s, "v_q": cv_q, "v_s": cv_s,
+                         "len": idx + S}
+            ck = (ck_q.astype(jnp.float32) * ck_s[..., None].astype(jnp.float32)).astype(dt)
+            cv = (cv_q.astype(jnp.float32) * cv_s[..., None].astype(jnp.float32)).astype(dt)
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0))
+            new_cache = {"k": ck, "v": cv, "len": idx + S}
+        Smax = ck.shape[1]
+        kpos_full = jnp.arange(Smax)
+        mask_valid = kpos_full < (idx + S)
+        kk = _repeat_kv(ck.astype(dt), H // Hkv)
+        vv = _repeat_kv(cv.astype(dt), H // Hkv)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kk, preferred_element_type=jnp.float32)
+        s = s / math.sqrt(D)
+        dif = positions[:, None] - kpos_full[None, :]
+        ok = (dif >= 0) & mask_valid[None, :]
+        if window and window > 0:
+            ok &= dif < window
+        s = jnp.where(ok[None, None], s, -jnp.inf)
+        prob = jax.nn.softmax(s, axis=-1).astype(dt)
+        out = jnp.einsum("bhqk,bkhd->bqhd", prob, vv)
+    elif S >= 2048 or Skv >= 2048:
+        out = chunked_attention(
+            cfg, q, k, v, q_pos=positions, k_pos=kv_pos, causal=causal,
+            window=window or 0,
+        )
+    else:
+        out = plain_attention(
+            q, k, v, q_pos=positions, k_pos=kv_pos, causal=causal, window=window or 0
+        )
+
+    out = out.reshape(B, S, H * D) @ p["wo"].astype(dt)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(cfg: ModelConfig, key, d_ff: int | None = None):
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    if cfg.act == "swiglu":
+        return {
+            "wg": dense_init(ks[0], (d, d_ff), _pdtype(cfg)),
+            "wu": dense_init(ks[1], (d, d_ff), _pdtype(cfg)),
+            "wd": dense_init(ks[2], (d_ff, d), _pdtype(cfg)),
+        }
+    return {
+        "wu": dense_init(ks[0], (d, d_ff), _pdtype(cfg)),
+        "wd": dense_init(ks[1], (d_ff, d), _pdtype(cfg)),
+    }
+
+
+def mlp_apply(cfg: ModelConfig, p, x):
+    dt = _dtype(cfg)
+    if cfg.act == "swiglu":
+        g = jax.nn.silu(x @ p["wg"].astype(dt))
+        u = x @ p["wu"].astype(dt)
+        return (g * u) @ p["wd"].astype(dt)
+    h = jax.nn.gelu(x @ p["wu"].astype(dt))
+    return h @ p["wd"].astype(dt)

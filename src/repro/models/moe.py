@@ -1,0 +1,189 @@
+"""Mixture-of-Experts layer with two routers:
+
+* ``topk``  — standard softmax top-k gating (faithful to the assigned MoE
+  archs: moonshot 64e top-6, phi3.5 16e top-2), capacity-based dropping.
+* ``ppot``  — the paper's technique applied to expert load balancing
+  (beyond-paper, DESIGN.md §3): token→expert dispatch is a balls-in-bins
+  problem; we draw TWO experts per routing slot from the gate distribution
+  (proportional sampling — the gates play the role of μ̂) and keep the one
+  with the lower running load (SQ(2)). Lemma 4's O(log log E) max-load
+  applies, which directly reduces capacity overflow (dropped tokens) at
+  equal capacity factor. Within a slot all tokens see the same load counter
+  (power-of-two with stale info — the distributed-scheduler reality).
+
+Expert computation is sort-based (dropless up to capacity): tokens are
+bucketed by expert into an [E_local, C, d] buffer and processed with one
+batched einsum — and shards cleanly: under explicit EP the layer runs inside
+``shard_map`` over the model axis, each shard computing its expert slice on
+its (replicated-over-model) local tokens, combining with a psum.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.layers import _dtype, _pdtype, dense_init
+
+
+def init_moe(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 5)
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.moe_dff
+    p = {
+        "router": dense_init(ks[0], (d, E), jnp.float32, scale=0.02),
+        "wg": dense_init(ks[1], (E, d, f), _pdtype(cfg)),
+        "wu": dense_init(ks[2], (E, d, f), _pdtype(cfg)),
+        "wd": dense_init(ks[3], (E, f, d), _pdtype(cfg), scale=1.0 / math.sqrt(f)),
+    }
+    if cfg.n_shared:
+        fs = cfg.n_shared * f
+        k1, k2, k3 = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "wg": dense_init(k1, (d, fs), _pdtype(cfg)),
+            "wu": dense_init(k2, (d, fs), _pdtype(cfg)),
+            "wd": dense_init(k3, (fs, d), _pdtype(cfg), scale=1.0 / math.sqrt(fs)),
+        }
+    return p
+
+
+def capacity(cfg: ModelConfig, n_tokens: int, n_experts: int) -> int:
+    c = int(math.ceil(n_tokens * cfg.top_k / n_experts * cfg.capacity_factor))
+    return max(c, 1)
+
+
+def topk_route(cfg: ModelConfig, gates: jax.Array):
+    """gates [T, E] → (idx [T,k], w [T,k]) with weights renormalized."""
+    vals, idx = jax.lax.top_k(gates, cfg.top_k)
+    w = vals / jnp.clip(jnp.sum(vals, -1, keepdims=True), 1e-9)
+    return idx.astype(jnp.int32), w
+
+
+def ppot_route(cfg: ModelConfig, gates: jax.Array, key: jax.Array):
+    """Rosella routing: per slot draw 2 proportional samples, keep the one
+    with the lower running expert load; loads update between slots."""
+    T, E = gates.shape
+    logits = jnp.log(jnp.clip(gates, 1e-30))
+    counts = jnp.zeros((E,), jnp.float32)
+    idxs, ws = [], []
+    for slot in range(cfg.top_k):
+        k1, k2 = jax.random.split(jax.random.fold_in(key, slot))
+        j1 = jax.random.categorical(k1, logits, axis=-1)
+        j2 = jax.random.categorical(k2, logits, axis=-1)
+        j = jnp.where(counts[j1] <= counts[j2], j1, j2).astype(jnp.int32)
+        idxs.append(j)
+        ws.append(jnp.take_along_axis(gates, j[:, None], axis=1)[:, 0])
+        counts = counts.at[j].add(1.0)
+    idx = jnp.stack(idxs, -1)
+    w = jnp.stack(ws, -1)
+    w = w / jnp.clip(jnp.sum(w, -1, keepdims=True), 1e-9)
+    return idx, w
+
+
+def expert_compute(cfg, pe, x, idx, w, e_start, n_local: int, cap: int):
+    """Sort-based dispatch → batched expert einsums → weighted combine.
+
+    x [B,S,d]; idx/w [B,S,k]. Handles the slice of experts
+    [e_start, e_start + n_local); non-local assignments are dropped here
+    (they are some other shard's job)."""
+    B, S, d = x.shape
+    k = idx.shape[-1]
+    T = B * S
+    dt = _dtype(cfg)
+    xf = x.reshape(T, d)
+    idxf = idx.reshape(T * k)
+    wf = w.reshape(T * k)
+    tok = jnp.arange(T * k) // k
+
+    local = (idxf >= e_start) & (idxf < e_start + n_local)
+    eloc = jnp.where(local, idxf - e_start, n_local).astype(jnp.int32)
+    order = jnp.argsort(eloc, stable=True)
+    se, st, sw = eloc[order], tok[order], wf[order]
+    seg_start = jnp.searchsorted(se, jnp.arange(n_local + 1), side="left")
+    pos = jnp.arange(T * k) - seg_start[jnp.clip(se, 0, n_local)]
+    keep = (se < n_local) & (pos < cap)
+    slot = jnp.where(keep, se * cap + pos, n_local * cap)  # overflow bin
+
+    buf = jnp.zeros((n_local * cap + 1, d), dt).at[slot].set(xf[st].astype(dt))
+    hb = buf[: n_local * cap].reshape(n_local, cap, d)
+    g = jax.nn.silu(
+        jnp.einsum("ecd,edf->ecf", hb, pe["wg"].astype(dt))
+    ) * jnp.einsum("ecd,edf->ecf", hb, pe["wu"].astype(dt))
+    ob = jnp.einsum("ecf,efd->ecd", g, pe["wd"].astype(dt)).reshape(n_local * cap, d)
+
+    contrib = ob[jnp.clip(slot, 0, n_local * cap - 1)] * (keep * sw)[:, None].astype(dt)
+    out = jnp.zeros((T, d), dt).at[st].add(contrib)
+    return out.reshape(B, S, d)
+
+
+def load_balance_loss(gates: jax.Array, idx: jax.Array, n_experts: int):
+    """Switch-style aux loss: E · Σ_e f_e · p_e."""
+    T = gates.shape[0]
+    k = idx.shape[-1]
+    f = jnp.zeros((n_experts,)).at[idx.reshape(-1)].add(1.0) / (T * k)
+    pmean = jnp.mean(gates, axis=0)
+    return n_experts * jnp.sum(f * pmean)
+
+
+def moe_apply(cfg: ModelConfig, p, x, *, rng=None, shard_ctx=None):
+    """Returns (out [B,S,d], aux_loss scalar)."""
+    B, S, d = x.shape
+    gates = jax.nn.softmax(
+        (x.astype(jnp.float32) @ p["router"]).reshape(B * S, cfg.n_experts), axis=-1
+    )
+    if cfg.router == "ppot":
+        key = rng if rng is not None else jax.random.PRNGKey(0)
+        idx, w = ppot_route(cfg, gates, key)
+    else:
+        idx, w = topk_route(cfg, gates)
+    aux = load_balance_loss(gates, idx, cfg.n_experts)
+    idx = idx.reshape(B, S, cfg.top_k)
+    w = w.reshape(B, S, cfg.top_k).astype(x.dtype)
+
+    E = cfg.n_experts
+    if shard_ctx is not None and shard_ctx.ep_size > 1:
+        ep = shard_ctx.ep_size
+        n_local = E // ep
+        cap = capacity(cfg, (B * S) // shard_ctx.batch_shards, E)
+        pe = {k_: p[k_] for k_ in ("wg", "wu", "wd")}
+
+        def blk(pe_l, x_l, idx_l, w_l):
+            r = jax.lax.axis_index(shard_ctx.model_axis)
+            out = expert_compute(cfg, pe_l, x_l, idx_l, w_l, r * n_local, n_local, cap)
+            return jax.lax.psum(out, shard_ctx.model_axis)
+
+        bspec = P(shard_ctx.batch_axes, None, None)
+        out = jax.shard_map(
+            blk,
+            mesh=shard_ctx.mesh,
+            in_specs=(P(shard_ctx.model_axis), bspec, bspec, bspec),
+            out_specs=bspec,
+        )(pe, x, idx, w)
+    else:
+        cap = capacity(cfg, B * S, E)
+        out = expert_compute(cfg, p, x, idx, w, 0, E, cap)
+
+    if cfg.n_shared:
+        sp = p["shared"]
+        dt = _dtype(cfg)
+        g = jax.nn.silu(x @ sp["wg"].astype(dt)) * (x @ sp["wu"].astype(dt))
+        out = out + g @ sp["wd"].astype(dt)
+    return out, aux
+
+
+def expert_load_stats(cfg: ModelConfig, gates: jax.Array, idx: jax.Array):
+    """Max/mean expert load and overflow fraction at the configured capacity
+    — the metric the PPoT router improves (benchmarks/moe_balance)."""
+    T = gates.shape[0]
+    k = idx.shape[-1]
+    counts = jnp.zeros((cfg.n_experts,)).at[idx.reshape(-1)].add(1.0)
+    cap = capacity(cfg, T, cfg.n_experts)
+    overflow = jnp.sum(jnp.clip(counts - cap, min=0)) / (T * k)
+    return {
+        "max_load": jnp.max(counts),
+        "mean_load": jnp.mean(counts),
+        "overflow_frac": overflow,
+        "capacity": cap,
+    }

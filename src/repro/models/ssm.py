@@ -1,0 +1,202 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Chunked SSD for training/prefill (intra-chunk quadratic form + inter-chunk
+state carry over a ``lax.scan``) and an O(1)-state recurrence for decode —
+this is what makes the ``long_500k`` cells runnable where full attention is
+skipped. The pure-jnp chunk math here is also the oracle for the
+``ssd_scan`` Pallas kernel.
+
+Projections are kept SEPARATE (z, x, B, C, dt) rather than packed so tensor
+parallelism can shard the head dimension cleanly: x/z/dt projections are
+column-sharded over the model axis (heads split), B/C are small and
+replicated, out_proj is row-sharded (psum combine) — see dist/sharding.py.
+
+Layout (n_groups = 1):
+  z,x : d → d_inner          dt : d → H          B,C : d → N
+  conv: depthwise width-4 over x channels (and over [B,C] channels)
+  SSD : h_t = a_t·h_{t-1} + dt_t·B_t⊗x_t ;  y_t = C_t·h_t + D⊙x_t
+  out : RMSNorm(y ⊙ silu(z)) @ out_proj
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import _dtype, _pdtype, dense_init
+
+
+def init_ssm(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 8)
+    d, di, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    return {
+        "z_proj": dense_init(ks[0], (d, di), _pdtype(cfg)),
+        "x_proj": dense_init(ks[1], (d, di), _pdtype(cfg)),
+        "b_proj": dense_init(ks[2], (d, N), _pdtype(cfg)),
+        "c_proj": dense_init(ks[3], (d, N), _pdtype(cfg)),
+        "dt_proj": dense_init(ks[4], (d, H), _pdtype(cfg)),
+        "conv_wx": dense_init(ks[5], (cfg.d_conv, di), _pdtype(cfg), scale=0.5),
+        "conv_bx": jnp.zeros((di,), _pdtype(cfg)),
+        "conv_wbc": dense_init(ks[6], (cfg.d_conv, 2 * N), _pdtype(cfg), scale=0.5),
+        "conv_bbc": jnp.zeros((2 * N,), _pdtype(cfg)),
+        "A_log": jnp.zeros((H,), jnp.float32),  # A = -exp(A_log) ∈ (-∞, 0)
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_scale": jnp.ones((di,), _pdtype(cfg)),
+        "out_proj": dense_init(ks[7], (di, d), _pdtype(cfg)),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv. x [B,S,C]; w [K,C]. state: last K-1 inputs for
+    decode ([B,K-1,C]); returns (y, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # [B, S+K-1, C]
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(K))
+    new_state = xp[:, -(K - 1) :, :]
+    return y + b[None, None, :], new_state
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int):
+    """Chunked SSD scan (pure jnp; Pallas oracle).
+
+    x  [B,S,H,P]  inputs per head
+    dt [B,S,H]    positive step sizes
+    A  [H]        negative per-head decay rates
+    Bm [B,S,N], Cm [B,S,N] shared across heads (n_groups=1)
+    Returns (y [B,S,H,P], final_state [B,H,N,P]).
+    """
+    Bsz, S, H, Pd = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    if S % Q:
+        Q = math.gcd(S, chunk)
+    nc = S // Q
+
+    xc = x.reshape(Bsz, nc, Q, H, Pd)
+    dtc = dt.reshape(Bsz, nc, Q, H)
+    bc = Bm.reshape(Bsz, nc, Q, N)
+    cc = Cm.reshape(Bsz, nc, Q, N)
+
+    la = dtc * A[None, None, None, :]  # [B,nc,Q,H] log-decay per step (≤0)
+    cum = jnp.cumsum(la, axis=2)  # within-chunk cumulative log decay
+
+    # ---- intra-chunk (quadratic attention-like form) ----------------------
+    # decay(q←k) = exp(cum_q − cum_k) for q ≥ k
+    dmask = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,nc,Q,Q,H]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    dec = jnp.where(tri[None, None, :, :, None], jnp.exp(dmask), 0.0)
+    cb = jnp.einsum("bcqn,bckn->bcqk", cc, bc, preferred_element_type=jnp.float32)
+    scores = cb[..., None] * dec  # [B,nc,Q,Q,H]
+    xdt = xc * dtc[..., None]
+    y_intra = jnp.einsum(
+        "bcqkh,bckhp->bcqhp", scores, xdt.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    # ---- chunk summary states ---------------------------------------------
+    # contribution of chunk c to its end-state: Σ_k exp(cum_end − cum_k) B_k ⊗ (dt_k x_k)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # [B,nc,Q,H]
+    chunk_state = jnp.einsum(
+        "bckn,bckh,bckhp->bchnp", bc, decay_to_end, xdt.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )  # [B,nc,H,N,P]
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # [B,nc,H] total chunk decay
+
+    # ---- inter-chunk state carry (scan over chunks) ------------------------
+    def carry_fn(h, inp):
+        cs, cd = inp  # [B,H,N,P], [B,H]
+        h_new = h * cd[..., None, None] + cs
+        return h_new, h  # emit state ENTERING this chunk
+
+    h0 = jnp.zeros((Bsz, H, N, Pd), jnp.float32)
+    hT, h_in = jax.lax.scan(
+        carry_fn,
+        h0,
+        (chunk_state.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    h_in = h_in.transpose(1, 0, 2, 3, 4)  # [B,nc,H,N,P] state entering chunk
+
+    # ---- inter-chunk output: y_t += C_t · exp(cum_t) · h_in ----------------
+    y_inter = jnp.einsum(
+        "bcqn,bcqh,bchnp->bcqhp", cc, jnp.exp(cum), h_in,
+        preferred_element_type=jnp.float32,
+    )
+
+    y = (y_intra + y_inter).reshape(Bsz, S, H, Pd)
+    return y, hT
+
+
+def ssd_decode_step(x, dt, A, Bm, Cm, h):
+    """Single-token recurrence. x [B,1,H,P], dt [B,1,H], Bm/Cm [B,1,N],
+    h [B,H,N,P] → (y [B,1,H,P], h')."""
+    a = jnp.exp(dt[:, 0, :] * A[None, :])  # [B,H]
+    upd = jnp.einsum("bn,bh,bhp->bhnp", Bm[:, 0], dt[:, 0], x[:, 0].astype(jnp.float32))
+    h_new = h * a[..., None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0], h_new)
+    return y[:, None], h_new
+
+
+def ssm_apply(cfg: ModelConfig, p, x, *, cache=None):
+    """x [B,S,d] → (out [B,S,d], new_cache). cache = dict(conv_x, conv_bc, h)."""
+    B, S, d = x.shape
+    di, N, H, Pd = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_headdim
+    dt_ = _dtype(cfg)
+
+    z = x @ p["z_proj"].astype(dt_)
+    xs = x @ p["x_proj"].astype(dt_)
+    bcs = jnp.concatenate(
+        [x @ p["b_proj"].astype(dt_), x @ p["c_proj"].astype(dt_)], axis=-1
+    )
+    dtr = x @ p["dt_proj"].astype(dt_)
+
+    cx = cache["conv_x"] if cache is not None else None
+    cbc = cache["conv_bc"] if cache is not None else None
+    xs, new_cx = _causal_conv(xs, p["conv_wx"].astype(dt_), p["conv_bx"].astype(dt_), cx)
+    bcs, new_cbc = _causal_conv(
+        bcs, p["conv_wbc"].astype(dt_), p["conv_bbc"].astype(dt_), cbc
+    )
+    xs = jax.nn.silu(xs)
+    bcs = jax.nn.silu(bcs)
+    Bm, Cm = jnp.split(bcs, [N], -1)
+
+    xh = xs.reshape(B, S, H, Pd)
+    dtv = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+
+    if cache is not None and S == 1:
+        y, h_new = ssd_decode_step(
+            xh, dtv, A, Bm.astype(jnp.float32), Cm.astype(jnp.float32), cache["h"]
+        )
+    else:
+        y, h_new = ssd_chunked(
+            xh, dtv, A, Bm.astype(jnp.float32), Cm.astype(jnp.float32), cfg.ssm_chunk
+        )
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, di)
+
+    # gated RMSNorm (mamba2's norm-before-out_proj)
+    g = y * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(jnp.square(g), axis=-1, keepdims=True)
+    g = g * jax.lax.rsqrt(ms + cfg.norm_eps) * p["norm_scale"].astype(jnp.float32)
+    out = g.astype(dt_) @ p["out_proj"].astype(dt_)
+
+    new_cache = (
+        {"conv_x": new_cx, "conv_bc": new_cbc, "h": h_new} if cache is not None else None
+    )
+    return out, new_cache
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int):
+    di, N, H, Pd = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_headdim
+    return {
+        "conv_x": jnp.zeros((batch, cfg.d_conv - 1, di), jnp.dtype(cfg.dtype)),
+        "conv_bc": jnp.zeros((batch, cfg.d_conv - 1, 2 * N), jnp.dtype(cfg.dtype)),
+        "h": jnp.zeros((batch, H, N, Pd), jnp.float32),
+    }

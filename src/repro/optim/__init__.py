@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamWConfig, AdamWState, init, schedule, update
+
+__all__ = ["AdamWConfig", "AdamWState", "init", "schedule", "update"]

@@ -1,0 +1,3 @@
+from repro.serving.router import RosellaRouter, SimulatedPool, run_simulation
+
+__all__ = ["RosellaRouter", "SimulatedPool", "run_simulation"]

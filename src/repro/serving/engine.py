@@ -1,0 +1,188 @@
+"""Continuous-batching decode engine (production serving substrate).
+
+One replica = one jitted batched decode step over a fixed pool of B slots,
+each slot holding an independent sequence + its KV/SSM cache row. Requests
+are admitted into free slots between steps (continuous batching — no
+head-of-line blocking on long generations), finished slots free their row,
+and every active slot advances one token per engine tick. The Rosella
+router (serving/router.py) sits in FRONT of engines; this module is the
+executor its "worker" abstraction maps onto.
+
+Key mechanics:
+  * per-slot positions: each batch row decodes at its own depth — the
+    batched step vmaps the single-sequence decode over the slot axis with
+    per-row cache lengths injected (`_set_len`);
+  * cache pytrees stay stacked across slots (one jit, zero retraces);
+    stacked-layer leaves carry the slot dim at axis 1 ([L, B, ...]),
+    non-stacked at axis 0 — all axis logic is path-based;
+  * admission replays the prompt through the same decode step (simple and
+    exercises one code path; chunked prefill is the obvious extension).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import api
+from repro.models.config import ModelConfig
+
+
+def _key(p) -> str:
+    return str(getattr(p, "key", getattr(p, "idx", p)))
+
+
+def _is_len(path) -> bool:
+    return bool(path) and _key(path[-1]) == "len"
+
+
+def _stacked(path) -> bool:
+    return bool(path) and _key(path[0]) == "layers"
+
+
+def _slot_axis(path) -> int:
+    return 1 if _stacked(path) else 0
+
+
+@dataclasses.dataclass
+class Slot:
+    rid: int = -1
+    remaining: int = 0
+    produced: "list[int]" = dataclasses.field(default_factory=list)
+
+
+class ContinuousBatchingEngine:
+    def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 4,
+                 max_len: int = 128):
+        if cfg.family == "encdec":
+            raise NotImplementedError("engine drives decoder-only families")
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.cache = api.init_cache(cfg, n_slots, max_len)
+        self.pos = jnp.zeros((n_slots,), jnp.int32)
+        self.last_tok = jnp.zeros((n_slots, 1), jnp.int32)
+        self.active = np.zeros(n_slots, bool)
+        self.slots = [Slot() for _ in range(n_slots)]
+        self._step = jax.jit(
+            lambda params, tokens, pos, cache: _batched_decode(
+                cfg, params, tokens, pos, cache
+            )
+        )
+
+    # -- slot management -----------------------------------------------------
+    def try_admit(self, rid: int, prompt: np.ndarray, n_new: int) -> bool:
+        free = [i for i in range(self.n_slots) if not self.active[i]]
+        if not free:
+            return False
+        i = free[0]
+        self.slots[i] = Slot(rid=rid, remaining=n_new)
+        self.pos = self.pos.at[i].set(0)
+        # feed prompt[:-1] through the shared decode step (advancing ONLY
+        # slot i); the LAST prompt token is left in last_tok so the next
+        # engine tick consumes it and emits the first generated token —
+        # exactly the sequential-decode schedule.
+        for tok in prompt[:-1]:
+            self.last_tok = self.last_tok.at[i, 0].set(int(tok))
+            logits, cache, pos = self._step(
+                self.params, self.last_tok, self.pos, self.cache
+            )
+            self.cache = _merge_rows(cache, self.cache, only=i)
+            self.pos = self.pos.at[i].set(pos[i])
+        self.last_tok = self.last_tok.at[i, 0].set(int(prompt[-1]))
+        self.active[i] = True
+        return True
+
+    # -- the engine tick -----------------------------------------------------
+    def step(self) -> "list[tuple[int, list[int]]]":
+        """Advance every active slot one token; returns finished
+        (rid, produced_tokens) pairs."""
+        if not self.active.any():
+            return []
+        logits, cache, pos = self._step(
+            self.params, self.last_tok, self.pos, self.cache
+        )
+        act = jnp.asarray(self.active)
+        self.cache = _merge_rows(cache, self.cache, mask=act)
+        self.pos = jnp.where(act, pos, self.pos)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        self.last_tok = jnp.where(act[:, None], nxt[:, None], self.last_tok)
+
+        done = []
+        nxt_np = np.asarray(nxt)
+        for i in range(self.n_slots):
+            if not self.active[i]:
+                continue
+            s = self.slots[i]
+            s.produced.append(int(nxt_np[i]))
+            s.remaining -= 1
+            if s.remaining <= 0 or int(self.pos[i]) >= self.max_len - 1:
+                done.append((s.rid, s.produced))
+                self.active[i] = False
+                self.slots[i] = Slot()
+        return done
+
+    @property
+    def utilization(self) -> float:
+        return float(self.active.mean())
+
+
+def _batched_decode(cfg: ModelConfig, params, tokens, pos, cache):
+    """One decode step with PER-ROW positions: vmap the single-sequence
+    decode over the slot axis; each row's cache length is its own ``pos``."""
+
+    def cache_in_axis(path, a):
+        return None if _is_len(path) else _slot_axis(path)
+
+    in_axes_cache = jax.tree_util.tree_map_with_path(cache_in_axis, cache)
+
+    def one(tok, p, cache_row):
+        c = jax.tree_util.tree_map_with_path(
+            lambda pt, a: a if _is_len(pt) else jnp.expand_dims(a, _slot_axis(pt)),
+            cache_row,
+        )
+        c = jax.tree_util.tree_map_with_path(
+            lambda pt, a: jnp.full(a.shape, p, a.dtype) if _is_len(pt) else a, c
+        )
+        logits, c2 = api.decode_fn(
+            cfg, params, {"tokens": tok[None], "pos": p}, c
+        )
+        c2 = jax.tree_util.tree_map_with_path(
+            lambda pt, a: a if _is_len(pt) else jnp.squeeze(a, _slot_axis(pt)),
+            c2,
+        )
+        return logits[0], c2
+
+    logits, rows = jax.vmap(one, in_axes=(0, 0, in_axes_cache))(
+        tokens, pos, cache
+    )
+    # reassemble: mapped-out leaves have the slot dim at axis 0; move the
+    # stacked-layer leaves' slot dim back to axis 1, keep original len
+    new_cache = jax.tree_util.tree_map_with_path(
+        lambda pt, new, old: old if _is_len(pt)
+        else (jnp.moveaxis(new, 0, 1) if _stacked(pt) else new),
+        rows, cache,
+    )
+    return logits, new_cache, pos + 1
+
+
+def _merge_rows(new, old, *, only: int | None = None, mask=None):
+    """Take row(s) from ``new``: a single slot (admission) or an active-mask
+    (tick); untouched rows keep ``old``. len leaves keep old (unused)."""
+
+    def fn(path, n, o):
+        if _is_len(path):
+            return o
+        ax = _slot_axis(path)
+        if only is not None:
+            idx = (slice(None),) * ax + (only,)
+            return o.at[idx].set(n[idx])
+        shape = [1] * n.ndim
+        shape[ax] = -1
+        m = mask.reshape(shape)
+        return jnp.where(m, n, o)
+
+    return jax.tree_util.tree_map_with_path(fn, new, old)

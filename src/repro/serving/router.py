@@ -1,0 +1,151 @@
+"""Rosella serving router — the paper's deployment (Fig. 1/Fig. 7) mapped to
+model serving: N replica groups of the same model run on heterogeneous
+slices (different chip generations, or slices degraded by co-tenants — the
+paper's Fig. 2). The router is the Rosella scheduler:
+
+  * requests arrive → arrival estimator updates λ̂,
+  * PPoT-SQ(2) picks a replica per request (probe 2 ∝ μ̂, shorter queue),
+  * completions report service times → LEARNER-AGGREGATE refreshes μ̂,
+  * benchmark requests (canned prompts) keep μ̂ fresh on idle replicas
+    (LEARNER-DISPATCHER) at rate c0(μ̄ − λ̂),
+  * multiple router shards sync μ̂ via pmean (paper §5).
+
+The replica execution engine is pluggable: ``ReplicaPool`` drives real
+``decode_fn`` steps for in-process replicas (examples/serve_rosella.py);
+``SimulatedPool`` models heterogeneous replica speeds for benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import policies as pol
+from repro.core.scheduler import RosellaScheduler
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    arrival: float
+    tokens: np.ndarray | None = None
+    n_decode: int = 8  # decode steps the request needs
+    fake: bool = False
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    replica: int
+    t_start: float
+    t_done: float
+    fake: bool = False
+
+    @property
+    def service_time(self) -> float:
+        return self.t_done - self.t_start
+
+
+class SimulatedPool:
+    """Replica pool with controllable speeds — event-clock execution.
+    Speed s means a request of cost c takes c/s seconds of replica time."""
+
+    def __init__(self, speeds):
+        self.speeds = np.asarray(speeds, float)
+        self.free_at = np.zeros(len(speeds))
+
+    def submit(self, replica: int, req: Request, now: float, cost: float) -> Completion:
+        start = max(now, self.free_at[replica])
+        dur = cost / self.speeds[replica]
+        done = start + dur
+        self.free_at[replica] = done
+        return Completion(req.rid, replica, start, done, fake=req.fake)
+
+    def set_speeds(self, speeds):
+        self.speeds = np.asarray(speeds, float)
+
+
+class RosellaRouter:
+    """Host-side router: wraps the jitted Rosella scheduler state machine."""
+
+    def __init__(self, n_replicas: int, mu_bar: float, *, policy: str = pol.PPOT_SQ2,
+                 c0: float = 0.1, c_window: float = 10.0, seed: int = 0):
+        self.sched = RosellaScheduler(
+            n_replicas, mu_bar, c0=c0, c_window=c_window, seed=seed
+        )
+        self.policy = policy
+        self.n = n_replicas
+
+    def route(self, now: float, k: int = 1) -> np.ndarray:
+        return np.asarray(self.sched.schedule(now, k, policy=self.policy))
+
+    def complete(self, completions: "list[Completion]"):
+        if not completions:
+            return
+        workers = np.array([c.replica for c in completions], np.int32)
+        times = np.array([c.service_time for c in completions], np.float32)
+        now = max(c.t_done for c in completions)
+        self.sched.report(workers, times, now)
+
+    def benchmark_requests(self, now: float) -> np.ndarray:
+        js = np.asarray(self.sched.fake_jobs(now))
+        return js[js >= 0]
+
+    @property
+    def mu_hat(self) -> np.ndarray:
+        return np.asarray(self.sched.mu_hat)
+
+
+def run_simulation(
+    router: RosellaRouter,
+    pool: SimulatedPool,
+    *,
+    arrival_rate: float,
+    horizon: float,
+    request_cost: float = 1.0,
+    speed_schedule: "list[tuple[float, np.ndarray]] | None" = None,
+    seed: int = 0,
+):
+    """Closed-loop serving simulation: Poisson arrivals, Rosella routing,
+    completion telemetry fed back. Returns response-time array + router
+    estimate trace. ``speed_schedule``: [(t, speeds), ...] volatility."""
+    rng = np.random.RandomState(seed)
+    t, rid, seq = 0.0, 0, 0
+    responses = []
+    mu_trace = []
+    pending_events: list = []  # (t_done, seq, Completion)
+    sched_i = 0
+
+    while t < horizon:
+        t += rng.exponential(1.0 / arrival_rate)
+        if speed_schedule is not None:
+            while sched_i < len(speed_schedule) and speed_schedule[sched_i][0] <= t:
+                pool.set_speeds(speed_schedule[sched_i][1])
+                sched_i += 1
+        # flush completions that happened before this arrival
+        done_now = []
+        while pending_events and pending_events[0][0] <= t:
+            done_now.append(heapq.heappop(pending_events)[2])
+        router.complete(done_now)
+
+        # benchmark (fake) requests — cheap canned prompts
+        for j in router.benchmark_requests(t):
+            fake = Request(rid=-1, arrival=t, fake=True)
+            comp = pool.submit(int(j), fake, t, request_cost * 0.25)
+            heapq.heappush(pending_events, (comp.t_done, seq, comp))
+            seq += 1
+
+        req = Request(rid=rid, arrival=t)
+        rid += 1
+        cost = request_cost * rng.exponential(1.0)
+        j = int(router.route(t, 1)[0])
+        comp = pool.submit(j, req, t, cost)
+        heapq.heappush(pending_events, (comp.t_done, seq, comp))
+        seq += 1
+        responses.append(comp.t_done - t)
+        mu_trace.append(router.mu_hat.copy())
+
+    return np.asarray(responses), np.asarray(mu_trace)

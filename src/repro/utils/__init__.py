@@ -1,0 +1,3 @@
+from repro.utils.struct import pytree_dataclass
+
+__all__ = ["pytree_dataclass"]

@@ -1,0 +1,32 @@
+"""Tiny pytree-dataclass helper (no flax dependency).
+
+``pytree_dataclass`` registers a frozen dataclass with JAX so instances flow
+through jit/scan/vmap. Fields annotated in ``static_fields`` become aux data
+(hashable, trigger retrace on change).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+
+
+def pytree_dataclass(cls=None, *, static_fields: tuple[str, ...] = ()):
+    """Decorator: frozen dataclass registered as a JAX pytree."""
+
+    def wrap(c):
+        c = dataclasses.dataclass(frozen=True)(c)
+        data_fields = [f.name for f in dataclasses.fields(c) if f.name not in static_fields]
+        meta_fields = [f.name for f in dataclasses.fields(c) if f.name in static_fields]
+        jax.tree_util.register_dataclass(c, data_fields=data_fields, meta_fields=meta_fields)
+
+        def replace(self, **kw) -> Any:
+            return dataclasses.replace(self, **kw)
+
+        c.replace = replace
+        return c
+
+    if cls is None:
+        return wrap
+    return wrap(cls)

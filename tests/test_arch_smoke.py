@@ -1,0 +1,131 @@
+"""Per-architecture smoke tests: reduced config of the same family wiring,
+one forward + one train-gradient step on CPU, asserting shapes and no NaNs.
+(The FULL configs are exercised only via the dry-run — no allocation here.)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import api
+
+
+def _batch(cfg, B=2, S=64, key=0):
+    k = jax.random.PRNGKey(key)
+    b = {
+        "tokens": jax.random.randint(k, (B, S), 0, cfg.vocab),
+        "labels": jax.random.randint(k, (B, S), 0, cfg.vocab),
+        "mask": jnp.ones((B, S), jnp.float32),
+    }
+    if cfg.family == "vlm":
+        b["patch_embeds"] = jnp.ones((B, cfg.n_patches, cfg.d_model), jnp.float32)
+    if cfg.family == "encdec":
+        b["frame_embeds"] = jnp.ones((B, cfg.enc_len, cfg.d_model), jnp.float32)
+    return b
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_arch_smoke_forward_and_grad(arch):
+    cfg = configs.reduced(configs.get_config(arch))
+    assert cfg.family == configs.get_config(arch).family
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+
+    def loss(p):
+        l, _ = api.loss_fn(cfg, p, batch, rng=jax.random.PRNGKey(1))
+        return l
+
+    val, grads = jax.jit(jax.value_and_grad(loss))(params)
+    assert np.isfinite(float(val)), f"{arch}: NaN loss"
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    )
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0, f"{arch}: bad grads"
+
+
+@pytest.mark.parametrize("arch", ["mamba2-370m", "hymba-1.5b", "smollm-360m",
+                                  "whisper-medium"])
+def test_arch_smoke_decode(arch):
+    cfg = configs.reduced(configs.get_config(arch))
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 8
+    cache = api.init_cache(cfg, B, 32)
+    batch = {"tokens": jnp.zeros((B, 1), jnp.int32), "pos": jnp.int32(0)}
+    if cfg.family == "encdec":
+        batch["enc_out"] = jnp.ones((B, cfg.enc_len, cfg.d_model), jnp.float32)
+    logits, cache = api.decode_fn(cfg, params, batch, cache)
+    assert logits.shape == (B, 1, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "whisper-medium", "pixtral-12b"])
+def test_prefill_matches_forward_last_position(arch):
+    cfg = configs.reduced(configs.get_config(arch))
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg, B=2, S=32)
+    logits = api.prefill(cfg, params, batch)
+    assert logits.shape == (2, 1, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    if cfg.family == "dense":
+        from repro.models import lm as LM
+
+        hidden, _ = LM.forward(cfg, params, batch["tokens"])
+        full = LM.logits_head(cfg, params, hidden)
+        np.testing.assert_allclose(
+            np.asarray(logits[:, 0]), np.asarray(full[:, -1]), atol=1e-4, rtol=1e-4
+        )
+
+
+def test_int8_kv_cache_decode_close_to_fp():
+    """kv_quant decode must track the full-precision forward (≤5% rel)."""
+    import dataclasses
+
+    from repro.models import lm as LM
+
+    cfg = configs.reduced(configs.get_config("smollm-360m"))
+    params = api.init_params(cfg, jax.random.PRNGKey(1))
+    toks = jax.random.randint(jax.random.PRNGKey(0), (2, 16), 0, cfg.vocab)
+    hidden, _ = LM.forward(cfg, params, toks)
+    full = LM.logits_head(cfg, params, hidden)
+
+    cfg_q = dataclasses.replace(cfg, kv_quant=True)
+    cache = api.init_cache(cfg_q, 2, 16)
+    outs = []
+    for t in range(16):
+        lg, cache = api.decode_fn(
+            cfg_q, params, {"tokens": toks[:, t:t + 1], "pos": jnp.int32(t)}, cache
+        )
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, 1)
+    rel = float(jnp.max(jnp.abs(full - dec)) / jnp.max(jnp.abs(full)))
+    assert rel < 0.05, rel
+
+
+def test_full_config_exactness():
+    """The registry must carry the EXACT assigned numbers."""
+    c = configs.get_config("qwen3-32b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) == (
+        64, 5120, 64, 8, 25600, 151936) and c.qk_norm
+    c = configs.get_config("moonshot-v1-16b-a3b")
+    assert (c.n_experts, c.top_k, c.moe_dff, c.vocab) == (64, 6, 1408, 163840)
+    c = configs.get_config("phi3.5-moe-42b-a6.6b")
+    assert (c.n_experts, c.top_k, c.moe_dff, c.vocab) == (16, 2, 6400, 32064)
+    c = configs.get_config("mamba2-370m")
+    assert (c.n_layers, c.d_model, c.ssm_state, c.vocab) == (48, 1024, 128, 50280)
+    c = configs.get_config("glm4-9b")
+    assert (c.n_layers, c.d_model, c.n_kv_heads, c.d_ff, c.vocab) == (
+        40, 4096, 2, 13696, 151552)
+    c = configs.get_config("smollm-360m")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) == (
+        32, 960, 15, 5, 2560, 49152)
+    c = configs.get_config("chatglm3-6b")
+    assert (c.n_layers, c.d_model, c.d_ff, c.vocab) == (28, 4096, 13696, 65024)
+    c = configs.get_config("hymba-1.5b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.ssm_state, c.vocab) == (
+        32, 1600, 25, 16, 32001)
+    c = configs.get_config("pixtral-12b")
+    assert (c.n_layers, c.d_model, c.d_ff, c.vocab) == (40, 5120, 14336, 131072)
+    c = configs.get_config("whisper-medium")
+    assert (c.n_enc_layers, c.d_model, c.n_heads, c.d_ff, c.vocab) == (
+        24, 1024, 16, 4096, 51865)

@@ -1,0 +1,100 @@
+"""Performance-learner tests: Lemma 5 properties + estimator convergence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import estimator as est
+from repro.core import learner as lrn
+from repro.core import metrics as M
+from repro.core import policies as pol
+from repro.core import simulator as sim
+
+
+def test_arrival_estimator_converges():
+    s = est.init_arrival_estimator(32)
+    lam = 5.0
+    rng = np.random.RandomState(0)
+    t = 0.0
+    for _ in range(200):
+        t += rng.exponential(1 / lam)
+        s = est.observe_arrival(s, jnp.float32(t))
+    assert abs(float(s.lam_hat) - lam) / lam < 0.35
+
+
+def test_ema_estimator_converges():
+    s = est.init_ema_arrival()
+    lam = 8.0
+    rng = np.random.RandomState(1)
+    t = 0.0
+    for _ in range(500):
+        t += rng.exponential(1 / lam)
+        s = est.observe_arrival_ema(s, jnp.float32(t), window=64)
+    assert abs(float(est.lam_hat_ema(s)) - lam) / lam < 0.35
+
+
+def test_learner_underestimates_and_converges():
+    """Lemma 5(ii): (1−ε)μ ≤ μ̂ ≤ μ for well-sampled workers."""
+    cfg = lrn.default_learner_config(mu_bar=10.0, c_window=16.0)
+    state = lrn.init_learner(3, cfg)
+    rng = np.random.RandomState(2)
+    mus = np.array([1.0, 3.0, 8.0])
+    t = 0.0
+    for i in range(600):
+        w = i % 3
+        st = rng.exponential(1 / mus[w])
+        t += st / 3
+        state = lrn.record_completion(state, jnp.int32(w), jnp.float32(st), jnp.float32(t))
+    state = lrn.refresh_estimates(state, cfg, jnp.float32(5.0), jnp.float32(t))
+    mu_hat = np.asarray(state.mu_hat)
+    for w in range(3):
+        assert 0.5 * mus[w] < mu_hat[w] < 1.15 * mus[w], (w, mu_hat)
+
+
+def test_learner_dead_worker_cutoff():
+    """Lemma 5(i): a worker with no recent samples within the horizon → 0."""
+    cfg = lrn.default_learner_config(mu_bar=10.0, c_window=8.0)
+    state = lrn.init_learner(2, cfg)
+    t = 0.0
+    for i in range(100):
+        st = 0.5
+        t += 0.5
+        state = lrn.record_completion(state, jnp.int32(0), jnp.float32(st), jnp.float32(t))
+    # worker 1 never completes anything; far-future refresh kills it
+    state = lrn.refresh_estimates(state, cfg, jnp.float32(5.0), jnp.float32(t + 1e5))
+    mu_hat = np.asarray(state.mu_hat)
+    assert mu_hat[1] == 0.0
+    assert mu_hat[0] == 0.0  # worker 0's window is also stale by then
+
+    state2 = lrn.refresh_estimates(state, cfg, jnp.float32(5.0), jnp.float32(t))
+    assert np.asarray(state2.mu_hat)[0] > 0.5  # fresh worker 0 recovers
+
+
+def test_fake_job_rate_clips():
+    cfg = lrn.default_learner_config(mu_bar=10.0)
+    assert float(lrn.fake_job_rate(cfg, jnp.float32(4.0))) == pytest_approx(0.6)
+    assert float(lrn.fake_job_rate(cfg, jnp.float32(15.0))) == 0.0
+
+
+def pytest_approx(x, rel=1e-5):
+    import pytest
+
+    return pytest.approx(x, rel=rel)
+
+
+def test_sync_estimates_mean():
+    m = jnp.array([[1.0, 2.0], [3.0, 4.0]])
+    np.testing.assert_allclose(np.asarray(lrn.sync_estimates(m)), [2.0, 3.0])
+
+
+def test_end_to_end_learning_in_simulator():
+    """Cold-start learner discovers a 6× fast worker (R2 integration)."""
+    mu = [1.0] * 9 + [6.0]
+    cfg = sim.SimConfig(n=10, policy=pol.PPOT_SQ2, rounds=50_000,
+                        use_learner=True, use_fake_jobs=True)
+    params = sim.make_params(lam=12.0, mu=mu)
+    final, trace = sim.simulate(cfg, params, jax.random.PRNGKey(3))
+    err = M.estimate_error(trace, np.array(mu))
+    assert err[-1] < 0.15, err[-1]
+    assert err[-1] < err[:200].mean() / 3
+    mu_hat = np.asarray(final.learner.mu_hat)
+    assert mu_hat[9] > 3 * mu_hat[:9].mean()

@@ -1,0 +1,118 @@
+"""Scheduling-policy unit tests, incl. the paper's worked Examples 1–3."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import metrics as M
+from repro.core import policies as pol
+from repro.core import simulator as sim
+from repro.core import theory as TH
+
+
+def _counts(policy, mu_hat, q, n_draws=4000, mu_true=None, seed=0):
+    cfg = pol.default_policy_config()
+    mu_true = mu_hat if mu_true is None else mu_true
+    fn = jax.jit(jax.vmap(
+        lambda k: pol.get_policy(policy)(k, q, mu_hat, mu_true, cfg)
+    ))
+    keys = jax.random.split(jax.random.PRNGKey(seed), n_draws)
+    return np.bincount(np.asarray(fn(keys)), minlength=len(mu_hat))
+
+
+def test_uniform_is_uniform():
+    c = _counts(pol.UNIFORM, jnp.ones(8), jnp.zeros(8, jnp.int32))
+    assert (np.abs(c / c.sum() - 1 / 8) < 0.03).all()
+
+
+def test_pss_proportional():
+    mu = jnp.array([1.0, 2.0, 4.0, 1.0])
+    c = _counts(pol.PSS, mu, jnp.zeros(4, jnp.int32))
+    frac = c / c.sum()
+    np.testing.assert_allclose(frac, np.asarray(mu) / 8.0, atol=0.03)
+
+
+def test_pss_zero_mu_fallback_uniform():
+    c = _counts(pol.PSS, jnp.zeros(5), jnp.zeros(5, jnp.int32))
+    assert (c > 0).all()
+
+
+def test_ppot_sq2_prefers_short_queue():
+    mu = jnp.ones(2)
+    q = jnp.array([10, 0], jnp.int32)
+    c = _counts(pol.PPOT_SQ2, mu, q)
+    # candidates (0,1)/(1,0) both choose 1; (1,1) chooses 1; only (0,0)→0
+    assert c[1] / c.sum() > 0.70
+
+
+def test_ppot_ll2_uses_waiting_time():
+    # worker 0: q=2 but 10× faster → wait 0.3; worker 1: q=1, wait 2.0
+    mu = jnp.array([10.0, 1.0])
+    q = jnp.array([2, 1], jnp.int32)
+    c_ll2 = _counts(pol.PPOT_LL2, mu, q)
+    c_sq2 = _counts(pol.PPOT_SQ2, mu, q)
+    assert c_ll2[0] > c_ll2[1]  # LL2 picks the fast long queue
+    # SQ2 picks worker 1 whenever it is a candidate:
+    # P = 1 − (10/11)² ≈ 0.17 — LL2 near-never does
+    assert c_sq2[1] / c_sq2.sum() > 0.10
+    assert c_sq2[1] > 2 * c_ll2[1]
+
+
+def test_halo_ignores_estimates_uses_truth():
+    mu_hat = jnp.array([1.0, 1.0])
+    mu_true = jnp.array([1.0, 9.0])
+    c = _counts(pol.HALO, mu_hat, jnp.zeros(2, jnp.int32), mu_true=mu_true)
+    assert c[1] / c.sum() > 0.8
+
+
+def test_schedule_batch_updates_queue_view():
+    key = jax.random.PRNGKey(0)
+    q = jnp.zeros(4, jnp.int32)
+    mu = jnp.ones(4)
+    w, q2 = pol.schedule_batch(pol.PPOT_SQ2, key, q, mu, mu,
+                               pol.default_policy_config(), 16)
+    assert int(q2.sum()) == 16
+    assert w.shape == (16,)
+
+
+def test_sparrow_batch_places_on_probed_least_loaded():
+    key = jax.random.PRNGKey(1)
+    q = jnp.array([0, 100, 100, 100, 100, 100, 100, 100], jnp.int32)
+    mu = jnp.ones(8)
+    w, _ = pol.sparrow_batch(key, q, mu, pol.default_policy_config(), 4)
+    # with 8 probes over 8 workers, worker 0 is probed w.h.p. and wins
+    assert (np.asarray(w) == 0).sum() >= 1
+
+
+# --- the paper's Examples 1-3 as end-to-end simulations ---------------------
+
+EX_MU = [1.0] * 9 + [6.0]
+EX_LAM = 14.0
+
+
+def _run_example(policy, rounds=30_000):
+    cfg = sim.SimConfig(n=10, policy=policy, rounds=rounds,
+                        use_learner=False, use_fake_jobs=False)
+    params = sim.make_params(lam=EX_LAM, mu=EX_MU)
+    _, trace = sim.simulate(cfg, params, jax.random.PRNGKey(7))
+    return M.analyze(trace, n=10, warmup_frac=0.2)
+
+
+def test_example1_uniform_nonstationary():
+    m = _run_example(pol.UNIFORM)
+    assert TH.stationarity_check(EX_LAM, np.array(EX_MU), "uniform")["stationary"] is False
+    assert m.final_q[:9].sum() > 500  # slow workers blow up
+
+
+def test_example2_pot_nonstationary():
+    m = _run_example(pol.POT)
+    assert TH.stationarity_check(EX_LAM, np.array(EX_MU), "pot")["stationary"] is False
+    assert m.final_q[:9].sum() > 300
+
+
+def test_example3_ppot_stationary_and_ll2_congests_fast():
+    m_sq2 = _run_example(pol.PPOT_SQ2)
+    m_ll2 = _run_example(pol.PPOT_LL2)
+    assert m_sq2.final_q.sum() < 60  # bounded queues
+    # LL2 stacks the fast worker (paper Example 3)
+    assert m_ll2.final_q[9] > 2 * m_sq2.final_q[9]

@@ -1,0 +1,126 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import policies as pol
+from repro.core import simulator as sim
+from repro.dist import compression
+from repro.dist.straggler import StragglerPlanner
+from repro.kernels.ppot_dispatch import ref as pd_ref
+
+_small = dict(max_examples=25, deadline=None)
+
+
+@given(
+    mu=st.lists(st.floats(0.0, 100.0), min_size=2, max_size=32),
+    seed=st.integers(0, 2**30),
+)
+@settings(**_small)
+def test_policy_always_returns_valid_worker(mu, seed):
+    """Every policy returns an index in range for ANY μ̂ (incl. all-zero)."""
+    mu = jnp.asarray(mu, jnp.float32)
+    n = mu.shape[0]
+    q = jnp.zeros((n,), jnp.int32)
+    cfg = pol.default_policy_config()
+    for name in pol.ALL_POLICIES:
+        j = pol.get_policy(name)(jax.random.PRNGKey(seed), q, mu, mu, cfg)
+        assert 0 <= int(j) < n, (name, int(j))
+
+
+@given(
+    weights=st.lists(st.floats(0.0, 50.0), min_size=2, max_size=64),
+    us=st.lists(st.floats(0.0, 0.999999), min_size=1, max_size=64),
+)
+@settings(**_small)
+def test_inverse_cdf_sampling_in_support(weights, us):
+    """The inverse-CDF index always lands on a worker with weight > 0
+    (unless all weights are zero → uniform fallback)."""
+    w = jnp.asarray(weights, jnp.float32)
+    cdf = pd_ref.make_cdf(w)
+    u = jnp.asarray(us, jnp.float32)
+    j = np.asarray(jnp.sum(cdf[None, :] <= u[:, None], axis=1))
+    j = np.clip(j, 0, len(weights) - 1)
+    wn = np.asarray(w)
+    if wn.sum() > 0:
+        assert (wn[j] > 0).all()
+
+
+@given(seed=st.integers(0, 2**30), lam=st.floats(1.0, 20.0),
+       n=st.integers(2, 12))
+@settings(max_examples=8, deadline=None)
+def test_simulator_conservation(seed, lam, n):
+    """Work conservation: arrivals·tasks == completions + final queue; queues
+    never negative; time strictly increases."""
+    rng = np.random.RandomState(seed % 1000)
+    mu = rng.uniform(0.5, 3.0, size=n)
+    cfg = sim.SimConfig(n=n, policy=pol.PPOT_SQ2, rounds=4000,
+                        use_learner=True, use_fake_jobs=True)
+    params = sim.make_params(lam=lam, mu=mu)
+    final, trace = sim.simulate(cfg, params, jax.random.PRNGKey(seed))
+    code = np.asarray(trace["code"])
+    tasks_in = np.asarray(trace["n_tasks"])[code == sim.EV_ARRIVAL].sum()
+    real_done = (code == sim.EV_REAL_DONE).sum()
+    assert tasks_in == real_done + int(np.asarray(final.q_real).sum())
+    fake_in = (code == sim.EV_FAKE_DISPATCH).sum()
+    fake_done = (code == sim.EV_FAKE_DONE).sum()
+    assert fake_in == fake_done + int(np.asarray(final.q_fake).sum())
+    q = np.asarray(trace["q_real"])
+    assert (q >= 0).all()
+    now = np.asarray(trace["now"])
+    # f32 time accumulation: a tiny dt can round to no-op late in the run
+    assert (np.diff(now) >= 0).all()
+
+
+@given(
+    x=st.lists(st.floats(-1e3, 1e3, allow_nan=False), min_size=1, max_size=256),
+    seed=st.integers(0, 2**30),
+)
+@settings(**_small)
+def test_compression_error_bound(x, seed):
+    """int8 quantize/dequantize: |err| ≤ scale (1 ulp of the int8 grid +
+    stochastic rounding noise)."""
+    arr = jnp.asarray(x, jnp.float32)
+    q, scale = compression.compress(arr, jax.random.PRNGKey(seed))
+    back = compression.decompress(q, scale)
+    err = np.abs(np.asarray(back) - np.asarray(arr))
+    assert (err <= float(scale) * 1.0 + 1e-6).all()
+
+
+def test_compression_unbiased():
+    x = jnp.full((20000,), 0.3)
+    outs = []
+    for s in range(5):
+        q, scale = compression.compress(x, jax.random.PRNGKey(s))
+        outs.append(np.asarray(compression.decompress(q, scale)).mean())
+    assert abs(np.mean(outs) - 0.3) < 0.01
+
+
+@given(
+    speeds=st.lists(st.floats(0.1, 4.0), min_size=2, max_size=16),
+    total=st.integers(8, 128),
+)
+@settings(**_small)
+def test_straggler_plan_conserves_microbatches(speeds, total):
+    p = StragglerPlanner(len(speeds), total)
+    p.mu_hat = np.asarray(speeds)
+    alloc = p.plan()
+    # exact conservation at the reachable total (every worker keeps ≥ 1)
+    assert alloc.sum() == max(total, len(speeds)), (alloc, total)
+    assert (alloc >= 1).all()  # every live worker participates
+
+
+@given(seed=st.integers(0, 2**30))
+@settings(**_small)
+def test_ppot_route_valid_and_normalized(seed):
+    from repro.models import moe as MOE
+    from repro.models.config import ModelConfig
+
+    cfg = ModelConfig(arch="t", family="moe", n_layers=1, d_model=8,
+                      n_heads=1, n_kv_heads=1, d_head=8, d_ff=0, vocab=8,
+                      n_experts=8, top_k=2, moe_dff=8)
+    gates = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(seed), (64, 8)))
+    idx, w = MOE.ppot_route(cfg, gates, jax.random.PRNGKey(seed + 1))
+    assert ((np.asarray(idx) >= 0) & (np.asarray(idx) < 8)).all()
+    np.testing.assert_allclose(np.asarray(w).sum(-1), 1.0, atol=1e-5)

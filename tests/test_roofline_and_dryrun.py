@@ -1,0 +1,112 @@
+"""Roofline cost-model validation + dry-run artifact integrity."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.roofline import (
+    CellCost,
+    _kinds,
+    _layer_fwd_flops,
+    analytic_cost,
+    analytic_memory_gib,
+)
+from repro.configs import ARCHS, SHAPES, get_config, shape_applicable
+from repro.models import api
+from repro.models.config import ModelConfig
+
+ART = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "artifacts", "dryrun_baseline.json")
+
+
+def test_analytic_flops_vs_hlo_unrolled():
+    """The analytic model must agree with XLA cost analysis within 15% on an
+    UNROLLED config (where cost_analysis counts everything)."""
+    cfg = ModelConfig(arch="t", family="dense", n_layers=3, d_model=128,
+                      n_heads=4, n_kv_heads=2, d_head=32, d_ff=512,
+                      vocab=1024, dtype="float32", param_dtype="float32",
+                      remat="none", attn_chunk=4096, loss_chunk=4096,
+                      scan_layers=False)
+    B, S = 2, 256
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.zeros((B, S), jnp.int32),
+             "labels": jnp.zeros((B, S), jnp.int32),
+             "mask": jnp.ones((B, S))}
+    hlo_flops = (
+        jax.jit(lambda p: api.loss_fn(cfg, p, batch)[0])
+        .lower(params).compile().cost_analysis()["flops"]
+    )
+    analytic = (
+        sum(n * _layer_fwd_flops(cfg, S / 2, k) for k, n in _kinds(cfg))
+        + 2 * cfg.d_model * cfg.vocab
+    ) * B * S
+    assert abs(analytic - hlo_flops) / hlo_flops < 0.15, (analytic, hlo_flops)
+
+
+def test_cell_terms_sane():
+    c = analytic_cost("qwen3-32b", "train_4k", "single_pod")
+    t = c.terms()
+    assert t["t_compute_s"] > 0 and t["t_memory_s"] > 0
+    assert 0 < t["roofline_frac"] <= 1.0
+    assert 0 < t["useful_frac"] <= 1.2
+
+
+def test_decode_is_memory_bound():
+    """Classic result the model must reproduce: single-token decode reads
+    every weight → memory-dominated."""
+    for arch in ("qwen3-32b", "glm4-9b", "chatglm3-6b"):
+        t = analytic_cost(arch, "decode_32k", "single_pod").terms()
+        assert t["dominant"] == "memory", (arch, t)
+
+
+def test_train_flops_track_6nd():
+    c = analytic_cost("glm4-9b", "train_4k", "single_pod")
+    # useful_frac = 6ND / HLO-modelled flops ∈ (0.5, 1.05) for 4k dense train
+    assert 0.5 < c.terms()["useful_frac"] <= 1.05
+
+
+def test_memory_model_monotone_in_microbatches():
+    a = analytic_memory_gib("qwen3-32b", "train_4k", "single_pod", microbatches=4)
+    b = analytic_memory_gib("qwen3-32b", "train_4k", "single_pod", microbatches=16)
+    assert b < a
+
+
+@pytest.mark.skipif(not os.path.exists(ART), reason="dry-run artifacts absent")
+def test_dryrun_artifact_complete_and_green():
+    """Every (arch × shape × mesh) cell is either ok or a documented skip;
+    the multi-pod mesh compiled for every applicable cell."""
+    with open(ART) as f:
+        res = json.load(f)
+    for arch in ARCHS:
+        for shape in SHAPES:
+            cfg = get_config(arch)
+            applicable, why = shape_applicable(cfg, shape)
+            for mesh in ("single_pod", "multi_pod"):
+                key = f"{arch}|{shape}|{mesh}"
+                assert key in res, f"missing cell {key}"
+                status = res[key]["status"]
+                if applicable:
+                    assert status == "ok", f"{key}: {status}"
+                    assert res[key]["chips"] == (512 if mesh == "multi_pod" else 256)
+                    assert res[key]["flops_per_device"] > 0
+                else:
+                    assert status.startswith("skipped"), key
+
+
+@pytest.mark.skipif(not os.path.exists(ART), reason="dry-run artifacts absent")
+def test_dryrun_collectives_present_where_expected():
+    """TP/EP cells must actually contain collectives in the compiled HLO
+    (sharding is real, not silently replicated)."""
+    with open(ART) as f:
+        res = json.load(f)
+    for key in ("qwen3-32b|train_4k|single_pod",
+                "moonshot-v1-16b-a3b|train_4k|single_pod"):
+        colls = res[key]["collective_bytes_per_device"]
+        assert colls.get("total", 0) > 1e6, (key, colls)
+    # multi-pod train must communicate across pods (more groups, sync grads)
+    sp = res["glm4-9b|train_4k|single_pod"]["collective_bytes_per_device"]["total"]
+    mp = res["glm4-9b|train_4k|multi_pod"]["collective_bytes_per_device"]["total"]
+    assert mp > 0 and sp > 0

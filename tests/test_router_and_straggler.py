@@ -1,0 +1,60 @@
+"""Serving router (paper's deployment) + straggler-mitigation integration."""
+import numpy as np
+import pytest
+
+from repro.core import policies as pol
+from repro.dist.straggler import StragglerPlanner, simulate_fleet
+from repro.serving import RosellaRouter, SimulatedPool, run_simulation
+
+
+def test_router_learns_and_beats_pot():
+    speeds = np.array([0.25, 0.5, 1.0, 2.0])
+    results = {}
+    for policy in (pol.PPOT_SQ2, pol.POT):
+        router = RosellaRouter(4, mu_bar=speeds.sum(), policy=policy, seed=0)
+        pool = SimulatedPool(speeds)
+        resp, mu = run_simulation(router, pool, arrival_rate=3.0, horizon=150.0)
+        results[policy] = resp[len(resp) // 2:].mean()
+        if policy == pol.PPOT_SQ2:
+            # learner converged to true speeds (ordering at least)
+            assert (np.argsort(mu[-1]) == np.argsort(speeds)).all()
+    assert results[pol.PPOT_SQ2] < results[pol.POT]
+
+
+def test_router_adapts_to_speed_shock():
+    speeds = np.array([2.0, 1.0, 0.5, 0.25])
+    shocked = speeds[::-1].copy()
+    router = RosellaRouter(4, mu_bar=speeds.sum(), seed=1)
+    pool = SimulatedPool(speeds)
+    resp, mu = run_simulation(
+        router, pool, arrival_rate=3.0, horizon=300.0,
+        speed_schedule=[(150.0, shocked)],
+    )
+    # after the shock the learner must re-rank: worker 3 is now fastest
+    assert np.argmax(mu[-1]) == 3
+    # and the system must remain usable (bounded latency after recovery)
+    late = resp[-len(resp) // 5:]
+    assert late.mean() < 10 * resp[: len(resp) // 5].mean() + 5.0
+
+
+def test_router_benchmark_requests_emitted_when_idle():
+    router = RosellaRouter(4, mu_bar=10.0, seed=2)
+    router.route(0.0, 1)  # one arrival → λ̂ tiny → fake rate ≈ c0·μ̄
+    total = sum(len(router.benchmark_requests(t)) for t in np.linspace(1, 30, 30))
+    assert total > 5
+
+
+def test_straggler_planner_converges_to_proportional():
+    speeds = np.array([1.0, 1.0, 0.5, 0.25])
+    times, alloc = simulate_fleet(speeds, 32, steps=50, seed=0)
+    ideal = 32 / speeds.sum()
+    assert times[-5:].mean() < 1.5 * ideal
+    assert alloc[0] > alloc[3]  # fast worker gets more microbatches
+
+
+def test_straggler_dead_worker_still_gets_one():
+    p = StragglerPlanner(4, 16)
+    p.mu_hat = np.array([1.0, 1.0, 1.0, 1e-9])
+    alloc = p.plan()
+    assert alloc[3] >= 1  # must participate in the collective
+    assert alloc.sum() >= 16

@@ -1,0 +1,62 @@
+"""§4 theory validation as tests (Lemma 4 tail shape, R1 max-queue gap)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import rosella_sim as RS
+from repro.core import metrics as M
+from repro.core import policies as pol
+from repro.core import theory as TH
+
+
+@pytest.fixture(scope="module")
+def homogeneous_traces():
+    out = {}
+    for name, policy in [("ppot", pol.PPOT_SQ2), ("pss", pol.PSS)]:
+        cfg, params = RS.make_sim(
+            policy, np.ones(20), load=0.8, rounds=80_000,
+            use_learner=False, use_fake_jobs=False,
+        )
+        from repro.core import simulator as sim
+
+        _, trace = sim.simulate(cfg, params, jax.random.PRNGKey(4))
+        out[name] = trace
+    return out
+
+
+def test_lemma4_doubly_exponential_tail(homogeneous_traces):
+    """PPoT tail ≈ α^(2^k − 1): at k=3 it should be orders below PSS's α^3."""
+    tail_ppot = M.stationary_tail(homogeneous_traces["ppot"])
+    tail_pss = M.stationary_tail(homogeneous_traces["pss"])
+    alpha = 0.8
+
+    def at(t, k):
+        return t[k] if k < len(t) else 0.0
+
+    # k=2: prediction α^3 = 0.512 vs PPoT α^(2²−1)=α³... use k=3:
+    # PSS: α³ ≈ 0.51 at k=3 → 0.8³=0.512; PPoT: α⁷ ≈ 0.21 — empirically the
+    # PPoT tail must sit well below PSS.
+    assert at(tail_ppot, 3) < 0.6 * at(tail_pss, 3) + 1e-9
+    # doubly-exponential: PPoT at k=4 nearly vanishes
+    assert at(tail_ppot, 5) < 0.05
+    # PSS stays geometric-ish
+    assert at(tail_pss, 5) > at(tail_ppot, 5)
+
+
+def test_max_queue_gap(homogeneous_traces):
+    q_ppot = np.asarray(homogeneous_traces["ppot"]["q_real"]).max()
+    q_pss = np.asarray(homogeneous_traces["pss"]["q_real"]).max()
+    assert q_ppot <= q_pss
+    assert q_ppot <= TH.max_queue_ppot(20, 0.8) + 3
+
+
+def test_theory_closed_forms():
+    assert TH.ppot_tail(0.8, 0) == 1.0
+    assert TH.ppot_tail(0.8, 3) == pytest.approx(0.8 ** 7)
+    assert TH.pss_tail(0.8, 3) == pytest.approx(0.8 ** 3)
+    assert TH.max_queue_ppot(1000, 0.8) <= TH.max_queue_pss(1000, 0.8)
+    # O(log log n) vs O(log n): gap grows with n
+    assert TH.max_queue_ppot(10**6, 0.9) < 0.5 * TH.max_queue_pss(10**6, 0.9)
+    assert TH.learning_window(100, 0.9) > TH.learning_window(100, 0.5)
+    # window grows only logarithmically in n: log(1000)/log(10) = 3
+    assert TH.learning_window(1000, 0.8) < 4 * TH.learning_window(10, 0.8)
