@@ -1,32 +1,39 @@
-"""§Perf (scheduler side) — decisions/second of the scheduling hot path.
+"""§Perf (scheduler side) — decisions/second of the scheduling hot path,
+for EVERY policy, through the unified batched dispatch engine
+(core/dispatch.py).
 
-Compares:
-  * serial        — one lax.scan'd PPoT decision at a time (the paper's
-                    sequential frontend loop, our core.policies path)
-  * batched_xla   — the vectorized inverse-CDF two-choice batch (ref.py
-                    math jitted, stale-queue-within-batch semantics)
-  * pallas_interp — the Pallas kernel in interpret mode (correctness proxy;
-                    TPU timings don't exist on this CPU container —
-                    structural VMEM/MXU design is argued in kernel.py)
+Per policy:
+  * serial   — the one-task-at-a-time ``lax.scan`` frontend loop (per-task
+               key split + single-task policy closure + per-task queue
+               fold-back — the seed's ``schedule_batch`` hot path)
+  * batched  — one engine call, snapshot semantics + sorted-histogram
+               fold-back
 
-The paper targets "millions of tasks per second" — batched_xla on ONE CPU
-core already exceeds that; the Pallas kernel is the TPU-native version.
+plus, for PPoT-SQ(2), the Pallas kernel in interpret mode (correctness /
+dataflow proxy; TPU timings don't exist on a CPU container — the
+VMEM/MXU design is argued in kernels/ppot_dispatch/kernel.py).
+
+The paper targets "millions of tasks per second" — the batched engine on
+ONE CPU core already exceeds that; the acceptance bar for this benchmark is
+batched ≥ 50× serial for PPoT-SQ(2) at n=64, B=4096.
 """
 from __future__ import annotations
 
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import csv_row
+from repro.core import dispatch as dsp
 from repro.core import policies as pol
-from repro.kernels.ppot_dispatch import ops as pd_ops, ref as pd_ref
+from repro.kernels.ppot_dispatch import ops as pd_ops
 
 
 def _time(fn, *args, iters=20):
-    fn(*args)  # compile
+    out = fn(*args)  # compile
+    jax.block_until_ready(out)
     t0 = time.time()
     for _ in range(iters):
         out = fn(*args)
@@ -34,52 +41,87 @@ def _time(fn, *args, iters=20):
     return (time.time() - t0) / iters
 
 
-def run(n: int = 64, B: int = 4096, seed: int = 0):
+def run(n: int = 64, B: int = 4096, seed: int = 0, *, serial_B: int | None = None,
+        iters: int = 20):
+    """Time every policy through the engine. ``serial_B`` defaults to B."""
+    serial_B = B if serial_B is None else serial_B
     key = jax.random.PRNGKey(seed)
     mu = jax.random.uniform(key, (n,)) * 4
     q = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, 10)
-    rows = []
-
-    # serial (sequential queue updates — exact semantics)
     cfg = pol.default_policy_config()
+    rows = []
+    speedups = {}
+    batched_dps = {}
 
-    @jax.jit
-    def serial(key, q):
-        return pol.schedule_batch(pol.PPOT_SQ2, key, q, mu, mu, cfg, 512)
+    for policy in pol.ALL_POLICIES:
+        if policy == pol.SPARROW:
+            # sparrow has no single-task loop; its serial form is the
+            # engine oracle (per-task argmin over the probe set).
+            @jax.jit
+            def serial(key, q, policy=policy):
+                return dsp.dispatch_sequential(policy, key, q, mu, mu, cfg, serial_B)
+        else:
+            @jax.jit
+            def serial(key, q, policy=policy):
+                fn = pol.get_policy(policy)
 
-    t = _time(serial, key, q)
-    per_dec_serial = t / 512 * 1e6
-    rows.append(csv_row("sched_serial_scan", per_dec_serial,
-                        f"decisions_per_s={512 / t:.0f}"))
+                def body(qc, k):
+                    j = fn(k, qc, mu, mu, cfg)
+                    return qc.at[j].add(1), j
 
-    # batched XLA (stale-queue batch)
-    @jax.jit
-    def batched(key, q):
-        cdf = pd_ref.make_cdf(mu)
-        k1, k2 = jax.random.split(key)
-        u1 = jax.random.uniform(k1, (B,))
-        u2 = jax.random.uniform(k2, (B,))
-        return pd_ref.ppot_dispatch_ref(cdf, q, u1, u2)
+                keys = jax.random.split(key, serial_B)
+                q2, w = jax.lax.scan(body, q, keys)
+                return w, q2
 
-    t = _time(batched, key, q)
-    per_dec_batch = t / B * 1e6
-    rows.append(csv_row("sched_batched_xla", per_dec_batch,
-                        f"decisions_per_s={B / t:.0f}"))
+        def batched(key, q, policy=policy):
+            return dsp.dispatch(policy, key, q, mu, mu, cfg, B, use_kernel=False)
+
+        t_s = _time(serial, key, q, iters=max(iters // 4, 2))
+        t_b = _time(batched, key, q, iters=iters)
+        dps_s = serial_B / t_s
+        dps_b = B / t_b
+        speedups[policy] = (t_s / serial_B) / (t_b / B)
+        batched_dps[policy] = dps_b
+        if policy == pol.SPARROW:
+            # sparrow's "serial" is the same batched water-fill re-run (no
+            # single-task loop exists), so a speedup ratio would only
+            # measure per-call amortization — don't print one.
+            rows.append(csv_row("sched_oracle_sparrow", t_s / serial_B * 1e6,
+                                f"decisions_per_s={dps_s:.0f};batched_oracle"))
+            rows.append(csv_row("sched_batched_sparrow", t_b / B * 1e6,
+                                f"decisions_per_s={dps_b:.0f}"))
+        else:
+            rows.append(csv_row(f"sched_serial_{policy}", t_s / serial_B * 1e6,
+                                f"decisions_per_s={dps_s:.0f}"))
+            rows.append(csv_row(f"sched_batched_{policy}", t_b / B * 1e6,
+                                f"decisions_per_s={dps_b:.0f};"
+                                f"speedup={speedups[policy]:.0f}x"))
 
     # pallas interpret (not a perf number — correctness/dataflow proxy)
     t0 = time.time()
-    pd_ops.dispatch(key, mu, q, B, interpret=True)
+    pd_ops.dispatch(key, mu, q, min(B, 512), interpret=True)
     t_int = time.time() - t0
-    rows.append(csv_row("sched_pallas_interpret", t_int / B * 1e6,
+    rows.append(csv_row("sched_pallas_interpret", t_int / min(B, 512) * 1e6,
                         "mode=interpret;see_kernel_py_for_TPU_design"))
 
-    speedup = per_dec_serial / per_dec_batch
-    rows.append(csv_row("sched_claim_millions_per_sec", 0.0,
-                        f"batched_speedup={speedup:.0f}x;"
-                        f"meets_1M_per_s={B / _time(batched, key, q) > 1e6}"))
-    return rows, {}
+    # The ≥50× acceptance bar is defined at the reference shape (n=64,
+    # B=4096 vs a same-size serial scan); at other shapes report the raw
+    # numbers without asserting the bar.
+    at_reference = (n, B, serial_B) == (64, 4096, 4096)
+    claim = (
+        f"ppot_speedup={speedups[pol.PPOT_SQ2]:.0f}x;"
+        f"meets_1M_per_s={batched_dps[pol.PPOT_SQ2] > 1e6};"
+    )
+    if at_reference:
+        claim += f"meets_50x={speedups[pol.PPOT_SQ2] >= 50}"
+    else:
+        claim += "reference_shape=False(50x_bar_applies_at_n64_B4096)"
+    rows.append(csv_row("sched_claim_millions_per_sec", 0.0, claim))
+    return rows, {"speedups": speedups, "batched_dps": batched_dps}
 
 
 if __name__ == "__main__":
-    for r in run()[0]:
+    smoke = "--smoke" in sys.argv
+    kw = dict(n=16, B=1024, serial_B=128, iters=4) if smoke else {}
+    for r in run(**kw)[0]:
         print(r)

@@ -1,0 +1,363 @@
+"""Unified batched dispatch engine — the single placement substrate.
+
+The paper's throughput claim (§1: "millions of tasks per second") rests on
+the scheduler making *batches* of placement decisions against a snapshot of
+cluster state, not on serializing a probe → place → update loop per task.
+This module is that substrate: every scheduling policy in
+``core/policies.py`` has a vectorized batch form here, and every consumer
+layer dispatches through the same engine:
+
+  * ``core/scheduler.schedule``   — frontends place whole job batches
+  * ``core/simulator.simulate``   — a multi-task arrival places as one batch
+  * ``serving/router``            — request batches route in one call
+  * ``benchmarks/sched_throughput`` — decisions/second for every policy
+
+Mechanics:
+
+  probe generation    All randomness is drawn up front, q-independently:
+                      inverse-CDF proportional sampling (j = #{cdf ≤ u},
+                      the Pallas kernel's dense comparison) for the
+                      μ̂-weighted policies, batched ``randint`` for the
+                      uniform ones. Because the draws never depend on the
+                      queue, the batched path and the sequential oracle
+                      consume *identical* streams.
+
+  selection           SQ(2) / LL(2) / ε-greedy folds are elementwise
+                      against the queue snapshot every task in the batch
+                      observes (the distributed-frontend reality: probes
+                      are in flight concurrently).
+
+  conflict fold-back  One scatter-add folds the batch's own placements back
+                      into the caller's queue view (``q_after``).
+
+  self-correction     Optional ``fold_chunks=C``: the batch is placed in C
+                      sub-chunks, re-snapshotting the queue between chunks.
+                      ``C = B`` degenerates to the per-task sequential
+                      semantics — retained as the reference oracle
+                      (``dispatch_sequential``) for parity tests.
+
+The Pallas ``ppot_dispatch`` kernel is selected automatically as the
+PPoT-SQ(2) fast path on TPU (``use_kernel=None``); elsewhere the pure-jnp
+math — bit-identical to the kernel (tests/test_kernels.py) — runs instead.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import policies as pol
+from repro.kernels.ppot_dispatch import ref as pd_ref
+from repro.kernels.ppot_dispatch.kernel import ppot_dispatch as _ppot_kernel
+
+
+class DispatchResult(NamedTuple):
+    workers: jax.Array  # i32[B] chosen worker per task; -1 at inactive slots
+    q_after: jax.Array  # i32[n] queue view with the batch folded back
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def inverse_cdf_sample(cdf: jax.Array, u: jax.Array) -> jax.Array:
+    """j[b] = #{i : cdf[i] ≤ u[b]} — proportional sample via inverse CDF.
+
+    ``searchsorted(side="right")`` returns exactly that count, so the jnp
+    path stays bit-identical to the Pallas kernel's dense comparison while
+    running O(B log n) instead of O(B·n) (≈6× on CPU at n=64, B=4096).
+    """
+    n = cdf.shape[0]
+    j = jnp.searchsorted(cdf, u, side="right").astype(jnp.int32)
+    return jnp.clip(j, 0, n - 1)
+
+
+def _uniform_pair(key: jax.Array, B: int) -> tuple[jax.Array, jax.Array]:
+    """Two batches of uniforms from ONE PRNG sweep: the high/low 16 bits of
+    a single u32 draw. Halves the threefry cost on the PPoT hot path; the
+    2^-16 grid is far below any μ̂ resolution the scheduler acts on."""
+    bits = jax.random.bits(key, (B,), jnp.uint32)
+    u1 = (bits >> 16).astype(jnp.float32) * (1.0 / 65536.0)
+    u2 = (bits & jnp.uint32(0xFFFF)).astype(jnp.float32) * (1.0 / 65536.0)
+    return u1, u2
+
+
+def _fold_counts(q: jax.Array, workers: jax.Array, active: jax.Array) -> jax.Array:
+    """Per-worker placement counts via sort + searchsorted (≈2× faster than
+    an XLA scatter-add on CPU at B=4096). Inactive slots are binned at n
+    and fall off the histogram."""
+    n = q.shape[0]
+    w = jnp.where(active, workers, n)
+    edges = jnp.searchsorted(jnp.sort(w), jnp.arange(n + 1), side="left")
+    return jnp.diff(edges).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Probe generation (q-independent; shared by batched path and oracle)
+# ---------------------------------------------------------------------------
+
+
+def _draws(policy: str, key, B: int, n: int, cfg, mu_hat, mu_true) -> dict:
+    """Draw every random quantity the policy needs for a batch of B tasks.
+
+    Each entry is a [B]-shaped array (batch axis leading) so the engine can
+    re-chunk it for within-batch self-correction without re-drawing.
+    """
+    # NOTE: k2 is intentionally unconsumed — the PPoT uniform pair moved to
+    # a single packed-bits draw on k1, and the 4-way split is kept so every
+    # validated RNG stream (fig8 parity, learner e2e) stays stable.
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d: dict[str, jax.Array] = {}
+    if policy == pol.UNIFORM:
+        d["j_uni"] = jax.random.randint(k1, (B,), 0, n, dtype=jnp.int32)
+    elif policy == pol.POT:
+        jj = jax.random.randint(k1, (2, B), 0, n, dtype=jnp.int32)
+        d["j1"], d["j2"] = jj[0], jj[1]
+    elif policy == pol.PSS:
+        d["j1"] = inverse_cdf_sample(pd_ref.make_cdf(mu_hat), jax.random.uniform(k1, (B,)))
+    elif policy == pol.HALO:
+        d["j1"] = inverse_cdf_sample(pd_ref.make_cdf(mu_true), jax.random.uniform(k1, (B,)))
+    elif policy in (pol.PPOT_SQ2, pol.PPOT_LL2):
+        cdf = pd_ref.make_cdf(mu_hat)
+        d["u1"], d["u2"] = _uniform_pair(k1, B)
+        d["j1"] = inverse_cdf_sample(cdf, d["u1"])
+        d["j2"] = inverse_cdf_sample(cdf, d["u2"])
+    elif policy == pol.BANDIT:
+        cdf = pd_ref.make_cdf(mu_hat)
+        d["u1"], d["u2"] = _uniform_pair(k1, B)
+        d["j1"] = inverse_cdf_sample(cdf, d["u1"])
+        d["j2"] = inverse_cdf_sample(cdf, d["u2"])
+        d["explore"] = jax.random.uniform(k3, (B,)) < cfg.bandit_eta
+        d["j_uni"] = jax.random.randint(k4, (B,), 0, n, dtype=jnp.int32)
+    elif policy == pol.SPARROW:
+        n_probe = max(int(cfg.sparrow_d) * B, B)
+        d["probes"] = jax.random.randint(k1, (n_probe,), 0, n, dtype=jnp.int32)
+    else:
+        raise ValueError(f"unknown policy {policy!r}; choose from {pol.ALL_POLICIES}")
+    return d
+
+
+# ---------------------------------------------------------------------------
+# Selection against a queue snapshot
+# ---------------------------------------------------------------------------
+
+
+def _select(policy: str, q_view, d: dict, mu_hat, mu_true, cfg,
+            *, kernel: bool = False, interpret: bool = True) -> jax.Array:
+    """Pick one worker per task in the (sub-)batch against ``q_view``."""
+    if policy in (pol.UNIFORM,):
+        return d["j_uni"]
+    if policy in (pol.PSS, pol.HALO):
+        return d["j1"]
+    if policy in (pol.POT, pol.PPOT_SQ2):
+        if policy == pol.PPOT_SQ2 and kernel:
+            cdf = pd_ref.make_cdf(mu_hat)
+            return _ppot_kernel(cdf, q_view, d["u1"], d["u2"], interpret=interpret)
+        j1, j2 = d["j1"], d["j2"]
+        return jnp.where(q_view[j1] <= q_view[j2], j1, j2)
+    if policy == pol.PPOT_LL2:
+        j1, j2 = d["j1"], d["j2"]
+        mu = jnp.clip(mu_hat, min=1e-9)
+        w1 = (q_view[j1] + 1.0) / mu[j1]
+        w2 = (q_view[j2] + 1.0) / mu[j2]
+        return jnp.where(w1 <= w2, j1, j2)
+    if policy == pol.BANDIT:
+        j1, j2 = d["j1"], d["j2"]
+        j_ppot = jnp.where(q_view[j1] <= q_view[j2], j1, j2)
+        return jnp.where(d["explore"], d["j_uni"], j_ppot)
+    raise ValueError(f"no snapshot selection for policy {policy!r}")
+
+
+def _sparrow_select(q_view, probes, B: int, m=None) -> jax.Array:
+    """Sparrow batch sampling + late binding, fully vectorized.
+
+    The reference semantics is the greedy loop: ``m`` times, place a task on
+    the currently least-loaded *probed* worker (ties broken by earliest
+    probe position) and fold the placement back. Greedy water-fills:
+    participants level up to a common load, then round-robin. That makes it
+    closed-form — sort probed workers by (load, first-probe-pos), find how
+    many join the fill (k*), split the remaining tasks into full rounds + a
+    remainder to the earliest-probed participants, and recover the per-slot
+    order by sorting placements by (load-at-placement, first-probe-pos).
+    Exactly the greedy sequence (slot-for-slot), without the m-step argmin
+    scan. ``m`` may be traced (≤ B, the static shape bound); emission slots
+    ≥ m are padding.
+    """
+    n = q_view.shape[0]
+    P = probes.shape[0]
+    if m is None:
+        m = B
+    INF = jnp.int32(2**30)
+    # first probe position of each worker; unprobed → P (never placed)
+    fp = jnp.full((n,), P, jnp.int32).at[probes].min(
+        jnp.arange(P, dtype=jnp.int32)
+    )
+    probed = fp < P
+    loads = jnp.where(probed, q_view.astype(jnp.int32), INF)
+    order = jnp.lexsort((fp, loads))  # (load, first-probe-pos) ascending
+    s = loads[order]
+    ws = order.astype(jnp.int32)
+    fps = fp[order]
+    s_fin = jnp.where(s < INF, s, 0)
+    Sx = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(s_fin)])
+    # worker k joins the fill iff leveling the first k up to its load fits in m
+    k_idx = jnp.arange(1, n, dtype=jnp.int32)
+    cost = k_idx * s_fin[1:] - Sx[1:n]
+    joins = (s[1:] < INF) & (cost <= m)
+    k_star = 1 + jnp.sum(joins.astype(jnp.int32))
+    lam0 = s_fin[k_star - 1]  # common level once all participants joined
+    spent = k_star * lam0 - Sx[k_star]
+    full, rem = (m - spent) // k_star, (m - spent) % k_star
+    part = jnp.arange(n) < k_star
+    fp_rank = jnp.argsort(jnp.argsort(jnp.where(part, fps, INF)))
+    alloc = jnp.where(part, (lam0 - s_fin) + full + (fp_rank < rem), 0)
+    alloc = alloc.astype(jnp.int32)
+    # expand to per-slot placements and order them as greedy would emit them
+    astart = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(alloc)[:-1]])
+    wexp = jnp.repeat(ws, alloc, total_repeat_length=B)
+    sexp = jnp.repeat(s_fin, alloc, total_repeat_length=B)
+    fpexp = jnp.repeat(fps, alloc, total_repeat_length=B)
+    stexp = jnp.repeat(astart, alloc, total_repeat_length=B)
+    v = sexp + (jnp.arange(B, dtype=jnp.int32) - stexp)  # load at placement
+    v = jnp.where(jnp.arange(B) < m, v, INF)  # padding sorts last
+    return wexp[jnp.lexsort((fpexp, v))].astype(jnp.int32)
+
+
+def within_batch_rank(workers: jax.Array, active: jax.Array) -> jax.Array:
+    """rank[b] = #{a < b : active[a] ∧ workers[a] == workers[b]}.
+
+    The per-worker ordinal of each task inside its own batch — what a
+    sequential placement loop would have observed as "my position in this
+    worker's queue beyond the snapshot".
+    """
+    B = workers.shape[0]
+    before = jnp.arange(B)[None, :] < jnp.arange(B)[:, None]
+    same = (workers[None, :] == workers[:, None]) & active[None, :] & before
+    return jnp.sum(same, axis=1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+
+def _chunking(B: int, fold_chunks: int) -> tuple[int, int]:
+    """(chunks, padded_B): honor the requested self-correction granularity
+    even when fold_chunks does not divide B by padding the batch up to the
+    next multiple (pad slots are inactive and sliced off)."""
+    C = max(min(int(fold_chunks), B), 1)
+    Bp = -(-B // C) * C
+    return C, Bp
+
+
+@functools.partial(
+    jax.jit, static_argnames=("policy", "B", "fold_chunks", "use_kernel", "interpret")
+)
+def dispatch(
+    policy: str,
+    key: jax.Array,
+    q: jax.Array,  # i32[n] queue snapshot (real queue / scheduler view)
+    mu_hat: jax.Array,  # f32[n] learner estimates
+    mu_true: jax.Array,  # f32[n] ground truth (only HALO reads it)
+    cfg: pol.PolicyConfig,
+    B: int,
+    *,
+    active: jax.Array | None = None,  # bool[B]; inactive slots place nothing
+    forced: jax.Array | None = None,  # i32[B]; ≥0 pins the slot to that worker
+    fold_chunks: int = 1,
+    use_kernel: bool | None = None,
+    interpret: bool | None = None,
+) -> DispatchResult:
+    """Place ``B`` tasks in one engine call. Returns (workers[B], q_after).
+
+    ``fold_chunks=1`` is the fully batched path (all tasks see the same
+    snapshot, one scatter-add fold-back). ``fold_chunks=C`` re-snapshots the
+    queue between C equal sub-chunks (within-batch self-correction; B is
+    padded up with inactive slots when C does not divide it);
+    ``fold_chunks=B`` reproduces per-task sequential semantics and is the
+    reference oracle. ``forced`` pins slots to externally-chosen workers
+    (the simulator's placement-constrained tasks) — pinned placements fold
+    back into the queue view the later chunks observe, like any other
+    placement (for SPARROW the pin is applied after water-filling).
+    ``use_kernel=None`` auto-selects the Pallas PPoT kernel on TPU.
+    """
+    n = q.shape[0]
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if interpret is None:
+        interpret = not _on_tpu()
+    act = active if active is not None else jnp.ones((B,), bool)
+
+    if policy == pol.SPARROW:
+        # Water-filling already models per-task fold-back over the probe
+        # set; fold_chunks does not apply. Pinned (forced) placements are
+        # folded into the fill's queue snapshot first, then the remaining
+        # tasks water-fill around them (the seed interleaved pins at their
+        # slot positions; folding them up front is the batched equivalent).
+        d = _draws(policy, key, B, n, cfg, mu_hat, mu_true)
+        if forced is not None:
+            pin = (forced >= 0) & act
+            wpin = jnp.where(pin, forced, 0)
+            q_fill = q + jnp.zeros_like(q).at[wpin].add(pin.astype(q.dtype))
+        else:
+            pin = jnp.zeros((B,), bool)
+            q_fill = q
+        unpinned = act & ~pin
+        seq = _sparrow_select(q_fill, d["probes"], B, jnp.sum(unpinned))
+        slot_rank = jnp.cumsum(unpinned.astype(jnp.int32)) - 1
+        workers = seq[jnp.clip(slot_rank, 0, B - 1)]
+        if forced is not None:
+            workers = jnp.where(pin, forced, workers)
+    else:
+        C, Bp = _chunking(B, fold_chunks)
+        if Bp != B:
+            act = jnp.concatenate([act, jnp.zeros((Bp - B,), bool)])
+            if forced is not None:
+                forced = jnp.concatenate(
+                    [forced, jnp.full((Bp - B,), -1, jnp.int32)]
+                )
+        d = _draws(policy, key, Bp, n, cfg, mu_hat, mu_true)
+        if C == 1:
+            kernel = use_kernel and policy == pol.PPOT_SQ2
+            workers = _select(policy, q, d, mu_hat, mu_true, cfg,
+                              kernel=kernel, interpret=interpret)
+            if forced is not None:
+                workers = jnp.where(forced >= 0, forced, workers)
+        else:
+            fc_all = forced if forced is not None else jnp.full((Bp,), -1, jnp.int32)
+            stacked = {k: v.reshape(C, Bp // C) for k, v in d.items()}
+            stacked["_active"] = act.reshape(C, Bp // C)
+            stacked["_forced"] = fc_all.reshape(C, Bp // C)
+
+            def body(qv, dc):
+                ac = dc.pop("_active")
+                fc = dc.pop("_forced")
+                w = _select(policy, qv, dc, mu_hat, mu_true, cfg, kernel=False)
+                w = jnp.where(fc >= 0, fc, w)
+                qv = qv + jnp.zeros_like(qv).at[w].add(ac.astype(qv.dtype))
+                return qv, w
+
+            _, ws = jax.lax.scan(body, q, stacked)
+            workers = ws.reshape(Bp)
+        if Bp != B:
+            workers = workers[:B]
+            act = act[:B]
+
+    workers = workers.astype(jnp.int32)
+    q_after = q + _fold_counts(q, workers, act)
+    workers = jnp.where(act, workers, -1)
+    return DispatchResult(workers=workers, q_after=q_after)
+
+
+def dispatch_sequential(
+    policy: str, key, q, mu_hat, mu_true, cfg, B: int, *, active=None
+) -> DispatchResult:
+    """Reference oracle: identical probe stream, per-task queue fold-back.
+
+    This is the paper's sequential frontend loop, kept only for parity
+    testing and as the serial baseline in benchmarks/sched_throughput.
+    """
+    return dispatch(policy, key, q, mu_hat, mu_true, cfg, B,
+                    active=active, fold_chunks=B, use_kernel=False)

@@ -67,12 +67,24 @@ def init_ema_arrival() -> EmaArrivalState:
 
 
 def observe_arrival_ema(state: EmaArrivalState, now: jax.Array, window: int) -> EmaArrivalState:
-    gap = now - state.last_time
+    return observe_arrivals_ema(state, now, 1, window)
+
+
+def observe_arrivals_ema(
+    state: EmaArrivalState, now: jax.Array, m: int, window: int
+) -> EmaArrivalState:
+    """Fold a batch of ``m`` arrivals culminating at ``now`` into the EMA.
+
+    The batched router observes one call per request *batch*; treating the
+    batch as m evenly spaced arrivals (gap (now-last)/m, m EMA steps with a
+    constant gap collapses to a closed form) keeps λ̂ calibrated instead of
+    undercounting by a factor of m.
+    """
+    gap = (now - state.last_time) / float(max(m, 1))
     beta = 1.0 / float(window)
-    mean_gap = jnp.where(
-        state.count == 0, gap, (1.0 - beta) * state.mean_gap + beta * gap
-    )
-    return EmaArrivalState(last_time=now, mean_gap=mean_gap, count=state.count + 1)
+    r = (1.0 - beta) ** int(max(m, 1))
+    mean_gap = jnp.where(state.count == 0, gap, r * state.mean_gap + (1.0 - r) * gap)
+    return EmaArrivalState(last_time=now, mean_gap=mean_gap, count=state.count + m)
 
 
 def lam_hat_ema(state: EmaArrivalState) -> jax.Array:

@@ -1,12 +1,25 @@
 """Scheduling policies (paper §2.1, §3.1, §6 baselines).
 
-Every policy is a pure function
+Two forms per policy, one semantics:
 
-    policy(key, q_real, mu_hat, mu_true, cfg) -> worker index (int32)
+  * the **single-task closure** defined here —
 
-operating on device arrays so it can run inside ``lax.scan`` (simulator),
-inside the serving router's jitted dispatch step, or vmapped over a batch of
-jobs. ``q_real`` is the per-worker queue length the scheduler observes via
+        policy(key, q_real, mu_hat, mu_true, cfg) -> worker index (int32)
+
+    a pure function on device arrays, used as the unit of specification
+    (unit tests, the paper's worked Examples 1-3) and by anything placing
+    exactly one task;
+
+  * the **vectorized batch form** in ``core/dispatch.py`` — the unified
+    batched dispatch engine through which every production layer
+    (core/scheduler, core/simulator, serving/router, the throughput
+    benchmarks) places whole batches: probes are drawn up front by
+    inverse-CDF proportional sampling, selection folds run elementwise
+    against a queue snapshot, and one scatter-add folds the batch's own
+    placements back into the caller's view. ``schedule_batch`` below is the
+    sequential reference oracle (engine with ``fold_chunks = m``).
+
+``q_real`` is the per-worker queue length the scheduler observes via
 probing, ``mu_hat`` the learner's current estimates, ``mu_true`` ground truth
 (only Halo may read it — paper §6: Halo "assumes the knowledge of worker
 speeds").
@@ -161,29 +174,22 @@ def get_policy(name: str):
 
 
 # ---------------------------------------------------------------------------
-# Batched variants
+# Batched variants — thin wrappers over the unified dispatch engine
 # ---------------------------------------------------------------------------
 
 
 def schedule_batch(policy_name: str, key, q_real, mu_hat, mu_true, cfg, m: int):
-    """Schedule ``m`` tasks sequentially, updating the observed queue after
-    each placement (the scheduler sees its own in-flight assignments —
-    matches a frontend placing a job's tasks back-to-back).
+    """Schedule ``m`` tasks with per-task queue fold-back (the scheduler
+    sees its own in-flight assignments — a frontend placing a job's tasks
+    back-to-back). This is the engine's sequential reference oracle; the
+    batched production path is ``dispatch.dispatch(...)``.
 
     Returns (workers[m] int32, q_after).
     """
-    if policy_name == SPARROW:
-        return sparrow_batch(key, q_real, mu_true, cfg, m)
-    policy = get_policy(policy_name)
+    from repro.core import dispatch as dsp  # deferred: dispatch imports us
 
-    def body(carry, k):
-        q = carry
-        j = policy(k, q, mu_hat, mu_true, cfg)
-        return q.at[j].add(1), j
-
-    keys = jax.random.split(key, m)
-    q_after, workers = jax.lax.scan(body, q_real, keys)
-    return workers, q_after
+    res = dsp.dispatch_sequential(policy_name, key, q_real, mu_hat, mu_true, cfg, m)
+    return res.workers, res.q_after
 
 
 def sparrow_batch(key, q_real, mu_true, cfg, m: int):
@@ -192,18 +198,9 @@ def sparrow_batch(key, q_real, mu_true, cfg, m: int):
     a task commits to whichever probed worker frees up first; at placement
     granularity this is equivalent to choosing the m least-loaded probes and
     charging each placement to the queue. (§6 baseline iii; DESIGN.md §8.5.)
+    Vectorized via the engine's water-filling form (dispatch._sparrow_select).
     """
-    n = q_real.shape[0]
-    n_probe = max(int(cfg.sparrow_d) * m, m)
-    probes = jax.random.randint(key, (n_probe,), 0, n, dtype=jnp.int32)
+    from repro.core import dispatch as dsp  # deferred: dispatch imports us
 
-    def body(carry, _):
-        q = carry
-        loads = q[probes]
-        pick = jnp.argmin(loads)
-        j = probes[pick]
-        return q.at[j].add(1), j
-
-    q_after, workers = jax.lax.scan(body, q_real, None, length=m)
-    del mu_true
-    return workers, q_after
+    res = dsp.dispatch(SPARROW, key, q_real, jnp.ones_like(mu_true), mu_true, cfg, m)
+    return res.workers, res.q_after

@@ -5,13 +5,19 @@ paper Fig. 1, as a jittable state machine.
 Unlike ``simulator.py`` (which owns the event clock for reproducing the
 paper's experiments), the runtime is *driven by the caller*: the serving
 router / training straggler-mitigator feed it arrivals and completion
-telemetry and ask it to place batches of jobs. All methods are pure
-``state → state`` functions so they compose with jit/shard_map; the
-``RosellaScheduler`` class is a thin convenience wrapper.
+telemetry and ask it to place batches of jobs. Placement goes through the
+unified batched dispatch engine (``core/dispatch.py``): ``schedule`` places
+a whole batch of ``m`` jobs in ONE engine call — every job probes against
+the frontend's queue snapshot and the batch's own assignments fold back via
+a single scatter-add — which is what lets one frontend make millions of
+decisions per second (paper §1) instead of scanning job-by-job. All methods
+are pure ``state → state`` functions so they compose with jit/shard_map;
+the ``RosellaScheduler`` class is a thin convenience wrapper.
 
 Distributed mode (paper §5): each scheduler shard keeps its own state;
-``sync_shard_estimates`` is called inside ``shard_map`` and ``pmean``s μ̂
-over the scheduler axis — "they need only synchronize the estimates of
+``schedule_shard``/``make_sharded_schedule`` run the same engine per shard
+inside ``shard_map`` and ``pmean`` the μ̂/q̂ estimates over the scheduler
+axis after every batch — "they need only synchronize the estimates of
 worker speeds regularly".
 """
 from __future__ import annotations
@@ -20,7 +26,9 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
+from repro.core import dispatch as dsp
 from repro.core import estimator as est
 from repro.core import learner as lrn
 from repro.core import policies as pol
@@ -56,16 +64,17 @@ def schedule(
 ) -> tuple[jax.Array, RosellaState]:
     """Place ``m`` jobs arriving at ``now``; returns (workers[m], state').
 
-    The scheduler's queue view is incremented optimistically per placement
-    (the paper's probe sees the queue including in-flight assignments from
-    this frontend)."""
-    arr = est.observe_arrival_ema(state.arr, now, window=64)
+    One batched engine call: all m jobs probe the frontend's queue snapshot
+    and the batch folds back into the view with one scatter-add (the
+    paper's probe sees the queue including in-flight assignments from this
+    frontend)."""
+    arr = est.observe_arrivals_ema(state.arr, now, m, window=64)
     mu_true = state.learner.mu_hat  # runtime has no oracle speeds
-    workers, q_after = pol.schedule_batch(
+    res = dsp.dispatch(
         policy, key, state.q_view, state.learner.mu_hat, mu_true,
         pol.default_policy_config(), m,
     )
-    return workers, state.replace(q_view=q_after, arr=arr)
+    return res.workers, state.replace(q_view=res.q_after, arr=arr)
 
 
 @jax.jit
@@ -133,6 +142,65 @@ def sync_shard_estimates(state: RosellaState, axis_name: str) -> RosellaState:
         learner=state.learner.replace(mu_hat=mu),
         q_view=jnp.round(q).astype(jnp.int32),
     )
+
+
+# ---------------------------------------------------------------------------
+# Multi-frontend scheduling (paper §5) — S scheduler shards, one engine each
+# ---------------------------------------------------------------------------
+
+
+def schedule_shard(
+    state: RosellaState,
+    key: jax.Array,
+    now: jax.Array,
+    m: int,
+    policy: str,
+    axis_name: str,
+) -> tuple[jax.Array, RosellaState]:
+    """One frontend step inside ``shard_map``: place a local batch of ``m``
+    jobs through the dispatch engine, then pmean-sync μ̂/q̂ across the
+    scheduler axis ("synchronize the estimates … regularly")."""
+    workers, state = schedule(state, key, now, m, policy)
+    return workers, sync_shard_estimates(state, axis_name)
+
+
+def init_rosella_shards(
+    num_shards: int, n: int, lcfg: lrn.LearnerConfig, mu_init: float | jax.Array = 1.0
+) -> RosellaState:
+    """Stack ``num_shards`` fresh states on a leading axis for shard_map."""
+    one = init_rosella(n, lcfg, mu_init)
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (num_shards,) + x.shape), one
+    )
+
+
+def make_sharded_schedule(mesh, m: int, policy: str = pol.PPOT_SQ2,
+                          axis_name: str = "sched"):
+    """Build a jitted multi-frontend scheduler over ``mesh[axis_name]``.
+
+    Returns ``fn(states, keys, now) -> (workers[S, m], states')`` where
+    every pytree leaf of ``states`` (and ``keys``) carries a leading shard
+    axis of size S = mesh.shape[axis_name]. Each shard runs the batched
+    engine against its own queue view, then estimates sync via pmean —
+    the paper's distributed frontends.
+    """
+
+    def shard_fn(st, k, now):
+        st1 = jax.tree.map(lambda x: x[0], st)
+        w, st2 = schedule_shard(st1, k[0], now, m, policy, axis_name)
+        return w[None], jax.tree.map(lambda x: x[None], st2)
+
+    if hasattr(jax, "shard_map"):  # jax ≥ 0.5
+        smap = jax.shard_map
+    else:
+        from jax.experimental.shard_map import shard_map as smap
+
+    mapped = smap(
+        shard_fn, mesh=mesh,
+        in_specs=(P(axis_name), P(axis_name), P()),
+        out_specs=(P(axis_name), P(axis_name)),
+    )
+    return jax.jit(mapped)
 
 
 class RosellaScheduler:

@@ -2,8 +2,12 @@
 
 One ``lax.scan`` round = one jump of the uniformized continuous-time chain:
 
-  * with prob λ/R        → a job arrives (1..max_tasks tasks), the policy
-                            places each task, the arrival estimator updates;
+  * with prob λ/R        → a job arrives (1..max_tasks tasks), placed as ONE
+                            batch through the unified dispatch engine
+                            (core/dispatch.py; ``batch_self_correct``
+                            controls whether tasks within the job see each
+                            other's placements), the arrival estimator
+                            updates;
   * with prob μmax_i/R   → a potential service event at worker i, accepted
                             with prob μ_i(t)/μmax_i (thinning handles
                             time-varying speeds); real queue drains before
@@ -34,6 +38,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import dispatch as dsp
 from repro.core import estimator as est
 from repro.core import learner as lrn
 from repro.core import policies as pol
@@ -67,6 +72,10 @@ class SimConfig:
     trace_mu: bool = True
     constrained_frac: float = 0.0  # fraction of tasks pinned to a random worker
     ring_cap: int = lrn.RING_CAP
+    # True → tasks of one job see each other's placements (engine
+    # fold_chunks=max_tasks, the seed's sequential semantics); False → the
+    # whole job places against one queue snapshot (fully batched).
+    batch_self_correct: bool = True
 
 
 @pytree_dataclass
@@ -180,48 +189,38 @@ def simulate(cfg: SimConfig, params: SimParams, key: jax.Array):
         mu_now = _current_mu(params, state.now)
         mu_view = scheduler_view_mu(state, mu_now)
 
-        if cfg.policy == pol.SPARROW:
-            n_probe = int(pcfg.sparrow_d) * mt
-            probes = jax.random.randint(
-                jax.random.fold_in(k_sched, 1), (max(n_probe, 1),), 0, n, dtype=jnp.int32
-            )
+        # The whole job places as ONE batch through the dispatch engine
+        # (SPARROW's d·m batch sampling included — it is just another
+        # engine policy now). Inactive slots (beyond n_tasks) place nothing;
+        # placement-constrained tasks are pinned via ``forced`` so their
+        # placements fold back into what later tasks of the job observe.
+        kc, ku, kd = jax.random.split(k_sched, 3)
+        active = jnp.arange(mt) < n_tasks
+        if cfg.constrained_frac > 0.0:
+            constrained = jax.random.uniform(kc, (mt,)) < cfg.constrained_frac
+            j_uni = jax.random.randint(ku, (mt,), 0, n, dtype=jnp.int32)
+            forced = jnp.where(constrained, j_uni, -1)
         else:
-            probes = jnp.zeros((1,), jnp.int32)
-
-        def place(carry, slot):
-            q_real, q_fake, busy, workers, targets = carry
-            kk = jax.random.fold_in(k_sched, slot)
-            active = slot < n_tasks
-            kc, ku, kp = jax.random.split(kk, 3)
-            constrained = jax.random.uniform(kc) < cfg.constrained_frac
-            j_uni = jax.random.randint(ku, (), 0, n, dtype=jnp.int32)
-            if cfg.policy == pol.SPARROW:
-                # batch sampling: among the d·m probes, current least-loaded.
-                j_pol = probes[jnp.argmin(q_real[probes])]
-            else:
-                j_pol = pol.get_policy(cfg.policy)(kp, q_real, mu_view, mu_now, pcfg)
-            j = jnp.where(constrained, j_uni, j_pol)
-
-            was_idle = (q_real[j] + q_fake[j]) == 0
-            busy = jnp.where(
-                active & was_idle, busy.at[j].set(state.now), busy
-            )
-            q_real = jnp.where(active, q_real.at[j].add(1), q_real)
-            target = state.s_real[j] + q_real[j]  # completion ordinal
-            workers = workers.at[slot].set(jnp.where(active, j, -1))
-            targets = targets.at[slot].set(jnp.where(active, target, -1))
-            return (q_real, q_fake, busy, workers, targets), None
-
-        init = (
-            state.q_real,
-            state.q_fake,
-            state.busy_start,
-            jnp.full((mt,), -1, jnp.int32),
-            jnp.full((mt,), -1, jnp.int32),
+            forced = None
+        res = dsp.dispatch(
+            cfg.policy, kd, state.q_real, mu_view, mu_now, pcfg, mt,
+            active=active, forced=forced,
+            fold_chunks=(mt if cfg.batch_self_correct else 1),
+            use_kernel=False,
         )
-        (q_real, q_fake, busy, workers, targets), _ = jax.lax.scan(
-            place, init, jnp.arange(mt)
+        workers = res.workers  # i32[mt], -1 at inactive slots
+        wsafe = jnp.where(active, workers, 0)
+        counts = res.q_after - state.q_real
+        q_real = res.q_after
+        # Completion ordinal of each task at its worker: completions so far
+        # + queue snapshot + this task's rank within the batch (1-indexed).
+        rank = dsp.within_batch_rank(workers, active)
+        targets = jnp.where(
+            active, state.s_real[wsafe] + state.q_real[wsafe] + rank + 1, -1
         )
+        was_idle = (state.q_real + state.q_fake) == 0
+        busy = jnp.where((counts > 0) & was_idle, state.now, state.busy_start)
+
         new_state = state.replace(q_real=q_real, busy_start=busy, arr=arr2)
         ev = dict(
             code=jnp.int32(EV_ARRIVAL), worker=jnp.int32(-1),

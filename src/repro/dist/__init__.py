@@ -1,0 +1,3 @@
+"""Distribution layer: sharding specs, train steps, gradient compression,
+pipeline parallelism, and Rosella-based straggler mitigation for
+synchronous data-parallel training."""

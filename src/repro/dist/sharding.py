@@ -1,0 +1,40 @@
+"""Sharding context + PartitionSpecs for the training stack.
+
+Minimal-but-real layer: ``make_ctx`` wraps a mesh with a NamedSharding
+factory; ``param_specs``/``opt_state_specs`` return replicated ``P()``
+specs for every leaf (data-parallel baseline — GSPMD still shards the
+batch math over the ``data`` axis inside jit). ZeRO-1 sharding of the
+optimizer masters/moments over ``data`` is the documented next step
+(ROADMAP "Open items"); the spec plumbing here is already shaped for it
+(one spec per leaf, independent of the param specs).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    mesh: jax.sharding.Mesh
+
+    def ns(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+
+def make_ctx(mesh) -> ShardCtx:
+    return ShardCtx(mesh=mesh)
+
+
+def param_specs(cfg, ctx: ShardCtx, params):
+    """One PartitionSpec per param leaf (replicated baseline)."""
+    del cfg, ctx
+    return jax.tree.map(lambda _: P(), params)
+
+
+def opt_state_specs(cfg, ctx: ShardCtx, pspecs, params):
+    """Specs for one optimizer-state leaf tree (master / m / v)."""
+    del cfg, ctx, pspecs
+    return jax.tree.map(lambda _: P(), params)

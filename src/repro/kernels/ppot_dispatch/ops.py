@@ -1,11 +1,13 @@
 """Jit'd public wrapper for the PPoT dispatch kernel.
 
 On CPU (this container) the Pallas path runs in interpret mode; on TPU it
-compiles to Mosaic. ``schedule_batch_kernel`` is the drop-in batched
-replacement for ``core.policies.schedule_batch(PPOT_SQ2, ...)`` when the
-caller can tolerate a *stale queue view within a batch* (all B jobs see the
-same queue lengths — the distributed-scheduler reality; the returned counts
-let the caller fold the batch back into its view).
+compiles to Mosaic. The kernel is wired into the unified batched dispatch
+engine (``core/dispatch.py``) as the automatic PPoT-SQ(2) fast path on TPU
+(``dispatch(..., use_kernel=None)``); the engine's pure-jnp path computes
+the identical dense inverse-CDF + SQ(2) math, so the two agree
+bit-for-bit on the same uniforms (tests/test_kernels.py,
+tests/test_dispatch.py). ``dispatch``/``dispatch_ref`` below remain the
+standalone kernel entry points for kernel-level tests and benchmarks.
 """
 from __future__ import annotations
 

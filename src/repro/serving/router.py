@@ -3,15 +3,22 @@ model serving: N replica groups of the same model run on heterogeneous
 slices (different chip generations, or slices degraded by co-tenants — the
 paper's Fig. 2). The router is the Rosella scheduler:
 
-  * requests arrive → arrival estimator updates λ̂,
-  * PPoT-SQ(2) picks a replica per request (probe 2 ∝ μ̂, shorter queue),
+  * requests arrive → arrival estimator updates λ̂ (batch-aware),
+  * routing goes through the unified batched dispatch engine
+    (core/dispatch.py): ``route(now, k)`` places a whole batch of k
+    requests in ONE jitted engine call — every request probes 2 replicas
+    ∝ μ̂ against the router's queue snapshot, conflicts fold back via one
+    scatter-add — instead of k per-request host round-trips,
   * completions report service times → LEARNER-AGGREGATE refreshes μ̂,
   * benchmark requests (canned prompts) keep μ̂ fresh on idle replicas
     (LEARNER-DISPATCHER) at rate c0(μ̄ − λ̂),
-  * multiple router shards sync μ̂ via pmean (paper §5).
+  * multiple router shards sync μ̂ via pmean (paper §5,
+    core/scheduler.make_sharded_schedule).
 
-The replica execution engine is pluggable: ``ReplicaPool`` drives real
-``decode_fn`` steps for in-process replicas (examples/serve_rosella.py);
+``run_simulation(arrival_batch=k)`` exercises the batched path end to end:
+arrivals are grouped into batches of k and routed together. The replica
+execution engine is pluggable: ``ReplicaPool`` drives real ``decode_fn``
+steps for in-process replicas (examples/serve_rosella.py);
 ``SimulatedPool`` models heterogeneous replica speeds for benchmarks.
 """
 from __future__ import annotations
@@ -80,6 +87,7 @@ class RosellaRouter:
         self.n = n_replicas
 
     def route(self, now: float, k: int = 1) -> np.ndarray:
+        """Route a batch of k requests in one dispatch-engine call."""
         return np.asarray(self.sched.schedule(now, k, policy=self.policy))
 
     def complete(self, completions: "list[Completion]"):
@@ -108,10 +116,17 @@ def run_simulation(
     request_cost: float = 1.0,
     speed_schedule: "list[tuple[float, np.ndarray]] | None" = None,
     seed: int = 0,
+    arrival_batch: int = 1,
 ):
     """Closed-loop serving simulation: Poisson arrivals, Rosella routing,
     completion telemetry fed back. Returns response-time array + router
-    estimate trace. ``speed_schedule``: [(t, speeds), ...] volatility."""
+    estimate trace. ``speed_schedule``: [(t, speeds), ...] volatility.
+
+    ``arrival_batch > 1`` groups that many consecutive arrivals and routes
+    them in ONE engine call (the production batched-frontend mode); each
+    request still enters its replica at its own arrival time and response
+    times are measured per request.
+    """
     rng = np.random.RandomState(seed)
     t, rid, seq = 0.0, 0, 0
     responses = []
@@ -120,12 +135,14 @@ def run_simulation(
     sched_i = 0
 
     while t < horizon:
-        t += rng.exponential(1.0 / arrival_rate)
+        gaps = rng.exponential(1.0 / arrival_rate, size=arrival_batch)
+        times = t + np.cumsum(gaps)
+        t = float(times[-1])
         if speed_schedule is not None:
             while sched_i < len(speed_schedule) and speed_schedule[sched_i][0] <= t:
                 pool.set_speeds(speed_schedule[sched_i][1])
                 sched_i += 1
-        # flush completions that happened before this arrival
+        # flush completions that happened before this batch
         done_now = []
         while pending_events and pending_events[0][0] <= t:
             done_now.append(heapq.heappop(pending_events)[2])
@@ -138,14 +155,16 @@ def run_simulation(
             heapq.heappush(pending_events, (comp.t_done, seq, comp))
             seq += 1
 
-        req = Request(rid=rid, arrival=t)
-        rid += 1
-        cost = request_cost * rng.exponential(1.0)
-        j = int(router.route(t, 1)[0])
-        comp = pool.submit(j, req, t, cost)
-        heapq.heappush(pending_events, (comp.t_done, seq, comp))
-        seq += 1
-        responses.append(comp.t_done - t)
-        mu_trace.append(router.mu_hat.copy())
+        # one engine call routes the whole batch
+        js = router.route(t, arrival_batch)
+        for ti, j in zip(times, js):
+            req = Request(rid=rid, arrival=float(ti))
+            rid += 1
+            cost = request_cost * rng.exponential(1.0)
+            comp = pool.submit(int(j), req, float(ti), cost)
+            heapq.heappush(pending_events, (comp.t_done, seq, comp))
+            seq += 1
+            responses.append(comp.t_done - float(ti))
+            mu_trace.append(router.mu_hat.copy())
 
     return np.asarray(responses), np.asarray(mu_trace)

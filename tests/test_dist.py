@@ -126,7 +126,8 @@ import json
 import jax, jax.numpy as jnp, numpy as np
 from repro.dist.pipeline import pipeline_apply
 
-mesh = jax.make_mesh((4,), ('pipe',), axis_types=(jax.sharding.AxisType.Auto,))
+# plain make_mesh: jax.sharding.AxisType only exists on newer jax
+mesh = jax.make_mesh((4,), ('pipe',))
 n_stages, n_micro, mb, d = 4, 8, 2, 16
 key = jax.random.PRNGKey(0)
 Ws = jax.random.normal(key, (n_stages, d, d)) * 0.3
@@ -158,7 +159,12 @@ import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.core import learner as lrn, scheduler as rs
 
-mesh = jax.make_mesh((8,), ('sched',), axis_types=(jax.sharding.AxisType.Auto,))
+if hasattr(jax, 'shard_map'):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map
+
+mesh = jax.make_mesh((8,), ('sched',))
 n = 4
 lcfg = lrn.default_learner_config(mu_bar=8.0)
 
@@ -169,8 +175,8 @@ def shard_fn(mu_hat_shard):
     return st.learner.mu_hat[None]
 
 mu_shards = jnp.arange(8*n, dtype=jnp.float32).reshape(8, n)
-out = jax.jit(jax.shard_map(shard_fn, mesh=mesh, in_specs=P('sched'),
-                            out_specs=P('sched')))(mu_shards)
+out = jax.jit(shard_map(shard_fn, mesh=mesh, in_specs=P('sched'),
+                        out_specs=P('sched')))(mu_shards)
 expected = mu_shards.mean(axis=0)
 err = float(jnp.max(jnp.abs(out - expected[None])))
 print(json.dumps({'err': err}))
