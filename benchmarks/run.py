@@ -21,6 +21,7 @@ from benchmarks import (
     moe_balance,
     sched_throughput,
     recovery_coupling,
+    serve_bench,
     straggler_bench,
     theory_validation,
     window_ablation,
@@ -37,6 +38,7 @@ SUITES = {
     "recovery": lambda q: recovery_coupling.run(),
     "theory": lambda q: theory_validation.run(),
     "sched": lambda q: sched_throughput.run(),
+    "serve": lambda q: serve_bench.run(horizon=600.0 if q else 3600.0),
     "moe": lambda q: moe_balance.run(),
     "straggler": lambda q: straggler_bench.run(),
 }

@@ -6,43 +6,58 @@ Per policy:
   * serial   — the one-task-at-a-time ``lax.scan`` frontend loop (per-task
                key split + single-task policy closure + per-task queue
                fold-back — the seed's ``schedule_batch`` hot path)
-  * batched  — one engine call, snapshot semantics + sorted-histogram
-               fold-back
+  * batched  — one engine call: counter-hash probe pair, inverse-CDF
+               sampling, snapshot select, matmul histogram fold-back
 
-plus, for PPoT-SQ(2), the Pallas kernel in interpret mode (correctness /
-dataflow proxy; TPU timings don't exist on a CPU container — the
-VMEM/MXU design is argued in kernels/ppot_dispatch/kernel.py).
+plus, for PPoT-SQ(2), the fused v2 Pallas kernel in interpret mode
+(correctness / dataflow proxy; TPU timings don't exist on a CPU container —
+the VMEM/MXU design is argued in kernels/ppot_dispatch/kernel.py).
 
-The paper targets "millions of tasks per second" — the batched engine on
-ONE CPU core already exceeds that; the acceptance bar for this benchmark is
-batched ≥ 50× serial for PPoT-SQ(2) at n=64, B=4096.
+Timing methodology: per-call latency is sampled over ``rounds`` repeated
+timing rounds and the BEST round is reported (the container's CPU clock is
+noisy-neighbor throttled; best-of-rounds recovers the machine's actual
+capability, p50/p99 over rounds quantify the jitter).
+
+The paper targets "millions of tasks per second"; PR-1 recorded 5.8M
+decisions/s for batched PPoT-SQ(2) at the reference shape (n=64, B=4096).
+This PR's acceptance bar is ≥ 1.5× that number, recorded in
+``BENCH_dispatch.json`` (``ppot_sq2.improvement_vs_pr1``).
 """
 from __future__ import annotations
 
-import sys
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import csv_row
 from repro.core import dispatch as dsp
 from repro.core import policies as pol
 from repro.kernels.ppot_dispatch import ops as pd_ops
 
+PR1_BASELINE_DPS = 5.8e6  # recorded by PR 1 at n=64, B=4096 on CPU
 
-def _time(fn, *args, iters=20):
+
+def _time_rounds(fn, *args, iters=20, rounds=5):
+    """Per-call seconds over ``rounds`` timing rounds: (best, p50, p99)."""
     out = fn(*args)  # compile
     jax.block_until_ready(out)
-    t0 = time.time()
-    for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.time() - t0) / iters
+    samples = []
+    for _ in range(rounds):
+        t0 = time.time()
+        for _ in range(iters):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        samples.append((time.time() - t0) / iters)
+    s = np.asarray(samples)
+    return float(s.min()), float(np.percentile(s, 50)), float(np.percentile(s, 99))
 
 
 def run(n: int = 64, B: int = 4096, seed: int = 0, *, serial_B: int | None = None,
-        iters: int = 20):
+        iters: int = 20, rounds: int = 5, json_path: str | None = None):
     """Time every policy through the engine. ``serial_B`` defaults to B."""
     serial_B = B if serial_B is None else serial_B
     key = jax.random.PRNGKey(seed)
@@ -52,6 +67,7 @@ def run(n: int = 64, B: int = 4096, seed: int = 0, *, serial_B: int | None = Non
     rows = []
     speedups = {}
     batched_dps = {}
+    policy_stats = {}
 
     for policy in pol.ALL_POLICIES:
         if policy == pol.SPARROW:
@@ -76,12 +92,20 @@ def run(n: int = 64, B: int = 4096, seed: int = 0, *, serial_B: int | None = Non
         def batched(key, q, policy=policy):
             return dsp.dispatch(policy, key, q, mu, mu, cfg, B, use_kernel=False)
 
-        t_s = _time(serial, key, q, iters=max(iters // 4, 2))
-        t_b = _time(batched, key, q, iters=iters)
+        t_s, _, _ = _time_rounds(serial, key, q, iters=max(iters // 4, 2),
+                                 rounds=max(rounds // 2, 2))
+        t_b, t_b50, t_b99 = _time_rounds(batched, key, q, iters=iters, rounds=rounds)
         dps_s = serial_B / t_s
         dps_b = B / t_b
         speedups[policy] = (t_s / serial_B) / (t_b / B)
         batched_dps[policy] = dps_b
+        policy_stats[policy] = {
+            "us_per_call_best": t_b * 1e6,
+            "us_per_call_p50": t_b50 * 1e6,
+            "us_per_call_p99": t_b99 * 1e6,
+            "decisions_per_s": dps_b,
+            "speedup_vs_serial": speedups[policy],
+        }
         if policy == pol.SPARROW:
             # sparrow's "serial" is the same batched water-fill re-run (no
             # single-task loop exists), so a speedup ratio would only
@@ -97,31 +121,117 @@ def run(n: int = 64, B: int = 4096, seed: int = 0, *, serial_B: int | None = Non
                                 f"decisions_per_s={dps_b:.0f};"
                                 f"speedup={speedups[policy]:.0f}x"))
 
-    # pallas interpret (not a perf number — correctness/dataflow proxy)
+    # PR-1's batched PPoT hot path (threefry probe pair + clipped
+    # searchsorted + sort-based fold), reconstructed verbatim and timed
+    # with the SAME best-of-rounds timer — de-confounds the ≥1.5× gate
+    # from the timer-methodology change vs the recorded 5.8M number.
+    from repro.kernels.ppot_dispatch import ref as pd_ref
+
+    @jax.jit
+    def pr1_batched(key, q):
+        k1, _, _, _ = jax.random.split(key, 4)
+        bits = jax.random.bits(k1, (B,), jnp.uint32)
+        u1 = (bits >> 16).astype(jnp.float32) * (1.0 / 65536.0)
+        u2 = (bits & jnp.uint32(0xFFFF)).astype(jnp.float32) * (1.0 / 65536.0)
+        cdf = pd_ref.make_cdf(mu)
+        j1 = jnp.clip(jnp.searchsorted(cdf, u1, side="right"), 0, n - 1)
+        j2 = jnp.clip(jnp.searchsorted(cdf, u2, side="right"), 0, n - 1)
+        w = jnp.where(q[j1] <= q[j2], j1, j2).astype(jnp.int32)
+        act = jnp.ones((B,), bool)
+        wm = jnp.where(act, w, n)
+        edges = jnp.searchsorted(jnp.sort(wm), jnp.arange(n + 1), side="left")
+        q_after = q + jnp.diff(edges).astype(q.dtype)
+        return jnp.where(act, w, -1), q_after
+
+    t_p1, _, _ = _time_rounds(pr1_batched, key, q, iters=iters, rounds=rounds)
+    dps_p1 = B / t_p1
+    rows.append(csv_row("sched_batched_ppot_pr1_path", t_p1 / B * 1e6,
+                        f"decisions_per_s={dps_p1:.0f};same_run_baseline"))
+
+    # pallas fused v2 kernel, interpret mode (not a perf number — a
+    # correctness/dataflow proxy that the fused probe→select→fold path
+    # returns the engine's exact (workers, q_after))
+    t0 = time.time()
+    rk = dsp.dispatch(pol.PPOT_SQ2, key, q, mu, mu, cfg, min(B, 512),
+                      use_kernel=True, interpret=True)
+    jax.block_until_ready(rk)
+    t_int = time.time() - t0
+    rj = dsp.dispatch(pol.PPOT_SQ2, key, q, mu, mu, cfg, min(B, 512),
+                      use_kernel=False)
+    fused_ok = bool(
+        np.array_equal(np.asarray(rk.workers), np.asarray(rj.workers))
+        and np.array_equal(np.asarray(rk.q_after), np.asarray(rj.q_after))
+    )
+    rows.append(csv_row("sched_pallas_fused_interpret", t_int / min(B, 512) * 1e6,
+                        f"mode=interpret;bit_identical={fused_ok};"
+                        "see_kernel_py_for_TPU_design"))
+    # v1 (select-only) kernel entry point stays exercised as the oracle
     t0 = time.time()
     pd_ops.dispatch(key, mu, q, min(B, 512), interpret=True)
-    t_int = time.time() - t0
-    rows.append(csv_row("sched_pallas_interpret", t_int / min(B, 512) * 1e6,
-                        "mode=interpret;see_kernel_py_for_TPU_design"))
+    t_v1 = time.time() - t0
+    rows.append(csv_row("sched_pallas_interpret", t_v1 / min(B, 512) * 1e6,
+                        "mode=interpret;v1_select_only_oracle"))
 
-    # The ≥50× acceptance bar is defined at the reference shape (n=64,
-    # B=4096 vs a same-size serial scan); at other shapes report the raw
-    # numbers without asserting the bar.
+    # The ≥50× / ≥1.5×-PR-1 acceptance bars are defined at the reference
+    # shape (n=64, B=4096); at other shapes report raw numbers only.
     at_reference = (n, B, serial_B) == (64, 4096, 4096)
+    improvement = batched_dps[pol.PPOT_SQ2] / PR1_BASELINE_DPS
+    improvement_same_run = batched_dps[pol.PPOT_SQ2] / dps_p1
     claim = (
         f"ppot_speedup={speedups[pol.PPOT_SQ2]:.0f}x;"
         f"meets_1M_per_s={batched_dps[pol.PPOT_SQ2] > 1e6};"
     )
     if at_reference:
-        claim += f"meets_50x={speedups[pol.PPOT_SQ2] >= 50}"
+        claim += (f"meets_50x={speedups[pol.PPOT_SQ2] >= 50};"
+                  f"vs_pr1_5.8M={improvement:.2f}x;"
+                  f"vs_pr1_same_run={improvement_same_run:.2f}x")
     else:
-        claim += "reference_shape=False(50x_bar_applies_at_n64_B4096)"
+        claim += "reference_shape=False(bars_apply_at_n64_B4096)"
     rows.append(csv_row("sched_claim_millions_per_sec", 0.0, claim))
-    return rows, {"speedups": speedups, "batched_dps": batched_dps}
+
+    summary = {
+        "config": {"n": n, "B": B, "serial_B": serial_B, "iters": iters,
+                   "rounds": rounds, "backend": jax.default_backend(),
+                   "methodology": "best-of-rounds per-call latency"},
+        "policies": policy_stats,
+        "ppot_sq2": {
+            "decisions_per_s": batched_dps[pol.PPOT_SQ2],
+            "us_per_call_best": policy_stats[pol.PPOT_SQ2]["us_per_call_best"],
+            "us_per_call_p50": policy_stats[pol.PPOT_SQ2]["us_per_call_p50"],
+            "us_per_call_p99": policy_stats[pol.PPOT_SQ2]["us_per_call_p99"],
+            "speedup_vs_serial": speedups[pol.PPOT_SQ2],
+            "pr1_recorded_baseline_decisions_per_s": PR1_BASELINE_DPS,
+            "improvement_vs_pr1_recorded": improvement,
+            # same machine state, same timer — the methodology-clean ratio
+            "pr1_path_same_run_decisions_per_s": dps_p1,
+            "improvement_vs_pr1_same_run": improvement_same_run,
+            "meets_1p5x_bar": bool(
+                at_reference
+                and improvement >= 1.5
+                and improvement_same_run >= 1.5
+            ),
+            "at_reference_shape": at_reference,
+        },
+        "fused_kernel_interpret_bit_identical": fused_ok,
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(summary, f, indent=1)
+        rows.append(csv_row("sched_bench_json", 0.0, f"wrote={json_path}"))
+    return rows, {"speedups": speedups, "batched_dps": batched_dps,
+                  "summary": summary}
 
 
 if __name__ == "__main__":
-    smoke = "--smoke" in sys.argv
-    kw = dict(n=16, B=1024, serial_B=128, iters=4) if smoke else {}
-    for r in run(**kw)[0]:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    if args.out is None:  # smoke runs must not clobber the full-shape record
+        name = "BENCH_dispatch_smoke.json" if args.smoke else "BENCH_dispatch.json"
+        args.out = os.path.join(os.path.dirname(__file__), "..", name)
+    kw = dict(n=16, B=1024, serial_B=128, iters=4, rounds=2) if args.smoke else {}
+    for r in run(json_path=os.path.abspath(args.out), **kw)[0]:
         print(r)

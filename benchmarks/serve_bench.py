@@ -1,0 +1,143 @@
+"""§Perf (serving side) — wall-clock of the closed-loop serving simulation:
+the vectorized ``run_simulation`` event loop vs the PR-1 per-request loop
+(``run_simulation_reference`` driving the PR-1 ``ReferenceRouter``).
+
+Both loops consume identical numpy RNG streams (arrival gaps + request
+costs), so their workloads are the same requests; each is measured COLD,
+end to end, the way a fresh serving run actually pays: the vectorized loop
+compiles a fixed, small set of jitted steps once, while the PR-1 path
+retraces ``report_completions`` for every new completion-flush size it
+meets (its real deployment behavior), syncs μ̂ device→host once per
+REQUEST, and churns Python Request/Completion objects through a heapq.
+
+Parity (p50/p99 response times) is reported from a deterministic
+``async_mu=False`` run of the vectorized loop — bit-equal key streams to
+the PR-1 loop; the production ``async_mu=True`` wall-clock run may adopt a
+refreshed μ̂ one batch later (never blocking on the learner), which leaves
+percentiles statistically indistinguishable but not bit-equal.
+
+Emits ``BENCH_serve.json`` (wall-clock, per-batch ms, p50/p99, speedup).
+
+  PYTHONPATH=src:. python benchmarks/serve_bench.py [--smoke] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.core import metrics as M
+from repro.serving import (
+    RosellaRouter,
+    SimulatedPool,
+    run_simulation,
+    run_simulation_reference,
+)
+from repro.serving.router import ReferenceRouter
+
+SPEEDS = np.array([0.25, 0.5, 1.0, 2.0, 1.0, 0.5, 2.0, 1.0])
+
+
+def _volatility(horizon: float, period: float = 300.0):
+    """Fig-11-style worker-speed permutations every ``period`` sim-seconds —
+    the paper's volatile-cluster serving scenario. Queue swings under
+    volatility also widen the completion-flush size distribution, which is
+    exactly the retrace surface the PR-1 loop pays for per distinct size."""
+    rng = np.random.RandomState(42)
+    return [(t, SPEEDS[rng.permutation(len(SPEEDS))])
+            for t in np.arange(period, horizon, period)]
+
+
+def _run(loop, router_cls, *, horizon, arrival_batch, rate, seed, **router_kw):
+    router = router_cls(len(SPEEDS), mu_bar=SPEEDS.sum(), seed=0, **router_kw)
+    pool = SimulatedPool(SPEEDS)
+    t0 = time.time()
+    resp, mu = loop(router, pool, arrival_rate=rate, horizon=horizon,
+                    seed=seed, arrival_batch=arrival_batch,
+                    speed_schedule=_volatility(horizon))
+    wall = time.time() - t0
+    return resp, mu, wall
+
+
+def run(horizon: float = 3600.0, arrival_batch: int = 64, rate: float = 6.0,
+        seed: int = 0, json_path: str | None = None):
+    rows = []
+    n_batches = max(int(rate * horizon / arrival_batch), 1)
+
+    # process-level jax/backend init is not part of either loop's cost
+    import jax
+    import jax.numpy as jnp
+    jax.block_until_ready(jnp.zeros((8,)) + 1)
+
+    # 1) vectorized loop, production config (async μ̂), COLD
+    resp_v, mu_v, wall_v = _run(run_simulation, RosellaRouter,
+                                horizon=horizon, arrival_batch=arrival_batch,
+                                rate=rate, seed=seed)
+    # 2) PR-1 loop + PR-1 router, COLD (pays its per-shape retraces)
+    resp_r, mu_r, wall_r = _run(run_simulation_reference, ReferenceRouter,
+                                horizon=horizon, arrival_batch=arrival_batch,
+                                rate=rate, seed=seed)
+    # 3) deterministic vectorized run for bit-comparable parity percentiles
+    resp_d, _, _ = _run(run_simulation, RosellaRouter,
+                        horizon=horizon, arrival_batch=arrival_batch,
+                        rate=rate, seed=seed, async_mu=False)
+
+    sum_v = M.serve_summary(resp_v, mu_v)
+    sum_r = M.serve_summary(resp_r, mu_r)
+    sum_d = M.serve_summary(resp_d)
+    speedup = wall_r / wall_v
+    par50 = abs(sum_d["p50"] - sum_r["p50"]) / sum_r["p50"]
+    par99 = abs(sum_d["p99"] - sum_r["p99"]) / sum_r["p99"]
+
+    rows.append(csv_row("serve_vectorized", wall_v / n_batches * 1e6,
+                        f"wall_s={wall_v:.2f};p50={sum_v['p50']:.3f};"
+                        f"p99={sum_v['p99']:.3f};requests={sum_v['n_requests']}"))
+    rows.append(csv_row("serve_pr1_loop", wall_r / n_batches * 1e6,
+                        f"wall_s={wall_r:.2f};p50={sum_r['p50']:.3f};"
+                        f"p99={sum_r['p99']:.3f}"))
+    rows.append(csv_row("serve_claim", 0.0,
+                        f"speedup={speedup:.2f}x;meets_5x={speedup >= 5.0};"
+                        f"parity_p50={par50 * 100:.2f}%;"
+                        f"parity_p99={par99 * 100:.2f}%"))
+
+    summary = {
+        "config": {"horizon": horizon, "arrival_batch": arrival_batch,
+                   "arrival_rate": rate, "replicas": len(SPEEDS),
+                   "seed": seed, "n_batches": n_batches,
+                   "volatility": "speed permutation every 300 s (Fig. 11)",
+                   "methodology": "cold end-to-end wall-clock per loop"},
+        "vectorized": {"wall_s": wall_v,
+                       "per_batch_ms": wall_v / n_batches * 1e3, **sum_v},
+        "pr1_loop": {"wall_s": wall_r,
+                     "per_batch_ms": wall_r / n_batches * 1e3, **sum_r},
+        "speedup_wall": speedup,
+        "meets_5x_bar": bool(speedup >= 5.0),
+        "parity": {"mode": "async_mu=False (bit-equal key streams)",
+                   "p50_rel": par50, "p99_rel": par99,
+                   "within_5pct": bool(par50 < 0.05 and par99 < 0.05)},
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(summary, f, indent=1)
+        rows.append(csv_row("serve_bench_json", 0.0, f"wrote={json_path}"))
+    return rows, summary
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--horizon", type=float, default=None)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    if args.out is None:  # smoke runs must not clobber the full-shape record
+        name = "BENCH_serve_smoke.json" if args.smoke else "BENCH_serve.json"
+        args.out = os.path.join(os.path.dirname(__file__), "..", name)
+    horizon = args.horizon or (300.0 if args.smoke else 3600.0)
+    for r in run(horizon=horizon, arrival_batch=args.batch,
+                 json_path=os.path.abspath(args.out))[0]:
+        print(r)

@@ -20,5 +20,11 @@ python -m pytest -x -q -m "not slow" \
 # ~10 s engine smoke: all policies, reduced shapes
 timeout 120 python benchmarks/sched_throughput.py --smoke
 
+# non-gating perf smoke: record the serving perf trajectory at reduced
+# scale (writes BENCH_serve_smoke.json; smoke runs deliberately do NOT
+# touch the committed full-shape BENCH_dispatch.json / BENCH_serve.json —
+# refresh those by running both benchmarks without --smoke)
+timeout 600 python benchmarks/serve_bench.py --smoke || true
+
 # informational: full not-slow suite (known model-layer failures tolerated)
 python -m pytest -q -m "not slow" || true

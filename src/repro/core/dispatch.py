@@ -20,15 +20,22 @@ Mechanics:
                       μ̂-weighted policies, batched ``randint`` for the
                       uniform ones. Because the draws never depend on the
                       queue, the batched path and the sequential oracle
-                      consume *identical* streams.
+                      consume *identical* streams. The PPoT uniform pair
+                      comes from a counter-hash PRNG (``_uniform_pair``) —
+                      an order of magnitude cheaper than threefry on the
+                      hot path. The CDF is built once per batch and
+                      threaded through the draws dict to every consumer
+                      (jnp sampling, v1 kernel, fused v2 kernel).
 
   selection           SQ(2) / LL(2) / ε-greedy folds are elementwise
                       against the queue snapshot every task in the batch
                       observes (the distributed-frontend reality: probes
                       are in flight concurrently).
 
-  conflict fold-back  One scatter-add folds the batch's own placements back
-                      into the caller's queue view (``q_after``).
+  conflict fold-back  A sorted-histogram fold returns the batch's own
+                      placements into the caller's queue view
+                      (``q_after``). On the fused-kernel path the fold
+                      happens *inside* the Pallas kernel.
 
   self-correction     Optional ``fold_chunks=C``: the batch is placed in C
                       sub-chunks, re-snapshotting the queue between chunks.
@@ -36,9 +43,19 @@ Mechanics:
                       semantics — retained as the reference oracle
                       (``dispatch_sequential``) for parity tests.
 
-The Pallas ``ppot_dispatch`` kernel is selected automatically as the
-PPoT-SQ(2) fast path on TPU (``use_kernel=None``); elsewhere the pure-jnp
-math — bit-identical to the kernel (tests/test_kernels.py) — runs instead.
+Kernel contract (v2, ``kernels/ppot_dispatch``): when the PPoT-SQ(2) batch
+has no active-mask and no pinned slots, the fused kernel computes
+probe → select → in-kernel histogram fold-back in ONE Pallas call and
+returns ``(workers, q_after)`` directly — the engine adds nothing on top.
+Batches with masks/pins fall back to the v1 select kernel + engine fold.
+Both paths are bit-identical to the pure-jnp math (tests/test_kernels.py,
+tests/test_dispatch.py); ``use_kernel=None`` auto-selects the kernel on
+TPU and the jnp path elsewhere.
+
+``dispatch_inplace`` is the same engine jitted with ``q`` donated, for
+host-driven callers that hand over their queue buffer and rebind it to
+``q_after``. (The serving router gets the same donation one level up:
+``scheduler.route_view``/``serve_step`` donate the router's q_view.)
 """
 from __future__ import annotations
 
@@ -50,7 +67,10 @@ import jax.numpy as jnp
 
 from repro.core import policies as pol
 from repro.kernels.ppot_dispatch import ref as pd_ref
-from repro.kernels.ppot_dispatch.kernel import ppot_dispatch as _ppot_kernel
+from repro.kernels.ppot_dispatch.kernel import (
+    ppot_dispatch as _ppot_kernel,
+    ppot_dispatch_fused as _ppot_kernel_fused,
+)
 
 
 class DispatchResult(NamedTuple):
@@ -67,31 +87,77 @@ def inverse_cdf_sample(cdf: jax.Array, u: jax.Array) -> jax.Array:
 
     ``searchsorted(side="right")`` returns exactly that count, so the jnp
     path stays bit-identical to the Pallas kernel's dense comparison while
-    running O(B log n) instead of O(B·n) (≈6× on CPU at n=64, B=4096).
+    running O(B log n) instead of O(B·n). Small problems (the serving
+    router's per-batch shapes) take the dense-comparison form instead —
+    the same count, cheaper to run AND to compile than the searchsorted
+    while-loop. No clip is needed for the PPoT pair: ``make_cdf`` ends at
+    exactly 1.0 and the 16-bit uniforms are < 1.0, so j ≤ n−1 already;
+    callers with open-range uniforms clip.
     """
     n = cdf.shape[0]
-    j = jnp.searchsorted(cdf, u, side="right").astype(jnp.int32)
-    return jnp.clip(j, 0, n - 1)
+    if n * u.shape[0] <= (1 << 16):
+        return jnp.sum((cdf[None, :] <= u[:, None]), axis=1).astype(jnp.int32)
+    return jnp.searchsorted(cdf, u, side="right").astype(jnp.int32)
+
+
+def _key_data(key: jax.Array) -> jax.Array:
+    """uint32[2] words of ``key`` (accepts legacy and typed PRNG keys)."""
+    if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+        key = jax.random.key_data(key)
+    return key.astype(jnp.uint32)
+
+
+def _fmix32(x: jax.Array) -> jax.Array:
+    """murmur3 finalizer — full-avalanche 32-bit mix."""
+    x ^= x >> 16
+    x *= jnp.uint32(0x85EBCA6B)
+    x ^= x >> 13
+    x *= jnp.uint32(0xC2B2AE35)
+    x ^= x >> 16
+    return x
 
 
 def _uniform_pair(key: jax.Array, B: int) -> tuple[jax.Array, jax.Array]:
-    """Two batches of uniforms from ONE PRNG sweep: the high/low 16 bits of
-    a single u32 draw. Halves the threefry cost on the PPoT hot path; the
-    2^-16 grid is far below any μ̂ resolution the scheduler acts on."""
-    bits = jax.random.bits(key, (B,), jnp.uint32)
-    u1 = (bits >> 16).astype(jnp.float32) * (1.0 / 65536.0)
-    u2 = (bits & jnp.uint32(0xFFFF)).astype(jnp.float32) * (1.0 / 65536.0)
+    """Two batches of uniforms from ONE counter-hash sweep.
+
+    Each slot hashes its index (a Weyl sequence seeded by the two PRNG key
+    words) through the murmur3 finalizer — a SplitMix-style counter
+    generator — and splits the u32 into high/low 16-bit uniforms. ~10×
+    cheaper than the threefry sweep it replaced (the RNG was the single
+    largest cost of the PPoT hot path on CPU); the 2^-16 grid is far below
+    any μ̂ resolution the scheduler acts on.
+    """
+    kd = _key_data(key)
+    x = jnp.arange(B, dtype=jnp.uint32) * jnp.uint32(0x9E3779B9) + kd[0]
+    x = _fmix32(x ^ (kd[1] * jnp.uint32(0x85EBCA6B)))
+    u1 = (x >> 16).astype(jnp.float32) * (1.0 / 65536.0)
+    u2 = (x & jnp.uint32(0xFFFF)).astype(jnp.float32) * (1.0 / 65536.0)
     return u1, u2
 
 
-def _fold_counts(q: jax.Array, workers: jax.Array, active: jax.Array) -> jax.Array:
-    """Per-worker placement counts via sort + searchsorted (≈2× faster than
-    an XLA scatter-add on CPU at B=4096). Inactive slots are binned at n
-    and fall off the histogram."""
+def _fold_counts(q: jax.Array, workers: jax.Array,
+                 active: jax.Array | None) -> jax.Array:
+    """Per-worker placement counts WITHOUT a scatter or a sort: split each
+    worker id into (hi, lo) digits, one-hot both halves, and contract the
+    two [B, √n]-ish indicator matrices over the batch axis — the [hi, lo]
+    product counts exactly the (hi, lo) pairs, i.e. the histogram. The
+    digit split keeps indicator construction at O(B·√n) instead of O(B·n),
+    and the contraction is a dense f32 matmul (exact for integer counts up
+    to 2^24) — ~2× faster than the XLA sort- or scatter-based folds on CPU
+    at n=64, B=4096. With an active mask, inactive slots are binned at a
+    sentinel (n) that falls off the histogram slice."""
     n = q.shape[0]
-    w = jnp.where(active, workers, n)
-    edges = jnp.searchsorted(jnp.sort(w), jnp.arange(n + 1), side="left")
-    return jnp.diff(edges).astype(q.dtype)
+    nbins = n if active is None else n + 1  # sentinel bin for inactive slots
+    w = workers if active is None else jnp.where(active, workers, n)
+    k = max((nbins - 1).bit_length() // 2, 1)
+    R2 = 1 << k
+    R1 = -(-nbins // R2)
+    hi = ((w[:, None] >> k) == jnp.arange(R1)[None, :]).astype(jnp.float32)
+    lo = ((w[:, None] & (R2 - 1)) == jnp.arange(R2)[None, :]).astype(jnp.float32)
+    counts = jax.lax.dot_general(
+        hi, lo, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    return counts.reshape(R1 * R2)[:n].astype(q.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -99,41 +165,49 @@ def _fold_counts(q: jax.Array, workers: jax.Array, active: jax.Array) -> jax.Arr
 # ---------------------------------------------------------------------------
 
 
-def _draws(policy: str, key, B: int, n: int, cfg, mu_hat, mu_true) -> dict:
+def _draws(policy: str, key, B: int, n: int, cfg, mu_hat, mu_true,
+           *, need_j: bool = True) -> dict:
     """Draw every random quantity the policy needs for a batch of B tasks.
 
-    Each entry is a [B]-shaped array (batch axis leading) so the engine can
-    re-chunk it for within-batch self-correction without re-drawing.
+    Each [B]-shaped entry (batch axis leading) can be re-chunked by the
+    engine for within-batch self-correction without re-drawing; the shared
+    ``"cdf"`` entry ([n]-shaped) is built ONCE here and threaded to every
+    consumer — jnp sampling, the v1 kernel and the fused v2 kernel all
+    read the same array. ``need_j=False`` skips materializing j1/j2 for
+    the fused-kernel path (the kernel re-derives them from u1/u2 on
+    device, bit-identically).
     """
-    # NOTE: k2 is intentionally unconsumed — the PPoT uniform pair moved to
-    # a single packed-bits draw on k1, and the 4-way split is kept so every
-    # validated RNG stream (fig8 parity, learner e2e) stays stable.
-    k1, k2, k3, k4 = jax.random.split(key, 4)
     d: dict[str, jax.Array] = {}
     if policy == pol.UNIFORM:
-        d["j_uni"] = jax.random.randint(k1, (B,), 0, n, dtype=jnp.int32)
+        d["j_uni"] = jax.random.randint(key, (B,), 0, n, dtype=jnp.int32)
     elif policy == pol.POT:
-        jj = jax.random.randint(k1, (2, B), 0, n, dtype=jnp.int32)
+        jj = jax.random.randint(key, (2, B), 0, n, dtype=jnp.int32)
         d["j1"], d["j2"] = jj[0], jj[1]
     elif policy == pol.PSS:
-        d["j1"] = inverse_cdf_sample(pd_ref.make_cdf(mu_hat), jax.random.uniform(k1, (B,)))
+        cdf = pd_ref.make_cdf(mu_hat)
+        u = jax.random.uniform(key, (B,))
+        d["j1"] = jnp.clip(inverse_cdf_sample(cdf, u), 0, n - 1)
     elif policy == pol.HALO:
-        d["j1"] = inverse_cdf_sample(pd_ref.make_cdf(mu_true), jax.random.uniform(k1, (B,)))
+        cdf = pd_ref.make_cdf(mu_true)
+        u = jax.random.uniform(key, (B,))
+        d["j1"] = jnp.clip(inverse_cdf_sample(cdf, u), 0, n - 1)
     elif policy in (pol.PPOT_SQ2, pol.PPOT_LL2):
-        cdf = pd_ref.make_cdf(mu_hat)
-        d["u1"], d["u2"] = _uniform_pair(k1, B)
-        d["j1"] = inverse_cdf_sample(cdf, d["u1"])
-        d["j2"] = inverse_cdf_sample(cdf, d["u2"])
+        d["cdf"] = pd_ref.make_cdf(mu_hat)
+        d["u1"], d["u2"] = _uniform_pair(key, B)
+        if need_j:
+            d["j1"] = inverse_cdf_sample(d["cdf"], d["u1"])
+            d["j2"] = inverse_cdf_sample(d["cdf"], d["u2"])
     elif policy == pol.BANDIT:
-        cdf = pd_ref.make_cdf(mu_hat)
+        k1, k3, k4 = jax.random.split(key, 3)
+        d["cdf"] = pd_ref.make_cdf(mu_hat)
         d["u1"], d["u2"] = _uniform_pair(k1, B)
-        d["j1"] = inverse_cdf_sample(cdf, d["u1"])
-        d["j2"] = inverse_cdf_sample(cdf, d["u2"])
+        d["j1"] = inverse_cdf_sample(d["cdf"], d["u1"])
+        d["j2"] = inverse_cdf_sample(d["cdf"], d["u2"])
         d["explore"] = jax.random.uniform(k3, (B,)) < cfg.bandit_eta
         d["j_uni"] = jax.random.randint(k4, (B,), 0, n, dtype=jnp.int32)
     elif policy == pol.SPARROW:
         n_probe = max(int(cfg.sparrow_d) * B, B)
-        d["probes"] = jax.random.randint(k1, (n_probe,), 0, n, dtype=jnp.int32)
+        d["probes"] = jax.random.randint(key, (n_probe,), 0, n, dtype=jnp.int32)
     else:
         raise ValueError(f"unknown policy {policy!r}; choose from {pol.ALL_POLICIES}")
     return d
@@ -153,8 +227,8 @@ def _select(policy: str, q_view, d: dict, mu_hat, mu_true, cfg,
         return d["j1"]
     if policy in (pol.POT, pol.PPOT_SQ2):
         if policy == pol.PPOT_SQ2 and kernel:
-            cdf = pd_ref.make_cdf(mu_hat)
-            return _ppot_kernel(cdf, q_view, d["u1"], d["u2"], interpret=interpret)
+            return _ppot_kernel(d["cdf"], q_view, d["u1"], d["u2"],
+                                interpret=interpret)
         j1, j2 = d["j1"], d["j2"]
         return jnp.where(q_view[j1] <= q_view[j2], j1, j2)
     if policy == pol.PPOT_LL2:
@@ -230,8 +304,26 @@ def within_batch_rank(workers: jax.Array, active: jax.Array) -> jax.Array:
 
     The per-worker ordinal of each task inside its own batch — what a
     sequential placement loop would have observed as "my position in this
-    worker's queue beyond the snapshot".
+    worker's queue beyond the snapshot". Sort-based O(B log B): a stable
+    argsort groups equal workers while preserving batch order, so the rank
+    is an exclusive running count of active slots since the group started —
+    no B×B comparison matrix (``within_batch_rank_ref`` keeps the O(B²)
+    all-pairs form as the parity oracle).
     """
+    B = workers.shape[0]
+    order = jnp.argsort(workers, stable=True)
+    sa = active[order].astype(jnp.int32)
+    sw = workers[order]
+    ex = jnp.cumsum(sa) - sa  # exclusive count of active slots so far
+    start = jnp.concatenate([jnp.ones((1,), bool), sw[1:] != sw[:-1]])
+    # ex is nondecreasing, so a running max of its value at group starts
+    # propagates "active count when my group began" to every group member.
+    base = jax.lax.cummax(jnp.where(start, ex, 0))
+    return jnp.zeros((B,), jnp.int32).at[order].set(ex - base)
+
+
+def within_batch_rank_ref(workers: jax.Array, active: jax.Array) -> jax.Array:
+    """O(B²) all-pairs reference for ``within_batch_rank`` (tests only)."""
     B = workers.shape[0]
     before = jnp.arange(B)[None, :] < jnp.arange(B)[:, None]
     same = (workers[None, :] == workers[:, None]) & active[None, :] & before
@@ -252,10 +344,7 @@ def _chunking(B: int, fold_chunks: int) -> tuple[int, int]:
     return C, Bp
 
 
-@functools.partial(
-    jax.jit, static_argnames=("policy", "B", "fold_chunks", "use_kernel", "interpret")
-)
-def dispatch(
+def _dispatch_impl(
     policy: str,
     key: jax.Array,
     q: jax.Array,  # i32[n] queue snapshot (real queue / scheduler view)
@@ -273,7 +362,7 @@ def dispatch(
     """Place ``B`` tasks in one engine call. Returns (workers[B], q_after).
 
     ``fold_chunks=1`` is the fully batched path (all tasks see the same
-    snapshot, one scatter-add fold-back). ``fold_chunks=C`` re-snapshots the
+    snapshot, one histogram fold-back). ``fold_chunks=C`` re-snapshots the
     queue between C equal sub-chunks (within-batch self-correction; B is
     padded up with inactive slots when C does not divide it);
     ``fold_chunks=B`` reproduces per-task sequential semantics and is the
@@ -281,14 +370,15 @@ def dispatch(
     (the simulator's placement-constrained tasks) — pinned placements fold
     back into the queue view the later chunks observe, like any other
     placement (for SPARROW the pin is applied after water-filling).
-    ``use_kernel=None`` auto-selects the Pallas PPoT kernel on TPU.
+    ``use_kernel=None`` auto-selects the Pallas PPoT kernel on TPU; plain
+    PPoT-SQ(2) batches (no mask, no pins) run the FUSED v2 kernel, which
+    returns (workers, q_after) in one call.
     """
     n = q.shape[0]
     if use_kernel is None:
         use_kernel = _on_tpu()
     if interpret is None:
         interpret = not _on_tpu()
-    act = active if active is not None else jnp.ones((B,), bool)
 
     if policy == pol.SPARROW:
         # Water-filling already models per-task fold-back over the probe
@@ -296,6 +386,7 @@ def dispatch(
         # folded into the fill's queue snapshot first, then the remaining
         # tasks water-fill around them (the seed interleaved pins at their
         # slot positions; folding them up front is the batched equivalent).
+        act = active if active is not None else jnp.ones((B,), bool)
         d = _draws(policy, key, B, n, cfg, mu_hat, mu_true)
         if forced is not None:
             pin = (forced >= 0) & act
@@ -310,45 +401,79 @@ def dispatch(
         workers = seq[jnp.clip(slot_rank, 0, B - 1)]
         if forced is not None:
             workers = jnp.where(pin, forced, workers)
+        workers = workers.astype(jnp.int32)
+        q_after = q + _fold_counts(q, workers, act)
+        return DispatchResult(workers=jnp.where(act, workers, -1), q_after=q_after)
+
+    C, Bp = _chunking(B, fold_chunks)
+    fused = (
+        use_kernel and policy == pol.PPOT_SQ2 and C == 1
+        and active is None and forced is None
+    )
+    act = active
+    if Bp != B:
+        pad = jnp.zeros((Bp - B,), bool)
+        head = jnp.ones((B,), bool) if act is None else act
+        act = jnp.concatenate([head, pad])
+        if forced is not None:
+            forced = jnp.concatenate([forced, jnp.full((Bp - B,), -1, jnp.int32)])
+    d = _draws(policy, key, Bp, n, cfg, mu_hat, mu_true, need_j=not fused)
+
+    if fused:
+        # One Pallas call: probe → select → in-kernel fold-back.
+        workers, q_after = _ppot_kernel_fused(
+            d["cdf"], q, d["u1"], d["u2"], interpret=interpret
+        )
+        return DispatchResult(workers=workers, q_after=q_after)
+
+    if C == 1:
+        kernel = use_kernel and policy == pol.PPOT_SQ2
+        workers = _select(policy, q, d, mu_hat, mu_true, cfg,
+                          kernel=kernel, interpret=interpret)
+        if forced is not None:
+            workers = jnp.where(forced >= 0, forced, workers)
     else:
-        C, Bp = _chunking(B, fold_chunks)
-        if Bp != B:
-            act = jnp.concatenate([act, jnp.zeros((Bp - B,), bool)])
-            if forced is not None:
-                forced = jnp.concatenate(
-                    [forced, jnp.full((Bp - B,), -1, jnp.int32)]
-                )
-        d = _draws(policy, key, Bp, n, cfg, mu_hat, mu_true)
-        if C == 1:
-            kernel = use_kernel and policy == pol.PPOT_SQ2
-            workers = _select(policy, q, d, mu_hat, mu_true, cfg,
-                              kernel=kernel, interpret=interpret)
-            if forced is not None:
-                workers = jnp.where(forced >= 0, forced, workers)
-        else:
-            fc_all = forced if forced is not None else jnp.full((Bp,), -1, jnp.int32)
-            stacked = {k: v.reshape(C, Bp // C) for k, v in d.items()}
-            stacked["_active"] = act.reshape(C, Bp // C)
-            stacked["_forced"] = fc_all.reshape(C, Bp // C)
+        fc_all = forced if forced is not None else jnp.full((Bp,), -1, jnp.int32)
+        d.pop("cdf", None)  # [n]-shaped; chunks re-use the materialized j's
+        stacked = {k: v.reshape(C, Bp // C) for k, v in d.items()}
+        stacked["_active"] = (
+            act if act is not None else jnp.ones((Bp,), bool)
+        ).reshape(C, Bp // C)
+        stacked["_forced"] = fc_all.reshape(C, Bp // C)
 
-            def body(qv, dc):
-                ac = dc.pop("_active")
-                fc = dc.pop("_forced")
-                w = _select(policy, qv, dc, mu_hat, mu_true, cfg, kernel=False)
-                w = jnp.where(fc >= 0, fc, w)
-                qv = qv + jnp.zeros_like(qv).at[w].add(ac.astype(qv.dtype))
-                return qv, w
+        def body(qv, dc):
+            ac = dc.pop("_active")
+            fc = dc.pop("_forced")
+            w = _select(policy, qv, dc, mu_hat, mu_true, cfg, kernel=False)
+            w = jnp.where(fc >= 0, fc, w)
+            qv = qv + jnp.zeros_like(qv).at[w].add(ac.astype(qv.dtype))
+            return qv, w
 
-            _, ws = jax.lax.scan(body, q, stacked)
-            workers = ws.reshape(Bp)
-        if Bp != B:
-            workers = workers[:B]
-            act = act[:B]
+        _, ws = jax.lax.scan(body, q, stacked)
+        workers = ws.reshape(Bp)
+    if Bp != B:
+        workers = workers[:B]
+        act = act[:B] if act is not None else None
 
     workers = workers.astype(jnp.int32)
     q_after = q + _fold_counts(q, workers, act)
-    workers = jnp.where(act, workers, -1)
+    if act is not None:
+        workers = jnp.where(act, workers, -1)
     return DispatchResult(workers=workers, q_after=q_after)
+
+
+_STATIC = ("policy", "B", "fold_chunks", "use_kernel", "interpret")
+
+dispatch = functools.partial(jax.jit, static_argnames=_STATIC)(_dispatch_impl)
+
+#: Same engine with ``q`` donated: the caller's queue buffer is consumed and
+#: rewritten in place as ``q_after`` — for host loops that rebind
+#: ``q = dispatch_inplace(...).q_after``; do NOT reuse the old ``q`` after
+#: calling this variant. (The serving router donates one level up, via
+#: ``scheduler.route_view``/``serve_step``.)
+dispatch_inplace = functools.partial(
+    jax.jit, static_argnames=_STATIC, donate_argnames=("q",)
+)(_dispatch_impl)
 
 
 def dispatch_sequential(

@@ -102,6 +102,31 @@ def percentiles(x: np.ndarray, ps=(5, 25, 50, 75, 95)) -> dict[int, float]:
     return {p: float(np.percentile(x, p)) for p in ps}
 
 
+def serve_summary(responses: np.ndarray, mu_trace: np.ndarray | None = None) -> dict:
+    """Summary of a serving-loop run (``serving.run_simulation``).
+
+    ``responses`` is per-request; ``mu_trace`` is sampled once per ARRIVAL
+    BATCH ([T_batches, n] — not per request), so time-indexed consumers
+    should treat rows as batch-boundary snapshots. Returns mean/p50/p99
+    response times plus the final μ̂ snapshot and its replica ranking.
+    """
+    out: dict = {"n_requests": int(np.asarray(responses).size)}
+    r = np.asarray(responses, dtype=np.float64)
+    if r.size:
+        out.update(
+            mean=float(r.mean()),
+            p50=float(np.percentile(r, 50)),
+            p99=float(np.percentile(r, 99)),
+        )
+    else:
+        out.update(mean=float("nan"), p50=float("nan"), p99=float("nan"))
+    if mu_trace is not None and len(mu_trace):
+        mu_last = np.asarray(mu_trace[-1], dtype=np.float64)
+        out["mu_final"] = [round(float(x), 4) for x in mu_last]
+        out["mu_ranking"] = np.argsort(-mu_last).tolist()
+    return out
+
+
 def queue_length_histogram(trace, worker: int, warmup_frac: float = 0.5):
     """Time-weighted histogram of one worker's queue length (Fig. 13)."""
     q = np.asarray(trace["q_real"])[:, worker]

@@ -54,8 +54,7 @@ def init_rosella(
     )
 
 
-@functools.partial(jax.jit, static_argnums=(3, 4))
-def schedule(
+def _schedule_impl(
     state: RosellaState,
     key: jax.Array,
     now: jax.Array,
@@ -65,7 +64,7 @@ def schedule(
     """Place ``m`` jobs arriving at ``now``; returns (workers[m], state').
 
     One batched engine call: all m jobs probe the frontend's queue snapshot
-    and the batch folds back into the view with one scatter-add (the
+    and the batch folds back into the view with one histogram fold (the
     paper's probe sees the queue including in-flight assignments from this
     frontend)."""
     arr = est.observe_arrivals_ema(state.arr, now, m, window=64)
@@ -75,6 +74,187 @@ def schedule(
         pol.default_policy_config(), m,
     )
     return res.workers, state.replace(q_view=res.q_after, arr=arr)
+
+
+schedule = functools.partial(jax.jit, static_argnums=(3, 4))(_schedule_impl)
+
+#: ``schedule`` with the state donated: the caller hands over its state
+#: buffers (q_view et al. are rewritten in place on device). Host-driven
+#: loops that rebind ``state = schedule_donated(state, ...)`` — the
+#: ``RosellaScheduler`` wrapper, the serving router — use this variant; do
+#: NOT reuse the old state object after calling it.
+schedule_donated = functools.partial(
+    jax.jit, static_argnums=(3, 4), donate_argnums=(0,)
+)(_schedule_impl)
+
+
+# ---------------------------------------------------------------------------
+# Double-buffered serving primitives (route() must never block on a learner
+# refresh — ROADMAP async-completion item). The router splits the state:
+# ``route_view`` touches only (q_view, arrival estimator) plus a μ̂ SNAPSHOT
+# it is handed, while ``fold_telemetry`` folds completions into the learner
+# on the side; the router flips its μ̂ snapshot to the refreshed one only
+# once that computation has actually materialized (jax async dispatch), so
+# the routing hot path never waits on LEARNER-AGGREGATE.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnums=(5, 6), donate_argnums=(0,))
+def route_view(
+    q_view: jax.Array,  # i32[n] — donated, rewritten in place
+    arr: est.EmaArrivalState,
+    mu_hat: jax.Array,  # f32[n] μ̂ snapshot (front buffer)
+    key: jax.Array,
+    now: jax.Array,
+    m: int,
+    policy: str = pol.PPOT_SQ2,
+) -> tuple[jax.Array, jax.Array, est.EmaArrivalState]:
+    """Route ``m`` requests against a queue view + μ̂ snapshot; no learner
+    state in the dependency chain. Returns (workers[m], q_view', arr')."""
+    arr2 = est.observe_arrivals_ema(arr, now, m, window=64)
+    res = dsp.dispatch(
+        policy, key, q_view, mu_hat, mu_hat, pol.default_policy_config(), m
+    )
+    return res.workers, res.q_after, arr2
+
+
+def absorb_completions(q_view: jax.Array, workers: jax.Array) -> jax.Array:
+    """Drain a completion batch (pad with -1) from the queue view — the
+    cheap half of completion handling; the learner half runs separately.
+    (Plain traced function: composed into ``complete_step``/``serve_step``.)
+    """
+    valid = workers >= 0
+    wc = jnp.where(valid, workers, 0)
+    dec = jnp.zeros_like(q_view).at[wc].add(-valid.astype(q_view.dtype))
+    return jnp.maximum(q_view + dec, 0)
+
+
+def fold_telemetry(
+    learner: lrn.LearnerState,
+    lcfg: lrn.LearnerConfig,
+    workers: jax.Array,  # i32[B] worker ids (pad with -1)
+    service_times: jax.Array,  # f32[B]
+    lam_hat: jax.Array,
+    now: jax.Array,
+) -> lrn.LearnerState:
+    """LEARNER-AGGREGATE for a completion batch + estimate refresh — the
+    expensive half of completion handling, kept off the routing path. The
+    whole batch lands in the sample rings via ONE vectorized scatter
+    (``learner.record_completions``), not a per-completion scan. (Plain
+    traced function: composed into ``complete_step``/``serve_step``.)"""
+    learner = lrn.record_completions(learner, workers, service_times, now)
+    return lrn.refresh_estimates(learner, lcfg, lam_hat, now)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def complete_step(
+    q_view: jax.Array,  # i32[n] — donated
+    learner: lrn.LearnerState,  # NOT donated: mu_hat may be aliased by the
+    # router's μ̂ front/pending buffers (see serve_step)
+    lcfg: lrn.LearnerConfig,
+    arr: est.EmaArrivalState,
+    workers: jax.Array,  # i32[B] worker ids (pad with -1)
+    service_times: jax.Array,  # f32[B]
+    now: jax.Array,
+):
+    """Fused completion fold: queue-view drain + LEARNER-AGGREGATE +
+    estimate refresh in one jit dispatch. Returns (q_view', learner')."""
+    q2 = absorb_completions(q_view, workers)
+    learner2 = fold_telemetry(
+        learner, lcfg, workers, service_times, est.lam_hat_ema(arr), now
+    )
+    return q2, learner2
+
+
+@functools.partial(jax.jit, static_argnums=(9, 10, 11, 12), donate_argnums=(0,))
+def serve_step(
+    q_view: jax.Array,  # i32[n] — donated
+    learner: lrn.LearnerState,  # NOT donated: the μ̂ front buffer may alias
+    # learner.mu_hat (at init, and whenever a flip adopted it) — donating
+    # would invalidate the routing snapshot
+    arr: est.EmaArrivalState,
+    mu_hat: jax.Array,  # f32[n] μ̂ snapshot (front buffer)
+    lcfg: lrn.LearnerConfig,
+    key: jax.Array,
+    comp_workers: jax.Array,  # i32[P] due completions (pad with -1)
+    comp_times: jax.Array,  # f32[P]
+    scalars,  # (now, last_fake_time, comp_now)
+    m: int,
+    policy: str = pol.PPOT_SQ2,
+    max_fake: int = 8,
+    use_fresh_mu: bool = False,
+):
+    """One whole serving turn in ONE jit dispatch: flush the due completion
+    batch, draw benchmark requests, route the arrival batch.
+
+    The three stages keep the double-buffer seam inside the executable:
+    the route subgraph depends only on (q_view drained of completions, the
+    μ̂ SNAPSHOT argument, arrival estimator), never on the learner fold /
+    refresh subgraph — XLA can run LEARNER-AGGREGATE concurrently on
+    another thread while the route computes. ``use_fresh_mu=True`` instead
+    routes on THIS flush's refreshed μ̂ (PR-1's blocking semantics,
+    bit-deterministic — the router's ``async_mu=False`` mode). Key
+    consumption and update ordering are bit-identical to
+    ``complete_arrays`` + ``benchmark_requests`` + ``route``; an
+    all-padding completion batch skips the learner fold exactly like the
+    host loop skips ``complete_arrays``.
+
+    Returns (fake_js[max_fake], workers[m], q_view', learner', arr', key').
+    """
+    now, last_fake, comp_now = scalars
+    q1 = absorb_completions(q_view, comp_workers)
+    lam0 = est.lam_hat_ema(arr)
+
+    def fold(l):
+        l2 = lrn.record_completions(l, comp_workers, comp_times, comp_now)
+        return lrn.refresh_estimates(l2, lcfg, lam0, comp_now)
+
+    learner2 = jax.lax.cond(
+        jnp.any(comp_workers >= 0), fold, lambda l: l, learner
+    )
+    key1, k_fake = jax.random.split(key)
+    key2, k_route = jax.random.split(key1)
+    n = q1.shape[0]
+    fake_js = fake_jobs_from(lcfg, k_fake, lam0, now - last_fake, max_fake, n)
+    arr2 = est.observe_arrivals_ema(arr, now, m, window=64)
+    mu_route = learner2.mu_hat if use_fresh_mu else mu_hat
+    res = dsp.dispatch(
+        policy, k_route, q1, mu_route, mu_route, pol.default_policy_config(), m
+    )
+    return fake_js, res.workers, res.q_after, learner2, arr2, key2
+
+
+@functools.partial(jax.jit, static_argnums=(4, 5))
+def fake_jobs_from(
+    lcfg: lrn.LearnerConfig,
+    key: jax.Array,
+    lam_hat: jax.Array,
+    dt: jax.Array,
+    max_fake: int,
+    n: int,
+) -> jax.Array:
+    """LEARNER-DISPATCHER tick from raw estimates: Poisson(ν·dt) benchmark
+    jobs at uniform workers; returns workers[max_fake] padded with -1.
+
+    The count is drawn by inverse-CDF over the max_fake+1 truncated Poisson
+    pmf terms and workers by scaled counter-hash uniforms — exactly the
+    ``min(Poisson(ν·dt), max_fake)`` / uniform-worker distribution, but
+    without jax.random's rejection-sampler and threefry lowerings, which
+    dominated this fn's (and the serving serve_step's) compile time.
+    """
+    nu = lrn.fake_job_rate(lcfg, lam_hat)
+    lam = nu * jnp.maximum(dt, 0.0)
+    u1, u2 = dsp._uniform_pair(key, max_fake)
+    ks = jnp.arange(max_fake + 1, dtype=jnp.float32)
+    logfact = jnp.concatenate([
+        jnp.zeros((1,)),
+        jnp.cumsum(jnp.log(jnp.arange(1, max_fake + 1, dtype=jnp.float32))),
+    ])
+    logp = ks * jnp.log(jnp.maximum(lam, 1e-30)) - lam - logfact
+    cdf = jnp.cumsum(jnp.exp(logp))
+    k = jnp.sum((cdf <= u1[0]).astype(jnp.int32))
+    js = (u2 * n).astype(jnp.int32)
+    return jnp.where(jnp.arange(max_fake) < k, js, -1)
 
 
 @jax.jit
@@ -124,13 +304,8 @@ def fake_jobs_due(
     tick, each aimed at a uniform worker. Returns (workers[max_fake] padded
     with -1, state')."""
     lam_hat = est.lam_hat_ema(state.arr)
-    nu = lrn.fake_job_rate(lcfg, lam_hat)
-    dt = jnp.maximum(now - state.last_fake_time, 0.0)
-    kn, kj = jax.random.split(key)
-    k = jnp.minimum(jax.random.poisson(kn, nu * dt), max_fake).astype(jnp.int32)
-    n = state.q_view.shape[0]
-    js = jax.random.randint(kj, (max_fake,), 0, n, dtype=jnp.int32)
-    js = jnp.where(jnp.arange(max_fake) < k, js, -1)
+    dt = now - state.last_fake_time
+    js = fake_jobs_from(lcfg, key, lam_hat, dt, max_fake, state.q_view.shape[0])
     return js, state.replace(last_fake_time=now)
 
 
@@ -221,7 +396,9 @@ class RosellaScheduler:
         return k
 
     def schedule(self, now: float, m: int, policy: str = pol.PPOT_SQ2):
-        workers, self.state = schedule(
+        # Donating variant: self.state is rebound, so the old buffers are
+        # free to be rewritten in place on device.
+        workers, self.state = schedule_donated(
             self.state, self._next_key(), jnp.float32(now), m, policy
         )
         return workers

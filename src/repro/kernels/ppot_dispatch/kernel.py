@@ -1,5 +1,25 @@
-"""Pallas TPU kernel for batched PPoT dispatch (the paper's per-decision hot
+"""Pallas TPU kernels for batched PPoT dispatch (the paper's per-decision hot
 path at "millions of tasks per second", §1).
+
+Two generations live here:
+
+``ppot_dispatch`` (v1)
+    probe → SQ(2) select only. Returns ``workers`` and leaves the conflict
+    fold-back (the per-worker placement histogram that produces ``q_after``)
+    to a separate XLA scatter pass in the engine. Kept as the parity oracle
+    for the fused kernel and for callers that fold externally (active-mask /
+    pinned-slot batches).
+
+``ppot_dispatch_fused`` (v2)
+    one kernel: inverse-CDF probe → SQ(2) select → in-kernel histogram
+    fold-back. Returns ``(workers, q_after)`` directly — the dispatch hot
+    path never leaves the device between probe and queue update. The
+    fold-back accumulates into a revisited output block across grid steps
+    (the grid is sequential on TPU, so ``q_after`` is initialized to ``q``
+    at step 0 and each job block adds its per-worker counts), with padding
+    slots masked out of the histogram. ``b_blk`` is tunable; 256 (two 8×128
+    VPU tiles) is the default — sweep it on real hardware (ROADMAP: TPU
+    timings).
 
 HARDWARE ADAPTATION (DESIGN.md §2): a CPU scheduler does a per-job binary
 search over the CDF. On TPU, branchy binary search wastes the VPU; instead
@@ -8,7 +28,9 @@ each grid step loads the whole worker state (CDF + queue lengths, n ≤ 2048
 the inverse-CDF sample as a dense [B_BLK, n] comparison — sum(cdf <= u) —
 which is one vectorized reduce per candidate. Two candidates + SQ(2) argmin
 are elementwise. Queue-length gathers become one-hot dot products (gathers
-are slow on TPU; one-hot matmuls hit the MXU).
+are slow on TPU; one-hot matmuls hit the MXU), and the same one-hot matrix
+of the *chosen* worker, reduced over the job axis, is the fold-back
+histogram — the fusion that removes the separate scatter pass.
 
 Grid: (B // B_BLK,). BlockSpecs place the job block in VMEM and replicate
 the (small) worker state per step.
@@ -21,16 +43,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-B_BLK = 256  # jobs per grid step (8×128 lanes)
+B_BLK = 256  # default jobs per grid step (two 8×128 VPU tiles)
 
 
-def _kernel(cdf_ref, q_ref, u1_ref, u2_ref, out_ref):
-    cdf = cdf_ref[...]  # [n]
-    q = q_ref[...]  # [n] (float32 for one-hot dot)
-    u1 = u1_ref[...]  # [B_BLK]
-    u2 = u2_ref[...]
+def _probe_select(cdf, qf, u1, u2, b_blk):
+    """Shared probe → SQ(2) math: returns (j1, j2, take1, iota)."""
     n = cdf.shape[0]
-
     # inverse-CDF sampling as a dense comparison (VPU-friendly)
     j1 = jnp.sum((cdf[None, :] <= u1[:, None]).astype(jnp.int32), axis=1)
     j2 = jnp.sum((cdf[None, :] <= u2[:, None]).astype(jnp.int32), axis=1)
@@ -38,22 +56,54 @@ def _kernel(cdf_ref, q_ref, u1_ref, u2_ref, out_ref):
     j2 = jnp.minimum(j2, n - 1)
 
     # queue lengths via one-hot contraction (gather → MXU dot)
-    iota = jax.lax.broadcasted_iota(jnp.int32, (B_BLK, n), 1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (b_blk, n), 1)
     oh1 = (iota == j1[:, None]).astype(jnp.float32)
     oh2 = (iota == j2[:, None]).astype(jnp.float32)
     q1 = jax.lax.dot_general(
-        oh1, q, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        oh1, qf, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
     )
     q2 = jax.lax.dot_general(
-        oh2, q, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        oh2, qf, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
     )
-    out_ref[...] = jnp.where(q1 <= q2, j1, j2).astype(jnp.int32)
+    take1 = q1 <= q2
+    return j1, j2, take1, oh1, oh2
+
+
+def _kernel(cdf_ref, q_ref, u1_ref, u2_ref, out_ref):
+    """v1: probe + select only (fold-back happens outside)."""
+    j1, j2, take1, _, _ = _probe_select(
+        cdf_ref[...], q_ref[...], u1_ref[...], u2_ref[...], out_ref.shape[0]
+    )
+    out_ref[...] = jnp.where(take1, j1, j2).astype(jnp.int32)
+
+
+def _fused_kernel(B, b_blk, cdf_ref, q_ref, u1_ref, u2_ref, w_ref, qa_ref):
+    """v2: probe + select + fold-back histogram, accumulated across steps."""
+    i = pl.program_id(0)
+    q = q_ref[...]  # i32[n]
+    j1, j2, take1, oh1, oh2 = _probe_select(
+        cdf_ref[...], q.astype(jnp.float32), u1_ref[...], u2_ref[...], b_blk
+    )
+    w_ref[...] = jnp.where(take1, j1, j2).astype(jnp.int32)
+
+    # fold-back: the chosen one-hot rows, padding slots masked, reduced over
+    # the job axis — integer counts are exact in f32 (≤ b_blk < 2^24).
+    n = q.shape[0]
+    slot = i * b_blk + jax.lax.broadcasted_iota(jnp.int32, (b_blk, n), 0)
+    ohw = jnp.where(take1[:, None], oh1, oh2) * (slot < B).astype(jnp.float32)
+    counts = jnp.sum(ohw, axis=0).astype(jnp.int32)
+
+    @pl.when(i == 0)
+    def _():
+        qa_ref[...] = q
+
+    qa_ref[...] += counts
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def ppot_dispatch(cdf, q, u1, u2, *, interpret: bool = False):
-    """cdf f32[n], q i32[n], u1/u2 f32[B] → i32[B] worker choices.
-    B must be a multiple of B_BLK (pad with zeros and slice if not)."""
+    """v1 oracle: cdf f32[n], q i32[n], u1/u2 f32[B] → i32[B] worker choices.
+    B is padded up to a multiple of B_BLK internally."""
     B = u1.shape[0]
     n = cdf.shape[0]
     pad = (-B) % B_BLK
@@ -75,3 +125,42 @@ def ppot_dispatch(cdf, q, u1, u2, *, interpret: bool = False):
         interpret=interpret,
     )(cdf, q.astype(jnp.float32), u1, u2)
     return out[:B]
+
+
+@functools.partial(jax.jit, static_argnames=("b_blk", "interpret"))
+def ppot_dispatch_fused(cdf, q, u1, u2, *, b_blk: int = B_BLK,
+                        interpret: bool = False):
+    """v2 fused contract: cdf f32[n], q i32[n], u1/u2 f32[B] →
+    (workers i32[B], q_after i32[n]).
+
+    ``q_after = q + histogram(workers)`` is computed in-kernel (no separate
+    scatter pass); bit-identical to the v1-select + external-fold path and
+    to the engine's pure-jnp math on the same uniforms.
+    """
+    B = u1.shape[0]
+    n = cdf.shape[0]
+    pad = (-B) % b_blk
+    if pad:
+        u1 = jnp.pad(u1, (0, pad))
+        u2 = jnp.pad(u2, (0, pad))
+    grid = ((B + pad) // b_blk,)
+    workers, q_after = pl.pallas_call(
+        functools.partial(_fused_kernel, B, b_blk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),  # cdf: replicated per step
+            pl.BlockSpec((n,), lambda i: (0,)),  # q (i32)
+            pl.BlockSpec((b_blk,), lambda i: (i,)),
+            pl.BlockSpec((b_blk,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b_blk,), lambda i: (i,)),
+            pl.BlockSpec((n,), lambda i: (0,)),  # revisited accumulator
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B + pad,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), q.dtype),
+        ],
+        interpret=interpret,
+    )(cdf, q, u1, u2)
+    return workers[:B], q_after

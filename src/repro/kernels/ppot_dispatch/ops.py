@@ -1,13 +1,17 @@
-"""Jit'd public wrapper for the PPoT dispatch kernel.
+"""Jit'd public wrappers for the PPoT dispatch kernels.
 
-On CPU (this container) the Pallas path runs in interpret mode; on TPU it
-compiles to Mosaic. The kernel is wired into the unified batched dispatch
-engine (``core/dispatch.py``) as the automatic PPoT-SQ(2) fast path on TPU
-(``dispatch(..., use_kernel=None)``); the engine's pure-jnp path computes
-the identical dense inverse-CDF + SQ(2) math, so the two agree
-bit-for-bit on the same uniforms (tests/test_kernels.py,
-tests/test_dispatch.py). ``dispatch``/``dispatch_ref`` below remain the
-standalone kernel entry points for kernel-level tests and benchmarks.
+On CPU (this container) the Pallas paths run in interpret mode; on TPU
+they compile to Mosaic. The FUSED v2 kernel (``ppot_dispatch_fused``:
+inverse-CDF probe → SQ(2) select → in-kernel histogram fold-back,
+returning ``(workers, q_after)`` in one call) is wired into the unified
+batched dispatch engine (``core/dispatch.py``) as the automatic PPoT-SQ(2)
+fast path on TPU (``dispatch(..., use_kernel=None)``) whenever the batch
+has no active-mask/pins; masked batches fall back to the v1 select kernel
++ engine fold. The engine's pure-jnp path computes the identical math, so
+all three agree bit-for-bit on the same uniforms (tests/test_kernels.py,
+tests/test_dispatch.py). ``dispatch``/``dispatch_fused``/``dispatch_ref``
+below are the standalone kernel entry points for kernel-level tests and
+benchmarks.
 """
 from __future__ import annotations
 
@@ -17,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.ppot_dispatch import ref
-from repro.kernels.ppot_dispatch.kernel import ppot_dispatch
+from repro.kernels.ppot_dispatch.kernel import ppot_dispatch, ppot_dispatch_fused
 
 
 def _on_tpu() -> bool:
@@ -35,6 +39,18 @@ def dispatch(key, mu_hat, q, B: int, *, interpret: bool | None = None):
     workers = ppot_dispatch(cdf, q, u1, u2, interpret=interpret)
     new_q = q + jnp.zeros_like(q).at[workers].add(1)
     return workers, new_q
+
+
+def dispatch_fused(key, mu_hat, q, B: int, *, interpret: bool | None = None):
+    """Fused v2 path: one kernel call returns (workers, q_after) — no
+    separate scatter/fold pass. Same RNG stream as ``dispatch``."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    cdf = ref.make_cdf(mu_hat)
+    k1, k2 = jax.random.split(key)
+    u1 = jax.random.uniform(k1, (B,))
+    u2 = jax.random.uniform(k2, (B,))
+    return ppot_dispatch_fused(cdf, q, u1, u2, interpret=interpret)
 
 
 def dispatch_ref(key, mu_hat, q, B: int):

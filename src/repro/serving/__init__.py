@@ -1,3 +1,13 @@
-from repro.serving.router import RosellaRouter, SimulatedPool, run_simulation
+from repro.serving.router import (
+    RosellaRouter,
+    SimulatedPool,
+    run_simulation,
+    run_simulation_reference,
+)
 
-__all__ = ["RosellaRouter", "SimulatedPool", "run_simulation"]
+__all__ = [
+    "RosellaRouter",
+    "SimulatedPool",
+    "run_simulation",
+    "run_simulation_reference",
+]

@@ -15,8 +15,9 @@ Key mechanics:
   * cache pytrees stay stacked across slots (one jit, zero retraces);
     stacked-layer leaves carry the slot dim at axis 1 ([L, B, ...]),
     non-stacked at axis 0 — all axis logic is path-based;
-  * admission replays the prompt through the same decode step (simple and
-    exercises one code path; chunked prefill is the obvious extension).
+  * admission replays the prompt through the same decode step, as ONE
+    jitted ``lax.scan`` over the prompt tokens (no per-token host
+    round-trips; chunked prefill is the obvious extension).
 """
 from __future__ import annotations
 
@@ -73,6 +74,35 @@ class ContinuousBatchingEngine:
             )
         )
 
+        def _admit_replay(params, slot, toks, pos, last_tok, cache):
+            """Prompt replay as ONE jitted lax.scan over the tokens: each
+            step advances ONLY ``slot`` (same schedule as the sequential
+            loop it replaces — merge row, bump that row's position), but
+            without P host round-trips and P cache-merge dispatches.
+            ``toks`` arrives padded to a power-of-two bucket with -1
+            sentinels (one compile per bucket, not per prompt length);
+            sentinel steps pass the carry through untouched."""
+
+            def body(carry, tok):
+                def step(c):
+                    last_tok, pos, cache = c
+                    last_tok = last_tok.at[slot, 0].set(tok)
+                    _, cache2, pos2 = _batched_decode(
+                        cfg, params, last_tok, pos, cache
+                    )
+                    cache = _merge_rows(cache2, cache, only=slot)
+                    pos = pos.at[slot].set(pos2[slot])
+                    return (last_tok, pos, cache)
+
+                return jax.lax.cond(tok >= 0, step, lambda c: c, carry), None
+
+            (last_tok, pos, cache), _ = jax.lax.scan(
+                body, (last_tok, pos, cache), toks
+            )
+            return last_tok, pos, cache
+
+        self._admit_replay = jax.jit(_admit_replay)
+
     # -- slot management -----------------------------------------------------
     def try_admit(self, rid: int, prompt: np.ndarray, n_new: int) -> bool:
         free = [i for i in range(self.n_slots) if not self.active[i]]
@@ -81,17 +111,21 @@ class ContinuousBatchingEngine:
         i = free[0]
         self.slots[i] = Slot(rid=rid, remaining=n_new)
         self.pos = self.pos.at[i].set(0)
-        # feed prompt[:-1] through the shared decode step (advancing ONLY
-        # slot i); the LAST prompt token is left in last_tok so the next
-        # engine tick consumes it and emits the first generated token —
-        # exactly the sequential-decode schedule.
-        for tok in prompt[:-1]:
-            self.last_tok = self.last_tok.at[i, 0].set(int(tok))
-            logits, cache, pos = self._step(
-                self.params, self.last_tok, self.pos, self.cache
+        # feed prompt[:-1] through the decode step in ONE jitted scan
+        # (advancing ONLY slot i); the LAST prompt token is left in
+        # last_tok so the next engine tick consumes it and emits the first
+        # generated token — exactly the sequential-decode schedule.
+        if len(prompt) > 1:
+            P = len(prompt) - 1
+            bucket = 8
+            while bucket < P:
+                bucket <<= 1
+            toks = np.full((bucket,), -1, np.int32)
+            toks[:P] = prompt[:-1]
+            self.last_tok, self.pos, self.cache = self._admit_replay(
+                self.params, jnp.int32(i), jnp.asarray(toks),
+                self.pos, self.last_tok, self.cache,
             )
-            self.cache = _merge_rows(cache, self.cache, only=i)
-            self.pos = self.pos.at[i].set(pos[i])
         self.last_tok = self.last_tok.at[i, 0].set(int(prompt[-1]))
         self.active[i] = True
         return True

@@ -6,32 +6,38 @@ paper's Fig. 2). The router is the Rosella scheduler:
   * requests arrive → arrival estimator updates λ̂ (batch-aware),
   * routing goes through the unified batched dispatch engine
     (core/dispatch.py): ``route(now, k)`` places a whole batch of k
-    requests in ONE jitted engine call — every request probes 2 replicas
-    ∝ μ̂ against the router's queue snapshot, conflicts fold back via one
-    scatter-add — instead of k per-request host round-trips,
-  * completions report service times → LEARNER-AGGREGATE refreshes μ̂,
+    requests in ONE jitted engine call against the router's queue view
+    (``scheduler.route_view`` — buffer-donated, rewritten in place),
+  * completions report service times → LEARNER-AGGREGATE refreshes μ̂
+    **off the routing path**: the router keeps a double-buffered μ̂ — the
+    routing hot path reads a materialized front snapshot, the completion
+    fold (``scheduler.fold_telemetry``) runs asynchronously and the front
+    buffer flips only once the refreshed μ̂ is actually ready, so
+    ``route()`` never blocks on a learner refresh,
   * benchmark requests (canned prompts) keep μ̂ fresh on idle replicas
     (LEARNER-DISPATCHER) at rate c0(μ̄ − λ̂),
   * multiple router shards sync μ̂ via pmean (paper §5,
     core/scheduler.make_sharded_schedule).
 
-``run_simulation(arrival_batch=k)`` exercises the batched path end to end:
-arrivals are grouped into batches of k and routed together. The replica
-execution engine is pluggable: ``ReplicaPool`` drives real ``decode_fn``
-steps for in-process replicas (examples/serve_rosella.py);
-``SimulatedPool`` models heterogeneous replica speeds for benchmarks.
+``run_simulation`` is a fully vectorized closed-loop harness: arrivals,
+replica execution (``SimulatedPool.submit_batch``), completion flushing and
+telemetry all move as numpy/jnp arrays — no per-request Python objects, no
+heapq churn, and exactly ONE μ̂ device→host sample per arrival batch. The
+PR-1 per-request loop is kept as ``run_simulation_reference`` (the parity
+oracle and the baseline for benchmarks/serve_bench.py).
 """
 from __future__ import annotations
 
 import dataclasses
-import heapq
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import estimator as est
+from repro.core import learner as lrn
 from repro.core import policies as pol
-from repro.core.scheduler import RosellaScheduler
+from repro.core import scheduler as rs
 
 
 @dataclasses.dataclass
@@ -71,15 +77,205 @@ class SimulatedPool:
         self.free_at[replica] = done
         return Completion(req.rid, replica, start, done, fake=req.fake)
 
+    def submit_batch(self, replicas, arrivals, costs):
+        """Vectorized submit: (t_start[k], t_done[k]) for a request batch.
+
+        Within each replica the queue chains ``start_i = max(arrival_i,
+        done_{i-1})`` — a running-max recurrence that is closed-form per
+        replica: with cumulative durations c, ``done = c + cummax(lead −
+        c_shifted)``. Arrivals must be nondecreasing per replica (they are:
+        batches arrive in time order). Bit-equal to a ``submit`` loop.
+        """
+        replicas = np.asarray(replicas, np.int64)
+        arrivals = np.asarray(arrivals, float)
+        starts = np.empty_like(arrivals)
+        dones = np.empty_like(arrivals)
+        costs = np.asarray(costs, float)
+        for r in range(len(self.speeds)):
+            m = replicas == r
+            if not m.any():
+                continue
+            dur = costs[m] / self.speeds[r]
+            c = np.cumsum(dur)
+            lead = arrivals[m].copy()
+            lead[0] = max(lead[0], self.free_at[r])
+            done = c + np.maximum.accumulate(lead - np.concatenate(([0.0], c[:-1])))
+            dones[m] = done
+            starts[m] = done - dur
+            self.free_at[r] = done[-1]
+        return starts, dones
+
     def set_speeds(self, speeds):
         self.speeds = np.asarray(speeds, float)
 
 
+#: Fixed completion capacity of the fused serving turn — one padded shape
+#: ⇒ ONE compiled program for the whole serving loop (overflow folds
+#: through ``complete_arrays`` first, which is numerically identical).
+#: Sized ≳ 2× the typical flush (arrival_batch + benchmark requests).
+SERVE_COMP_CAP = 256
+
+
+def _bucket(k: int, lo: int = 128) -> int:
+    """Next power of two ≥ k (≥ lo) — bounds jit retraces over batch sizes.
+    The floor is generous because the batched completion fold is vectorized
+    (padding costs vector lanes, not scan steps), so fewer buckets ⇒ fewer
+    one-time compiles."""
+    b = lo
+    while b < k:
+        b <<= 1
+    return b
+
+
 class RosellaRouter:
-    """Host-side router: wraps the jitted Rosella scheduler state machine."""
+    """Host-side router with a double-buffered scheduler state.
+
+    The state is split along the routing/learning seam: ``route`` touches
+    only (q_view, arrival estimator, μ̂-front) through buffer-donated jitted
+    calls, while completion telemetry folds into the learner on the side.
+    The refreshed μ̂ becomes the front buffer only once its computation has
+    materialized (``is_ready``), so routing never waits for
+    LEARNER-AGGREGATE — the ROADMAP's async-completion pipeline.
+    """
+
+    def __init__(self, n_replicas: int, mu_bar: float, *, policy: str = pol.PPOT_SQ2,
+                 c0: float = 0.1, c_window: float = 10.0, seed: int = 0,
+                 async_mu: bool = True):
+        self.n = n_replicas
+        self.policy = policy
+        # async_mu=True (production): routing adopts a refreshed μ̂ only once
+        # its computation has materialized — never blocks, but WHICH batch
+        # first sees a refresh depends on device timing. async_mu=False:
+        # routing always uses the latest μ̂ (PR-1 blocking semantics) —
+        # bit-deterministic, used by parity tests.
+        self.async_mu = async_mu
+        self.lcfg = lrn.default_learner_config(mu_bar, c0=c0, c_window=c_window)
+        self.q_view = jnp.zeros((n_replicas,), jnp.int32)
+        self.arr = est.init_ema_arrival()
+        self.learner = lrn.init_learner(n_replicas, self.lcfg, 1.0)
+        self.mu_front = self.learner.mu_hat  # materialized routing snapshot
+        self._mu_pending: jax.Array | None = None  # in-flight refreshed μ̂
+        self.last_fake_time = 0.0  # host-side: scalars ride jit args as-is
+        self.key = jax.random.PRNGKey(seed)
+
+    def _next_key(self):
+        self.key, k = jax.random.split(self.key)
+        return k
+
+    def _flip_mu(self):
+        """Adopt the refreshed μ̂ iff its async computation already landed
+        (or unconditionally in deterministic async_mu=False mode)."""
+        if self._mu_pending is not None and (
+            not self.async_mu or self._mu_pending.is_ready()
+        ):
+            self.mu_front = self._mu_pending
+            self._mu_pending = None
+
+    def route(self, now: float, k: int = 1) -> np.ndarray:
+        """Route a batch of k requests in one dispatch-engine call."""
+        self._flip_mu()
+        workers, self.q_view, self.arr = rs.route_view(
+            self.q_view, self.arr, self.mu_front, self._next_key(),
+            float(now), k, self.policy,
+        )
+        return np.asarray(workers)
+
+    def serve_turn(self, now: float, k: int, comp_workers=None, comp_times=None,
+                   comp_now: float | None = None) -> tuple[np.ndarray, np.ndarray]:
+        """One whole serving turn — completion flush + benchmark draw +
+        batch route — in ONE jit dispatch (``scheduler.serve_step``, fixed
+        completion capacity ⇒ one compiled program). Numerically identical
+        to ``complete_arrays`` + ``benchmark_requests`` + ``route``.
+        Returns (fake_workers, workers[k])."""
+        self._flip_mu()
+        nw = 0 if comp_workers is None else len(comp_workers)
+        if nw > SERVE_COMP_CAP:
+            # freak flush: fold the oldest overflow first (identical final
+            # state — the refresh only reads the final rings)
+            cut = nw - SERVE_COMP_CAP
+            self.complete_arrays(
+                comp_workers[:cut], comp_times[:cut],
+                comp_now if comp_now is not None else now,
+            )
+            comp_workers, comp_times = comp_workers[cut:], comp_times[cut:]
+            nw = SERVE_COMP_CAP
+        w = np.full((SERVE_COMP_CAP,), -1, np.int32)
+        ts = np.zeros((SERVE_COMP_CAP,), np.float32)
+        if nw:
+            w[:nw] = comp_workers
+            ts[:nw] = comp_times
+        fake_js, workers, self.q_view, self.learner, self.arr, self.key = (
+            rs.serve_step(
+                self.q_view, self.learner, self.arr, self.mu_front, self.lcfg,
+                self.key, jnp.asarray(w), jnp.asarray(ts),
+                (float(now), self.last_fake_time,
+                 float(comp_now) if comp_now is not None else float(now)),
+                k, self.policy, 8, not self.async_mu,
+            )
+        )
+        self.last_fake_time = float(now)
+        if nw:
+            self._mu_pending = self.learner.mu_hat
+        fake_js = np.asarray(fake_js)
+        return fake_js[fake_js >= 0], np.asarray(workers)
+
+    def complete(self, completions: "list[Completion]"):
+        if not completions:
+            return
+        workers = np.array([c.replica for c in completions], np.int32)
+        times = np.array([c.service_time for c in completions], np.float32)
+        now = max(c.t_done for c in completions)
+        self.complete_arrays(workers, times, now)
+
+    def complete_arrays(self, workers, service_times, now: float):
+        """Fold a completion batch: cheap q_view drain on the routing
+        lineage, learner fold + refresh dispatched asynchronously (padded
+        to power-of-two buckets so batch sizes don't retrace)."""
+        k = len(workers)
+        if k == 0:
+            return
+        P = _bucket(k)
+        w = np.full((P,), -1, np.int32)
+        w[:k] = workers
+        ts = np.zeros((P,), np.float32)
+        ts[:k] = service_times
+        self.q_view, self.learner = rs.complete_step(
+            self.q_view, self.learner, self.lcfg, self.arr,
+            jnp.asarray(w), jnp.asarray(ts), float(now),
+        )
+        self._mu_pending = self.learner.mu_hat
+
+    def benchmark_requests(self, now: float) -> np.ndarray:
+        js = rs.fake_jobs_from(
+            self.lcfg, self._next_key(), est.lam_hat_ema(self.arr),
+            float(now) - self.last_fake_time, 8, self.n,
+        )
+        self.last_fake_time = float(now)
+        js = np.asarray(js)
+        return js[js >= 0]
+
+    @property
+    def mu_hat(self) -> np.ndarray:
+        """Latest learner estimates (device→host sync — sample sparingly)."""
+        return np.asarray(self.learner.mu_hat)
+
+
+class ReferenceRouter:
+    """The PR-1 router, kept verbatim as the serving BASELINE: every call
+    runs synchronously through the ``RosellaScheduler`` wrapper — completion
+    batches hit ``report_completions`` at their natural (varying) shapes, so
+    each new flush size retraces, and ``route`` waits on whatever learner
+    refresh is in flight. Shared primitives (dispatch engine, fake-job
+    draw) are the CURRENT fast ones, so this baseline is strictly FASTER
+    than the code PR 1 shipped — a conservative floor for speedup claims —
+    while staying random-stream-identical to the vectorized loop. Pair
+    with ``run_simulation_reference`` to reproduce the PR-1 serving
+    numbers (benchmarks/serve_bench.py)."""
 
     def __init__(self, n_replicas: int, mu_bar: float, *, policy: str = pol.PPOT_SQ2,
                  c0: float = 0.1, c_window: float = 10.0, seed: int = 0):
+        from repro.core.scheduler import RosellaScheduler
+
         self.sched = RosellaScheduler(
             n_replicas, mu_bar, c0=c0, c_window=c_window, seed=seed
         )
@@ -87,7 +283,6 @@ class RosellaRouter:
         self.n = n_replicas
 
     def route(self, now: float, k: int = 1) -> np.ndarray:
-        """Route a batch of k requests in one dispatch-engine call."""
         return np.asarray(self.sched.schedule(now, k, policy=self.policy))
 
     def complete(self, completions: "list[Completion]"):
@@ -118,15 +313,95 @@ def run_simulation(
     seed: int = 0,
     arrival_batch: int = 1,
 ):
-    """Closed-loop serving simulation: Poisson arrivals, Rosella routing,
-    completion telemetry fed back. Returns response-time array + router
-    estimate trace. ``speed_schedule``: [(t, speeds), ...] volatility.
+    """Vectorized closed-loop serving simulation: Poisson arrivals, Rosella
+    routing, completion telemetry fed back. Returns (response_times[R],
+    mu_trace[T, n]) — μ̂ is sampled ONCE per arrival batch (one device→host
+    copy of the routing snapshot, never blocking on an in-flight refresh),
+    not per request. ``speed_schedule``: [(t, speeds), ...] volatility.
 
-    ``arrival_batch > 1`` groups that many consecutive arrivals and routes
-    them in ONE engine call (the production batched-frontend mode); each
-    request still enters its replica at its own arrival time and response
-    times are measured per request.
+    Each loop turn moves one arrival batch as arrays end to end: flush due
+    completions (single boolean mask, telemetry folds asynchronously —
+    see ``RosellaRouter``), submit benchmark requests, route the batch in
+    one engine call, and chain it onto the replica queues with
+    ``SimulatedPool.submit_batch``. No per-request Python objects, no
+    heapq. Per-request semantics (arrival times, costs, response-time
+    accounting) match ``run_simulation_reference``, the retained PR-1
+    per-request loop.
     """
+    rng = np.random.RandomState(seed)
+    t = 0.0
+    responses: list[np.ndarray] = []
+    mu_trace: list[np.ndarray] = []
+    p_done = np.empty(0)
+    p_rep = np.empty(0, np.int32)
+    p_start = np.empty(0)
+    sched_i = 0
+
+    while t < horizon:
+        gaps = rng.exponential(1.0 / arrival_rate, size=arrival_batch)
+        times = t + np.cumsum(gaps)
+        t = float(times[-1])
+        if speed_schedule is not None:
+            while sched_i < len(speed_schedule) and speed_schedule[sched_i][0] <= t:
+                pool.set_speeds(speed_schedule[sched_i][1])
+                sched_i += 1
+
+        # gather completions that happened before this batch, oldest first
+        due = p_done <= t
+        comp_w = comp_t = None
+        comp_now = t
+        if due.any():
+            order = np.argsort(p_done[due], kind="stable")
+            comp_w = p_rep[due][order]
+            comp_t = (p_done - p_start)[due][order]
+            comp_now = float(p_done[due].max())
+            keep = ~due
+            p_done, p_rep, p_start = p_done[keep], p_rep[keep], p_start[keep]
+
+        # completion flush + benchmark requests + batch route: ONE jit call
+        fake_js, js = router.serve_turn(t, arrival_batch, comp_w, comp_t, comp_now)
+        if len(fake_js):
+            fs, fd = pool.submit_batch(
+                fake_js, np.full(len(fake_js), t),
+                np.full(len(fake_js), request_cost * 0.25),
+            )
+            p_done = np.concatenate([p_done, fd])
+            p_rep = np.concatenate([p_rep, fake_js.astype(np.int32)])
+            p_start = np.concatenate([p_start, fs])
+        costs = request_cost * rng.exponential(1.0, size=arrival_batch)
+        ss, dd = pool.submit_batch(js, times, costs)
+        responses.append(dd - times)
+        p_done = np.concatenate([p_done, dd])
+        p_rep = np.concatenate([p_rep, js.astype(np.int32)])
+        p_start = np.concatenate([p_start, ss])
+        # ONE μ̂ sample per batch — the ROUTING snapshot (mu_front), which is
+        # already materialized in async mode, so the trace read never stalls
+        # the loop on an in-flight learner refresh.
+        mu_trace.append(np.asarray(router.mu_front))
+
+    resp = np.concatenate(responses) if responses else np.empty(0)
+    return resp, np.asarray(mu_trace)
+
+
+def run_simulation_reference(
+    router: RosellaRouter,
+    pool: SimulatedPool,
+    *,
+    arrival_rate: float,
+    horizon: float,
+    request_cost: float = 1.0,
+    speed_schedule: "list[tuple[float, np.ndarray]] | None" = None,
+    seed: int = 0,
+    arrival_batch: int = 1,
+):
+    """The PR-1 per-request event loop, kept as the parity oracle and the
+    serving baseline (benchmarks/serve_bench.py): Python Request/Completion
+    objects, a heapq of pending events, one ``pool.submit`` and one μ̂
+    device→host copy PER REQUEST. Consumes identical RNG streams to
+    ``run_simulation`` — response percentiles must agree within a few %.
+    """
+    import heapq
+
     rng = np.random.RandomState(seed)
     t, rid, seq = 0.0, 0, 0
     responses = []

@@ -1,0 +1,37 @@
+"""Small jax-version compatibility shims.
+
+``register_optimization_barrier_batching``: jax 0.4.x ships no vmap
+batching rule for ``lax.optimization_barrier`` ("Batching rule for
+'optimization_barrier' not implemented"), which broke every vmapped decode
+path through ``models/lm.backbone`` (the continuous-batching engine vmaps
+the single-sequence decode over slots). The barrier is semantically the
+identity — only an XLA scheduling fence — so batching it is the identity
+on the batched operands with unchanged batch dims.
+"""
+from __future__ import annotations
+
+import jax
+from jax.interpreters import batching
+
+
+def _optimization_barrier_prim():
+    try:
+        return jax.lax.optimization_barrier_p
+    except AttributeError:  # older layouts keep it in the internal module
+        from jax._src.lax import lax as _lax_internal
+
+        return _lax_internal.optimization_barrier_p
+
+
+def register_optimization_barrier_batching() -> None:
+    prim = _optimization_barrier_prim()
+    if prim in batching.primitive_batchers:
+        return
+
+    def _batch(args, dims):
+        return prim.bind(*args), dims
+
+    batching.primitive_batchers[prim] = _batch
+
+
+register_optimization_barrier_batching()

@@ -114,6 +114,22 @@ def test_within_batch_rank():
     )
 
 
+@pytest.mark.parametrize("seed", range(8))
+def test_within_batch_rank_matches_obn2_reference(seed):
+    """Sort-based O(B log B) rank == the O(B²) all-pairs oracle over
+    randomized batches (duplicate-heavy workers, random active masks,
+    degenerate sizes)."""
+    rng = np.random.RandomState(seed)
+    for B in (1, 2, 7, 33, 256):
+        n = rng.randint(1, 9)
+        w = jnp.asarray(rng.randint(-1, n, size=B), jnp.int32)
+        a = jnp.asarray(rng.rand(B) < 0.8)
+        np.testing.assert_array_equal(
+            np.asarray(dsp.within_batch_rank(w, a)),
+            np.asarray(dsp.within_batch_rank_ref(w, a)),
+        )
+
+
 # --- Pallas kernel agreement through the engine -----------------------------
 
 
@@ -127,6 +143,33 @@ def test_engine_kernel_path_matches_jnp(n, B):
     rj = dsp.dispatch(pol.PPOT_SQ2, key, q, mu, mu, CFG, B, use_kernel=False)
     np.testing.assert_array_equal(np.asarray(rk.workers), np.asarray(rj.workers))
     np.testing.assert_array_equal(np.asarray(rk.q_after), np.asarray(rj.q_after))
+
+
+def test_engine_kernel_path_with_mask_and_pins_matches_jnp():
+    """Masked/pinned PPoT batches can't use the fused kernel; the v1
+    select-kernel fallback + engine fold must still match the jnp path."""
+    n, B = 12, 64
+    key = jax.random.PRNGKey(3)
+    mu = jax.random.uniform(key, (n,)) * 5
+    q = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, 20)
+    active = jnp.arange(B) < 40
+    forced = jnp.where(jnp.arange(B) % 7 == 0, 3, -1).astype(jnp.int32)
+    rk = dsp.dispatch(pol.PPOT_SQ2, key, q, mu, mu, CFG, B, active=active,
+                      forced=forced, use_kernel=True, interpret=True)
+    rj = dsp.dispatch(pol.PPOT_SQ2, key, q, mu, mu, CFG, B, active=active,
+                      forced=forced, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(rk.workers), np.asarray(rj.workers))
+    np.testing.assert_array_equal(np.asarray(rk.q_after), np.asarray(rj.q_after))
+
+
+def test_dispatch_inplace_matches_dispatch():
+    """The q-donating engine entry returns identical results (fresh donated
+    buffer per call; the original q must not be reused afterwards)."""
+    key, mu, q = _setup()
+    ref = dsp.dispatch(pol.PPOT_SQ2, key, q, mu, mu, CFG, 64)
+    res = dsp.dispatch_inplace(pol.PPOT_SQ2, key, jnp.array(q), mu, mu, CFG, 64)
+    np.testing.assert_array_equal(np.asarray(res.workers), np.asarray(ref.workers))
+    np.testing.assert_array_equal(np.asarray(res.q_after), np.asarray(ref.q_after))
 
 
 def test_engine_all_zero_mu_dispatches_uniformly():

@@ -7,7 +7,7 @@ import pytest
 from repro.kernels.flash_attention import ref as fa_ref
 from repro.kernels.flash_attention.kernel import flash_attention_fwd
 from repro.kernels.ppot_dispatch import ops as pd_ops, ref as pd_ref
-from repro.kernels.ppot_dispatch.kernel import ppot_dispatch
+from repro.kernels.ppot_dispatch.kernel import ppot_dispatch, ppot_dispatch_fused
 from repro.kernels.ssd_scan import ref as ssd_ref
 from repro.kernels.ssd_scan.kernel import ssd_scan
 from repro.models import layers as L
@@ -30,6 +30,42 @@ def test_ppot_dispatch_matches_ref(n, B):
     out_k = ppot_dispatch(cdf, q, u1, u2, interpret=True)
     out_r = pd_ref.ppot_dispatch_ref(cdf, q, u1, u2)
     np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+
+@pytest.mark.parametrize("n", [4, 17, 64, 256])
+@pytest.mark.parametrize("B", [32, 256, 1000])
+def test_ppot_dispatch_fused_matches_ref(n, B):
+    """v2 fused contract: (workers, q_after) bit-identical to the v1
+    select oracle + an external histogram fold."""
+    key = jax.random.PRNGKey(n * 1000 + B)
+    mu = jax.random.uniform(key, (n,)) * 5
+    q = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, 20)
+    cdf = pd_ref.make_cdf(mu)
+    u1 = jax.random.uniform(jax.random.fold_in(key, 2), (B,))
+    u2 = jax.random.uniform(jax.random.fold_in(key, 3), (B,))
+    w_ref = np.asarray(pd_ref.ppot_dispatch_ref(cdf, q, u1, u2))
+    w, q_after = ppot_dispatch_fused(cdf, q, u1, u2, interpret=True)
+    np.testing.assert_array_equal(np.asarray(w), w_ref)
+    np.testing.assert_array_equal(
+        np.asarray(q_after), np.asarray(q) + np.bincount(w_ref, minlength=n)
+    )
+
+
+@pytest.mark.parametrize("b_blk", [64, 128, 512])
+def test_ppot_dispatch_fused_b_blk_invariant(b_blk):
+    """The B_BLK tile is a pure tuning knob: any tile size returns the
+    identical (workers, q_after), including non-dividing padding."""
+    n, B = 23, 300
+    key = jax.random.PRNGKey(9)
+    mu = jax.random.uniform(key, (n,)) * 5
+    q = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, 20)
+    cdf = pd_ref.make_cdf(mu)
+    u1 = jax.random.uniform(jax.random.fold_in(key, 2), (B,))
+    u2 = jax.random.uniform(jax.random.fold_in(key, 3), (B,))
+    w0, qa0 = ppot_dispatch_fused(cdf, q, u1, u2, interpret=True)
+    w, qa = ppot_dispatch_fused(cdf, q, u1, u2, b_blk=b_blk, interpret=True)
+    np.testing.assert_array_equal(np.asarray(w), np.asarray(w0))
+    np.testing.assert_array_equal(np.asarray(qa), np.asarray(qa0))
 
 
 def test_ppot_dispatch_all_zero_mu_uniform():

@@ -4,7 +4,13 @@ import pytest
 
 from repro.core import policies as pol
 from repro.dist.straggler import StragglerPlanner, simulate_fleet
-from repro.serving import RosellaRouter, SimulatedPool, run_simulation
+from repro.serving import (
+    RosellaRouter,
+    SimulatedPool,
+    run_simulation,
+    run_simulation_reference,
+)
+from repro.serving.router import ReferenceRouter
 
 
 def test_router_learns_and_beats_pot():
@@ -42,6 +48,79 @@ def test_router_benchmark_requests_emitted_when_idle():
     router.route(0.0, 1)  # one arrival → λ̂ tiny → fake rate ≈ c0·μ̄
     total = sum(len(router.benchmark_requests(t)) for t in np.linspace(1, 30, 30))
     assert total > 5
+
+
+def test_vectorized_loop_matches_pr1_loop():
+    """The vectorized event loop reproduces the PR-1 per-request loop:
+    identical RNG streams, p50/p99 response times within 5% (exact in the
+    deterministic async_mu=False mode)."""
+    speeds = np.array([0.25, 0.5, 1.0, 2.0])
+    resp = {}
+    for name, loop, cls, kw in (
+        ("vec", run_simulation, RosellaRouter, {"async_mu": False}),
+        ("pr1", run_simulation_reference, ReferenceRouter, {}),
+    ):
+        router = cls(4, mu_bar=speeds.sum(), seed=0, **kw)
+        pool = SimulatedPool(speeds)
+        r, mu = loop(router, pool, arrival_rate=3.0, horizon=200.0,
+                     seed=0, arrival_batch=16)
+        resp[name] = r
+    assert len(resp["vec"]) == len(resp["pr1"])
+    for p in (50, 99):
+        a = np.percentile(resp["vec"], p)
+        b = np.percentile(resp["pr1"], p)
+        assert abs(a - b) / b < 0.05, (p, a, b)
+
+
+def test_async_mu_routing_still_learns():
+    """Production async_mu=True: the μ̂ front buffer flips only when ready —
+    the run must still converge to the true speed ranking."""
+    speeds = np.array([0.25, 0.5, 1.0, 2.0])
+    router = RosellaRouter(4, mu_bar=speeds.sum(), seed=0)  # async default
+    pool = SimulatedPool(speeds)
+    resp, mu = run_simulation(router, pool, arrival_rate=3.0, horizon=150.0,
+                              seed=0, arrival_batch=8)
+    assert (np.argsort(mu[-1]) == np.argsort(speeds)).all()
+
+
+def test_submit_batch_matches_sequential_submit():
+    """Vectorized replica-queue chaining == per-request submit, bit-equal."""
+    from repro.serving.router import Request
+
+    rng = np.random.RandomState(7)
+    for trial in range(5):
+        speeds = rng.rand(5) + 0.2
+        pa, pb = SimulatedPool(speeds), SimulatedPool(speeds)
+        pa.free_at = rng.rand(5) * 3
+        pb.free_at = pa.free_at.copy()
+        k = rng.randint(1, 40)
+        reps = rng.randint(0, 5, size=k)
+        arrs = np.sort(rng.rand(k) * 5)
+        costs = rng.rand(k) + 0.05
+        starts, dones = pa.submit_batch(reps, arrs, costs)
+        for i in range(k):
+            c = pb.submit(int(reps[i]), Request(rid=i, arrival=arrs[i]),
+                          float(arrs[i]), float(costs[i]))
+            np.testing.assert_allclose(starts[i], c.t_start, rtol=1e-12)
+            np.testing.assert_allclose(dones[i], c.t_done, rtol=1e-12)
+        np.testing.assert_allclose(pa.free_at, pb.free_at, rtol=1e-12)
+
+
+def test_serve_turn_matches_separate_calls():
+    """The fused serve_step consumes the key stream exactly like
+    benchmark_requests() followed by route() (empty completion batch)."""
+    speeds = np.array([0.5, 1.0, 2.0])
+    ra = RosellaRouter(3, mu_bar=speeds.sum(), seed=4)
+    rb = RosellaRouter(3, mu_bar=speeds.sum(), seed=4)
+    for t in (1.0, 3.5, 7.25):
+        fakes_a, workers_a = ra.serve_turn(t, 8)
+        fakes_b = rb.benchmark_requests(t)
+        workers_b = rb.route(t, 8)
+        np.testing.assert_array_equal(fakes_a, fakes_b)
+        np.testing.assert_array_equal(workers_a, workers_b)
+        np.testing.assert_array_equal(
+            np.asarray(ra.q_view), np.asarray(rb.q_view)
+        )
 
 
 def test_straggler_planner_converges_to_proportional():
