@@ -18,6 +18,7 @@ from benchmarks import (
     fig11_volatile,
     fig12_fake_jobs,
     fig13_sq2_ll2,
+    fleet_scale,
     moe_balance,
     sched_throughput,
     recovery_coupling,
@@ -39,6 +40,7 @@ SUITES = {
     "theory": lambda q: theory_validation.run(),
     "sched": lambda q: sched_throughput.run(),
     "serve": lambda q: serve_bench.run(horizon=600.0 if q else 3600.0),
+    "fleet": lambda q: fleet_scale.run(smoke=bool(q)),
     "moe": lambda q: moe_balance.run(),
     "straggler": lambda q: straggler_bench.run(),
 }

@@ -14,17 +14,19 @@ export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q -m "not slow" \
     tests/test_dispatch.py tests/test_policies.py tests/test_kernels.py \
-    tests/test_learner.py tests/test_theory.py \
+    tests/test_learner.py tests/test_theory.py tests/test_fleet.py \
     tests/test_router_and_straggler.py tests/test_properties.py
 
 # ~10 s engine smoke: all policies, reduced shapes
 timeout 120 python benchmarks/sched_throughput.py --smoke
 
-# non-gating perf smoke: record the serving perf trajectory at reduced
-# scale (writes BENCH_serve_smoke.json; smoke runs deliberately do NOT
-# touch the committed full-shape BENCH_dispatch.json / BENCH_serve.json —
-# refresh those by running both benchmarks without --smoke)
+# non-gating perf smokes: record the serving + fleet perf trajectories at
+# reduced scale (they write BENCH_serve_smoke.json / BENCH_fleet_smoke.json,
+# which are gitignored; smoke runs deliberately do NOT touch the committed
+# full-shape BENCH_dispatch.json / BENCH_serve.json / BENCH_fleet.json —
+# refresh those by running the benchmarks without --smoke)
 timeout 600 python benchmarks/serve_bench.py --smoke || true
+timeout 1200 python benchmarks/fleet_scale.py --smoke || true
 
 # informational: full not-slow suite (known model-layer failures tolerated)
 python -m pytest -q -m "not slow" || true

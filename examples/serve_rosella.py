@@ -1,10 +1,15 @@
 """End-to-end driver (the paper's kind: serving): batched requests against
 N heterogeneous replicas of a REAL model (reduced smollm-360m), routed by
-the full Rosella stack — PPoT-SQ(2) placement, learner fed by completion
-telemetry, benchmark requests on idle replicas. Compares against PoT and
-uniform routing on the same fleet.
+the full Rosella stack — PPoT-SQ(2) placement with the whole arrival batch
+placed in ONE dispatch-engine call (``--arrival-batch``), learner fed by
+batched completion telemetry, benchmark requests on idle replicas. Compares
+against PoT and uniform routing on the same fleet. ``--executor engine``
+runs the continuous-batching executor instead: routed batches land in the
+replicas' slot pools via multi-request admission
+(``serving.engine.try_admit_batch``).
 
 Run:  PYTHONPATH=src python examples/serve_rosella.py [--requests 150]
+          [--arrival-batch 8] [--executor engine]
 """
 import argparse
 import json
@@ -19,6 +24,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=120)
     ap.add_argument("--replicas", type=int, default=4)
+    ap.add_argument("--arrival-batch", type=int, default=8)
+    ap.add_argument("--executor", default="replica", choices=("replica", "engine"))
     args = ap.parse_args()
 
     results = {}
@@ -27,6 +34,8 @@ def main():
             "--arch", "smollm-360m",
             "--replicas", str(args.replicas),
             "--requests", str(args.requests),
+            "--arrival-batch", str(args.arrival_batch),
+            "--executor", args.executor,
             "--policy", policy,
         ])
         results[policy] = out

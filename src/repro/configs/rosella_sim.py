@@ -60,8 +60,13 @@ def make_sim(
     constrained_frac: float = 0.0,
     mu_hat0=None,
     seed: int = 0,
+    n_frontends: int = 1,
+    fleet_sync_every: int = 1,
+    fleet_herd_correction: bool = False,
 ):
-    """Build (SimConfig, SimParams) for a paper experiment. ``load`` = α."""
+    """Build (SimConfig, SimParams) for a paper experiment. ``load`` = α.
+    ``n_frontends``/``fleet_sync_every``/``fleet_herd_correction`` open the
+    fleet axis (repro.fleet) on any paper workload."""
     speeds = np.asarray(speeds, dtype=np.float64)
     n = len(speeds)
     # normalize by E[tasks per job] so ``load`` is the TASK load ratio α
@@ -85,6 +90,9 @@ def make_sim(
         use_fake_jobs=use_fake_jobs,
         c_window=c_window,
         constrained_frac=constrained_frac,
+        n_frontends=n_frontends,
+        fleet_sync_every=fleet_sync_every,
+        fleet_herd_correction=fleet_herd_correction,
     )
     params = sim.make_params(
         lam=lam,

@@ -51,6 +51,13 @@ def observe_arrival(state: ArrivalEstimatorState, now: jax.Array) -> ArrivalEsti
     return ArrivalEstimatorState(times=times, idx=idx, count=count, lam_hat=lam)
 
 
+#: EMA window (decay 1/S) shared by every λ̂-EMA consumer — the serving
+#: router's estimator and the fleet's per-frontend streams must use the
+#: SAME window so per-frontend and single-frontend estimates stay
+#: comparable at S = 1.
+EMA_ARR_WINDOW = 64
+
+
 @pytree_dataclass
 class EmaArrivalState:
     """EMA variant: inter-arrival EMA with decay 1/S (serving router)."""

@@ -127,6 +127,110 @@ def serve_summary(responses: np.ndarray, mu_trace: np.ndarray | None = None) -> 
     return out
 
 
+def fleet_summary(
+    frontends: np.ndarray,  # frontend id per placement
+    workers: np.ndarray,  # worker id per placement
+    epochs: np.ndarray,  # sync-window index per placement
+    *,
+    n_frontends: int,
+    lam_hat_frontends: np.ndarray | None = None,  # f32[S] per-frontend λ̂
+    lam_true: float | None = None,  # true TOTAL arrival rate λ
+    view_gaps: np.ndarray | None = None,  # staleness |view − truth| samples
+    sync_ages: np.ndarray | None = None,  # time-since-last-sync samples
+) -> dict:
+    """Fleet health metrics shared by the benchmark and the tests:
+    per-frontend λ̂ calibration error (each frontend sees ~λ/S), the sync
+    staleness histogram (view-gap and age distributions), the herd-collision
+    rate (``fleet.conflict.collision_stats``), and arrival-share balance.
+
+    Simulator callers pull the placement log from the trace
+    (``fleet_summary_from_trace``); serving callers pass
+    ``run_fleet_simulation``'s info dict fields directly.
+    """
+    from repro.fleet import conflict as cfl
+
+    S = int(n_frontends)
+    frontends = np.asarray(frontends, np.int64)
+    workers = np.asarray(workers, np.int64)
+    epochs = np.asarray(epochs, np.int64)
+    out: dict = {"n_frontends": S}
+    out.update(cfl.collision_stats(frontends, workers, epochs))
+
+    share = np.bincount(frontends, minlength=S).astype(np.float64)
+    tot = max(share.sum(), 1.0)
+    out["arrival_share"] = (share / tot).tolist()
+    out["share_imbalance"] = float(np.abs(share / tot - 1.0 / S).max() * S)
+
+    if lam_hat_frontends is not None:
+        lam_f = np.asarray(lam_hat_frontends, np.float64)
+        out["lam_hat_frontends"] = [round(float(x), 4) for x in lam_f]
+        out["lam_hat_fleet"] = float(lam_f.sum())
+        if lam_true is not None:
+            target = lam_true / S
+            rel = np.abs(lam_f - target) / max(target, 1e-9)
+            out["lam_calibration_rel_err"] = {
+                "per_frontend": [round(float(x), 4) for x in rel],
+                "mean": float(rel.mean()),
+                "max": float(rel.max()),
+            }
+            out["lam_fleet_rel_err"] = float(
+                abs(lam_f.sum() - lam_true) / max(lam_true, 1e-9)
+            )
+
+    if view_gaps is not None and np.asarray(view_gaps).size:
+        g = np.asarray(view_gaps, np.float64).ravel()
+        hist = np.bincount(np.minimum(g.astype(np.int64), 64), minlength=65)
+        out["staleness"] = {
+            "gap_mean": float(g.mean()),
+            "gap_p95": float(np.percentile(g, 95)),
+            "gap_max": float(g.max()),
+            "gap_hist_capped64": hist.tolist(),
+        }
+    if sync_ages is not None and np.asarray(sync_ages).size:
+        a = np.asarray(sync_ages, np.float64).ravel()
+        out["sync_age"] = {
+            "mean": float(a.mean()),
+            "p95": float(np.percentile(a, 95)),
+            "max": float(a.max()),
+        }
+    return out
+
+
+def fleet_summary_from_trace(
+    trace, *, n_frontends: int, sync_every: int = 1,
+    lam_hat_frontends=None, lam_true=None
+) -> dict:
+    """``fleet_summary`` over a simulator trace (multi-frontend mode): the
+    placement log is every active task of every arrival event. Trace rows
+    are chain rounds and the sync fires on ``round % sync_every == 0``, so
+    the sync epoch of a placement is exactly its row index divided by the
+    cadence (``sync_every ≤ 0`` — the unbounded-staleness mode — is one
+    window); no float reconstruction."""
+    code = np.asarray(trace["code"])
+    arr = code == sim.EV_ARRIVAL
+    fr = np.asarray(trace["frontend"])[arr]
+    tw = np.asarray(trace["task_workers"])[arr]  # [J, mt]
+    age = np.asarray(trace["sync_age"], dtype=np.float64)[arr]
+    gaps = np.asarray(trace["view_gap"])[arr]
+    rows = np.nonzero(arr)[0]
+    ep = rows // sync_every if sync_every > 0 else np.zeros_like(rows)
+
+    # one row per TASK (jobs can be multi-task)
+    mt = tw.shape[1]
+    valid = tw >= 0
+    fr_t = np.repeat(fr, mt)[valid.ravel()]
+    w_t = tw.ravel()[valid.ravel()]
+    ep_t = np.repeat(ep, mt)[valid.ravel()]
+    return fleet_summary(
+        fr_t, w_t, ep_t,
+        n_frontends=n_frontends,
+        lam_hat_frontends=lam_hat_frontends,
+        lam_true=lam_true,
+        view_gaps=gaps,
+        sync_ages=age,
+    )
+
+
 def queue_length_histogram(trace, worker: int, warmup_frac: float = 0.5):
     """Time-weighted histogram of one worker's queue length (Fig. 13)."""
     q = np.asarray(trace["q_real"])[:, worker]

@@ -67,7 +67,7 @@ def _schedule_impl(
     and the batch folds back into the view with one histogram fold (the
     paper's probe sees the queue including in-flight assignments from this
     frontend)."""
-    arr = est.observe_arrivals_ema(state.arr, now, m, window=64)
+    arr = est.observe_arrivals_ema(state.arr, now, m, window=est.EMA_ARR_WINDOW)
     mu_true = state.learner.mu_hat  # runtime has no oracle speeds
     res = dsp.dispatch(
         policy, key, state.q_view, state.learner.mu_hat, mu_true,
@@ -111,7 +111,7 @@ def route_view(
 ) -> tuple[jax.Array, jax.Array, est.EmaArrivalState]:
     """Route ``m`` requests against a queue view + μ̂ snapshot; no learner
     state in the dependency chain. Returns (workers[m], q_view', arr')."""
-    arr2 = est.observe_arrivals_ema(arr, now, m, window=64)
+    arr2 = est.observe_arrivals_ema(arr, now, m, window=est.EMA_ARR_WINDOW)
     res = dsp.dispatch(
         policy, key, q_view, mu_hat, mu_hat, pol.default_policy_config(), m
     )
@@ -216,7 +216,7 @@ def serve_step(
     key2, k_route = jax.random.split(key1)
     n = q1.shape[0]
     fake_js = fake_jobs_from(lcfg, k_fake, lam0, now - last_fake, max_fake, n)
-    arr2 = est.observe_arrivals_ema(arr, now, m, window=64)
+    arr2 = est.observe_arrivals_ema(arr, now, m, window=est.EMA_ARR_WINDOW)
     mu_route = learner2.mu_hat if use_fresh_mu else mu_hat
     res = dsp.dispatch(
         policy, k_route, q1, mu_route, mu_route, pol.default_policy_config(), m

@@ -29,6 +29,20 @@ contributes the Exp(μ_i) variate ``t − busy_start[i]``.
 
 The scan emits a flat event trace; response-time percentiles, queue
 histograms and learning curves are computed in numpy (``core/metrics.py``).
+
+**Multi-frontend mode** (``n_frontends = S > 1``, the repro.fleet
+subsystem): arrivals partition uniformly across S frontends; each frontend
+dispatches against its own STALE view of the queues (snapshot at its last
+sync + its own placements since — blind to the other S−1 frontends, and to
+ALL completions including its own until the next sync: completion reports
+batch to the sync, a strictly harsher staleness regime than the serving
+``FleetRouter``'s immediate own-completion drain) and a μ̂ view frozen at
+its last sync, while jobs physically enqueue at true worker state. Views reconcile every ``fleet_sync_every`` rounds (the
+staleness bound); ``fleet_herd_correction`` inflates views by the expected
+peer placements between syncs (the herd-conflict model). The trace gains
+``frontend`` / ``view_gap`` / ``sync_age`` columns consumed by
+``metrics.fleet_summary``. S=1 with sync_every=1 is bit-exact to the
+single-frontend chain.
 """
 from __future__ import annotations
 
@@ -42,6 +56,9 @@ from repro.core import dispatch as dsp
 from repro.core import estimator as est
 from repro.core import learner as lrn
 from repro.core import policies as pol
+from repro.fleet import conflict as cfl
+from repro.fleet import state as flt
+from repro.fleet import sync as fsync
 from repro.utils.struct import pytree_dataclass
 
 # Event codes in the trace.
@@ -76,6 +93,19 @@ class SimConfig:
     # fold_chunks=max_tasks, the seed's sequential semantics); False → the
     # whole job places against one queue snapshot (fully batched).
     batch_self_correct: bool = True
+    # --- frontend fleet (repro.fleet): S parallel schedulers ---------------
+    # Arrivals partition uniformly across ``n_frontends``; each frontend
+    # dispatches against its own STALE view (queue snapshot at its last
+    # sync + its own placements since), and views reconcile at true worker
+    # state every ``fleet_sync_every`` chain rounds (the staleness bound;
+    # ≤ 0 → sync only once at t = 0, i.e. unbounded staleness).
+    # n_frontends=1 with fleet_sync_every=1 is BIT-EXACT to the
+    # single-frontend path (views never diverge from q_real).
+    n_frontends: int = 1
+    fleet_sync_every: int = 1
+    # True → inflate each view by the expected placements of the other
+    # S−1 frontends since its last sync (repro.fleet.conflict herd model).
+    fleet_herd_correction: bool = False
 
 
 @pytree_dataclass
@@ -99,6 +129,7 @@ class SimState:
     busy_start: jax.Array  # f32[n]
     arr: est.ArrivalEstimatorState
     learner: lrn.LearnerState
+    fleet: flt.FleetSimState  # per-frontend stale views + λ̂ streams
 
 
 def make_params(
@@ -173,6 +204,7 @@ def simulate(cfg: SimConfig, params: SimParams, key: jax.Array):
         busy_start=jnp.zeros((n,), jnp.float32),
         arr=est.init_arrival_estimator(cfg.arrival_window, lam_init=float("nan")),
         learner=lrn.init_learner(n, lcfg, mu_init=1.0).replace(mu_hat=params.mu_hat0),
+        fleet=flt.init_fleet_sim(cfg.n_frontends, n, params.mu_hat0),
     )
     # NaN lam_hat init → fake rate clips to c0·μ̄ until first estimate.
     state0 = state0.replace(arr=state0.arr.replace(lam_hat=jnp.float32(0.0)))
@@ -183,11 +215,29 @@ def simulate(cfg: SimConfig, params: SimParams, key: jax.Array):
         return mu_now  # "known speeds" mode (Fig. 10 / Fig. 13)
 
     def arrival_branch(state: SimState, key):
+        S = cfg.n_frontends
         k_tasks, k_sched = jax.random.split(key)
         n_tasks = 1 + jax.random.categorical(k_tasks, params.task_logits).astype(jnp.int32)
         arr2 = est.observe_arrival(state.arr, state.now)
         mu_now = _current_mu(params, state.now)
-        mu_view = scheduler_view_mu(state, mu_now)
+
+        # Which frontend takes this job (arrivals partition uniformly).
+        # Drawn from a folded-in key so the kc/ku/kd streams below stay
+        # bit-identical to the single-frontend path; with S = 1 the draw
+        # is deterministically 0.
+        f = jax.random.randint(
+            jax.random.fold_in(k_sched, 0x5EED), (), 0, S, dtype=jnp.int32
+        )
+        # The frontend dispatches against ITS stale view (snapshot at its
+        # last sync + its own placements since) and its frozen μ̂ view —
+        # not against true worker state.
+        view = flt.frontend_view(state.fleet, f)
+        mu_view = state.fleet.mu_view[f]
+        view_gap = jnp.sum(jnp.abs(view - state.q_real)).astype(jnp.int32)
+        sync_age = state.now - state.fleet.t_sync[f]
+        if cfg.fleet_herd_correction and S > 1:
+            lam_f = flt.fleet_lam_hats(state.fleet)[f]
+            view = cfl.herd_corrected_view(view, lam_f, sync_age, mu_view, S)
 
         # The whole job places as ONE batch through the dispatch engine
         # (SPARROW's d·m batch sampling included — it is just another
@@ -203,17 +253,24 @@ def simulate(cfg: SimConfig, params: SimParams, key: jax.Array):
         else:
             forced = None
         res = dsp.dispatch(
-            cfg.policy, kd, state.q_real, mu_view, mu_now, pcfg, mt,
+            cfg.policy, kd, view, mu_view, mu_now, pcfg, mt,
             active=active, forced=forced,
             fold_chunks=(mt if cfg.batch_self_correct else 1),
             use_kernel=False,
         )
         workers = res.workers  # i32[mt], -1 at inactive slots
         wsafe = jnp.where(active, workers, 0)
-        counts = res.q_after - state.q_real
-        q_real = res.q_after
+        counts = res.q_after - view
+        # Jobs physically enqueue at TRUE worker state; the frontend folds
+        # the same placements into its own delta (the only part of the
+        # cluster it can see change before its next sync).
+        q_real = state.q_real + counts
+        fleet2 = flt.fold_own_placements(state.fleet, f, counts)
+        fleet2 = flt.observe_frontend_arrival(fleet2, f, state.now)
         # Completion ordinal of each task at its worker: completions so far
-        # + queue snapshot + this task's rank within the batch (1-indexed).
+        # + TRUE queue snapshot + this task's rank within the batch
+        # (1-indexed) — ordinals live in physical queue space even when the
+        # dispatch view was stale.
         rank = dsp.within_batch_rank(workers, active)
         targets = jnp.where(
             active, state.s_real[wsafe] + state.q_real[wsafe] + rank + 1, -1
@@ -221,10 +278,13 @@ def simulate(cfg: SimConfig, params: SimParams, key: jax.Array):
         was_idle = (state.q_real + state.q_fake) == 0
         busy = jnp.where((counts > 0) & was_idle, state.now, state.busy_start)
 
-        new_state = state.replace(q_real=q_real, busy_start=busy, arr=arr2)
+        new_state = state.replace(
+            q_real=q_real, busy_start=busy, arr=arr2, fleet=fleet2
+        )
         ev = dict(
             code=jnp.int32(EV_ARRIVAL), worker=jnp.int32(-1),
             n_tasks=n_tasks, task_workers=workers, task_targets=targets,
+            frontend=f, view_gap=view_gap, sync_age=sync_age,
         )
         return new_state, ev
 
@@ -261,6 +321,8 @@ def simulate(cfg: SimConfig, params: SimParams, key: jax.Array):
             code=code, worker=widx, n_tasks=jnp.int32(0),
             task_workers=jnp.full((mt,), -1, jnp.int32),
             task_targets=jnp.full((mt,), -1, jnp.int32),
+            frontend=jnp.int32(-1), view_gap=jnp.int32(0),
+            sync_age=jnp.float32(0.0),
         )
         return new_state, ev
 
@@ -282,6 +344,8 @@ def simulate(cfg: SimConfig, params: SimParams, key: jax.Array):
             code=code, worker=j, n_tasks=jnp.int32(0),
             task_workers=jnp.full((mt,), -1, jnp.int32),
             task_targets=jnp.full((mt,), -1, jnp.int32),
+            frontend=jnp.int32(-1), view_gap=jnp.int32(0),
+            sync_age=jnp.float32(0.0),
         )
         return new_state, ev
 
@@ -290,6 +354,26 @@ def simulate(cfg: SimConfig, params: SimParams, key: jax.Array):
         k_dt, k_ev, k_br, k_refresh = jax.random.split(key, 4)
         dt = jax.random.exponential(k_dt) / R
         state = state.replace(now=state.now + dt)
+
+        # Bounded-staleness fleet sync: every ``fleet_sync_every`` rounds the
+        # frontends' views reconcile at true worker state (the pure-jnp
+        # round-based fold of the sync layer; ≤ 0 → only the t = 0 sync).
+        # With the default S=1 / sync_every=1 the view never diverges from
+        # q_real, keeping this path bit-exact to the single-frontend chain.
+        do_sync = (
+            (t % cfg.fleet_sync_every) == 0 if cfg.fleet_sync_every > 0 else t == 0
+        )
+        mu_central = scheduler_view_mu(state, _current_mu(params, state.now))
+        state = state.replace(
+            fleet=jax.lax.cond(
+                do_sync,
+                lambda fl: fsync.sync_sim_views(
+                    fl, state.q_real, mu_central, state.now
+                ),
+                lambda fl: fl,
+                state.fleet,
+            )
+        )
 
         ev_idx = jax.random.categorical(k_ev, logits)  # 0=arrival, 1..n=svc, n+1=fake
 

@@ -1,0 +1,58 @@
+"""Frontend fleet — S parallel schedulers with stale queue views and a
+bounded-staleness sync layer (paper §5 "Distributed scheduler", made real).
+
+  state.py     per-frontend state: own λ̂ stream, stale queue snapshot +
+               own-placement delta, frozen μ̂ view (stacked simulator form
+               and per-shard mesh form)
+  sync.py      the sync layer at a configurable cadence: pure-jnp
+               round-based fold for the simulator, shard_map psum/pmean/
+               all_gather collectives for real meshes
+  conflict.py  herd model: expected peer placements between syncs
+               (dispatch-time correction) + collision accounting
+
+Consumers: ``core/simulator.py`` (multi-frontend mode), ``serving/router.py``
+(``FleetRouter``), ``benchmarks/fleet_scale.py``.
+"""
+from repro.fleet.conflict import (
+    collision_stats,
+    expected_collision_rate,
+    expected_peer_placements,
+    herd_corrected_view,
+)
+from repro.fleet.state import (
+    FLEET_ARR_WINDOW,
+    FleetFrontend,
+    FleetSimState,
+    fleet_lam_hats,
+    fold_own_placements,
+    frontend_view,
+    init_fleet_frontends,
+    init_fleet_sim,
+    observe_frontend_arrival,
+)
+from repro.fleet.sync import (
+    make_fleet_step,
+    make_fleet_sync,
+    sync_frontend_shard,
+    sync_sim_views,
+)
+
+__all__ = [
+    "FLEET_ARR_WINDOW",
+    "FleetFrontend",
+    "FleetSimState",
+    "collision_stats",
+    "expected_collision_rate",
+    "expected_peer_placements",
+    "fleet_lam_hats",
+    "fold_own_placements",
+    "frontend_view",
+    "herd_corrected_view",
+    "init_fleet_frontends",
+    "init_fleet_sim",
+    "make_fleet_step",
+    "make_fleet_sync",
+    "observe_frontend_arrival",
+    "sync_frontend_shard",
+    "sync_sim_views",
+]

@@ -1,0 +1,100 @@
+"""Herd-conflict model — K frontends piling onto the same short queues.
+
+Between syncs every frontend dispatches against a view that is blind to the
+other S−1 frontends' placements. When μ̂ concentrates probes on a few fast
+workers (proportional sampling does exactly that), all S frontends see the
+SAME short queue and pile on — the herd effect; the true queue exceeds every
+frontend's view by the others' un-synced placements, and the p99 pays for
+it. Two tools here:
+
+  * a **correction** applied at dispatch time (``herd_corrected_view``):
+    inflate the stale view by the EXPECTED placements of the other S−1
+    frontends since the last sync. First order, the other frontends each
+    place at their own arrival rate λ̂_f and Rosella's probe marginal is
+    proportional to μ̂ (the PSS half of PPoT; the SQ(2) fold only shifts
+    mass between the two probed workers), so the expected extra load on
+    worker j is ``(S−1) · λ̂_f · Δt_sync · μ̂_j / Σ μ̂``. This is the
+    "conflict model" knob the fleet exposes (``herd_correction``);
+
+  * **accounting** (``collision_stats``): given per-placement (frontend,
+    worker, sync-epoch) triples, count placements that landed on a worker
+    some OTHER frontend also hit within the same sync window — the
+    herd-collision rate the metrics / benchmark report, plus an analytic
+    ``expected_collision_rate`` for sanity-checking the measured rate.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def expected_peer_placements(
+    lam_f, dt_sync, mu_view, n_frontends: int
+):
+    """Expected placements per worker by the OTHER S−1 frontends since the
+    last sync: ``(S−1)·λ̂_f·Δt`` arrivals, spread ∝ μ̂ (the PPoT probe
+    marginal to first order). Returns f32[n]; zero when S == 1."""
+    mu = jnp.clip(jnp.asarray(mu_view, jnp.float32), min=0.0)
+    tot = jnp.clip(jnp.sum(mu), 1e-9)
+    rate = (n_frontends - 1) * jnp.clip(lam_f, min=0.0) * jnp.maximum(dt_sync, 0.0)
+    return rate * mu / tot
+
+
+def herd_corrected_view(
+    view, lam_f, dt_sync, mu_view, n_frontends: int
+):
+    """Stale view + rounded expected peer load — what frontend f should
+    assume the queues look like given everyone else kept dispatching."""
+    extra = expected_peer_placements(lam_f, dt_sync, mu_view, n_frontends)
+    return view + jnp.round(extra).astype(view.dtype)
+
+
+def collision_stats(
+    frontends: np.ndarray,  # i64[P] frontend id per placement
+    workers: np.ndarray,  # i64[P] worker id per placement
+    epochs: np.ndarray,  # i64[P] sync-window index per placement
+) -> dict:
+    """Herd-collision accounting over a placement log.
+
+    A placement COLLIDES when at least one other frontend placed on the
+    same worker within the same sync epoch (distinct frontends racing the
+    same stale queue). Returns the collision rate, the number of contested
+    (epoch, worker) cells, and total placements."""
+    frontends = np.asarray(frontends, np.int64)
+    workers = np.asarray(workers, np.int64)
+    epochs = np.asarray(epochs, np.int64)
+    P = frontends.shape[0]
+    if P == 0:
+        return {"placements": 0, "collision_rate": 0.0, "contested_cells": 0}
+    # cell = (epoch, worker); a cell is contested when ≥ 2 distinct
+    # frontends placed in it
+    nw = int(workers.max()) + 1
+    cell = epochs * nw + workers
+    pair_cells = np.unique(np.stack([cell, frontends], axis=1), axis=0)[:, 0]
+    uniq_cells, nf_per_cell = np.unique(pair_cells, return_counts=True)
+    contested = uniq_cells[nf_per_cell >= 2]
+    collided = np.isin(cell, contested)
+    return {
+        "placements": int(P),
+        "collision_rate": float(collided.mean()),
+        "contested_cells": int(contested.size),
+    }
+
+
+def expected_collision_rate(
+    S: int, lam: float, n: int, window: float, mu: np.ndarray | None = None
+) -> float:
+    """Analytic first-order herd-collision estimate: a placement by
+    frontend f on worker j collides unless NO other frontend hits j in the
+    same window. Others place ``(S−1)·λ/S·window`` jobs spread ∝ μ, so
+    P(collide | j) = 1 − exp(−(S−1)·(λ/S)·window·p_j) and the rate
+    averages over the placement marginal p_j. With S = 1 this is 0."""
+    if S <= 1:
+        return 0.0
+    p = (
+        np.asarray(mu, float) / max(float(np.sum(mu)), 1e-9)
+        if mu is not None
+        else np.full(n, 1.0 / n)
+    )
+    others = (S - 1) * (lam / S) * window
+    return float(np.sum(p * (1.0 - np.exp(-others * p))))

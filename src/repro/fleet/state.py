@@ -1,0 +1,135 @@
+"""Per-frontend fleet state — S parallel schedulers with stale queue views.
+
+The paper's distributed frontends (§5) each keep three pieces of *local*
+state that the rest of the fleet does not see between synchronizations:
+
+  * an **arrival estimator** over the frontend's own λ̂ stream (each
+    frontend observes only the arrivals routed through it — roughly λ/S),
+  * a **stale snapshot** of worker queue lengths (``q_snap``, the cluster
+    state as of the last sync) plus the frontend's **own placements since
+    that sync** (``q_delta``) — its dispatch view is ``q_snap + q_delta``,
+    blind to every other frontend's work. The two deployments differ in
+    when a frontend learns of its own jobs COMPLETING: the serving
+    ``FleetRouter`` drains the placing frontend's view immediately
+    (workers report to the frontend that placed the job), while the
+    simulator batches completion reports to the next sync (``q_delta``
+    only grows between syncs) — a strictly harsher staleness regime, so
+    the simulator's staleness sweep upper-bounds the serving cost at the
+    same cadence,
+  * a **μ̂ view** frozen at the last sync (the learner keeps refreshing
+    centrally / per-frontend; views adopt the merged estimate only when the
+    bounded-staleness sync layer fires — ``fleet/sync.py``).
+
+Two state layouts share this module:
+
+``FleetSimState`` — the simulator's stacked form: every leaf carries a
+leading frontend axis of size S so one ``lax.scan`` round can index /
+update any frontend with a gather + masked scatter (no per-frontend Python).
+
+``FleetFrontend`` — the mesh form: ONE frontend's state (a ``RosellaState``
+plus the snapshot bookkeeping), used per-shard inside ``shard_map`` where
+the frontend axis is the mesh axis (``fleet/sync.py::make_fleet_step``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import estimator as est
+from repro.core import scheduler as rs
+from repro.utils.struct import pytree_dataclass
+
+#: EMA window for the per-frontend arrival estimators — the serving
+#: router's shared window, so per-frontend and single-frontend estimates
+#: are comparable at S=1.
+FLEET_ARR_WINDOW = est.EMA_ARR_WINDOW
+
+
+@pytree_dataclass
+class FleetSimState:
+    """Stacked fleet state for the simulator (leading axis = frontend)."""
+
+    q_snap: jax.Array  # i32[S, n] queue snapshot at each frontend's last sync
+    q_delta: jax.Array  # i32[S, n] own placements since that sync
+    mu_view: jax.Array  # f32[S, n] μ̂ view frozen at the last sync
+    arr: est.EmaArrivalState  # per-frontend λ̂ EMA (leaves shaped [S])
+    t_sync: jax.Array  # f32[S] time of each frontend's last sync
+    lam_global: jax.Array  # f32 merged fleet λ̂ (Σ_f λ̂_f at last sync)
+
+
+def init_fleet_sim(S: int, n: int, mu_view0: jax.Array) -> FleetSimState:
+    mu0 = jnp.broadcast_to(jnp.asarray(mu_view0, jnp.float32), (n,))
+    return FleetSimState(
+        q_snap=jnp.zeros((S, n), jnp.int32),
+        q_delta=jnp.zeros((S, n), jnp.int32),
+        mu_view=jnp.broadcast_to(mu0[None], (S, n)),
+        arr=est.EmaArrivalState(
+            last_time=jnp.zeros((S,), jnp.float32),
+            mean_gap=jnp.zeros((S,), jnp.float32),
+            count=jnp.zeros((S,), jnp.int32),
+        ),
+        t_sync=jnp.zeros((S,), jnp.float32),
+        lam_global=jnp.float32(0.0),
+    )
+
+
+def frontend_view(fleet: FleetSimState, f: jax.Array) -> jax.Array:
+    """Frontend ``f``'s dispatch view: stale snapshot + own in-flight work."""
+    return fleet.q_snap[f] + fleet.q_delta[f]
+
+
+def fold_own_placements(
+    fleet: FleetSimState, f: jax.Array, counts: jax.Array
+) -> FleetSimState:
+    """Fold frontend ``f``'s placement histogram into its own delta."""
+    return fleet.replace(q_delta=fleet.q_delta.at[f].add(counts))
+
+
+def observe_frontend_arrival(
+    fleet: FleetSimState, f: jax.Array, now: jax.Array, m: int = 1
+) -> FleetSimState:
+    """Update ONLY frontend ``f``'s λ̂ stream (vectorized masked select:
+    the EMA update runs elementwise over the stacked [S] leaves, then every
+    row except ``f`` keeps its old value)."""
+    S = fleet.t_sync.shape[0]
+    upd = est.observe_arrivals_ema(fleet.arr, now, m, window=FLEET_ARR_WINDOW)
+    sel = jnp.arange(S) == f
+    arr = jax.tree.map(lambda new, old: jnp.where(sel, new, old), upd, fleet.arr)
+    return fleet.replace(arr=arr)
+
+
+def fleet_lam_hats(fleet: FleetSimState) -> jax.Array:
+    """Per-frontend λ̂ estimates, f32[S]."""
+    return est.lam_hat_ema(fleet.arr)
+
+
+# ---------------------------------------------------------------------------
+# Mesh form: one frontend per scheduler shard (shard_map leaves)
+# ---------------------------------------------------------------------------
+
+
+@pytree_dataclass
+class FleetFrontend:
+    """One frontend's full state for the mesh fleet (``shard_map``): the
+    runtime scheduler state (whose ``q_view`` IS this frontend's stale view:
+    global snapshot at last sync + own placements since) plus the snapshot
+    bookkeeping the sync layer needs to reconstruct global queue state from
+    per-frontend deltas."""
+
+    core: rs.RosellaState
+    q_snap: jax.Array  # i32[n] the agreed global view at the last sync
+    lam_global: jax.Array  # f32 merged fleet λ̂ from the last sync
+    t_sync: jax.Array  # f32
+
+
+def init_fleet_frontends(S: int, n: int, lcfg, mu_init: float = 1.0) -> FleetFrontend:
+    """Stack ``S`` fresh frontends on a leading axis for shard_map."""
+    one = FleetFrontend(
+        core=rs.init_rosella(n, lcfg, mu_init),
+        q_snap=jnp.zeros((n,), jnp.int32),
+        lam_global=jnp.float32(0.0),
+        t_sync=jnp.float32(0.0),
+    )
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (S,) + x.shape), one
+    )

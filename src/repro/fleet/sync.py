@@ -1,0 +1,143 @@
+"""Bounded-staleness sync layer — reconciling S stale frontend views.
+
+The paper's frontends "need only synchronize the estimates of worker speeds
+regularly" (§5). This module is that synchronization, at a configurable
+cadence (the staleness bound), in two implementations with one semantics:
+
+  * **pure-jnp round-based fold** (``sync_sim_views``) for the simulator,
+    where true worker state is directly available: every frontend's queue
+    snapshot reconciles to the true queues, its own-placement delta clears,
+    its μ̂ view adopts the current central estimate, and the per-frontend
+    λ̂ streams merge into a fleet-wide ``lam_global = Σ_f λ̂_f`` (each
+    frontend sees ~λ/S of the arrivals, so the SUM estimates total λ);
+
+  * **collective form** (``sync_frontend_shard`` inside ``shard_map``) for
+    real meshes, where no one holds true state: the global queue view is
+    reconstructed from per-frontend deltas — each shard contributes
+    ``q_view − q_snap`` (its placements/drains since the last agreement)
+    via ``psum`` on top of the previously agreed snapshot — μ̂ merges via
+    ``pmean``, and the per-frontend λ̂ scalars are ``all_gather``-ed so
+    every frontend knows the whole fleet's streams (kept per-frontend;
+    only the merged total is adopted).
+
+Between syncs, frontends run coordination-free: ``make_fleet_step`` builds
+a jitted shard_map step that ONLY schedules (one batched-engine call per
+frontend, all frontends in one device program, no collectives); the caller
+invokes ``make_fleet_sync``'s function every ``sync_every`` steps — the
+bounded-staleness cadence is driver-controlled, so reduced coordination
+actually removes the collectives from the hot path instead of masking them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import estimator as est
+from repro.core import policies as pol
+from repro.core import scheduler as rs
+from repro.fleet.state import FleetFrontend, FleetSimState, fleet_lam_hats
+
+
+# ---------------------------------------------------------------------------
+# Pure-jnp round-based fold (simulator)
+# ---------------------------------------------------------------------------
+
+
+def sync_sim_views(
+    fleet: FleetSimState,
+    q_true: jax.Array,  # i32[n] true worker queues (the simulator knows them)
+    mu_central: jax.Array,  # f32[n] current central μ̂ (or true μ in oracle mode)
+    now: jax.Array,
+) -> FleetSimState:
+    """Reconcile every frontend's view at true worker state (one fold, no
+    collectives — the simulator's round-based form of the sync layer)."""
+    S = fleet.q_snap.shape[0]
+    lam_f = fleet_lam_hats(fleet)
+    return fleet.replace(
+        q_snap=jnp.broadcast_to(q_true[None], fleet.q_snap.shape),
+        q_delta=jnp.zeros_like(fleet.q_delta),
+        mu_view=jnp.broadcast_to(mu_central[None], fleet.mu_view.shape),
+        t_sync=jnp.full((S,), now, jnp.float32),
+        lam_global=jnp.sum(lam_f),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Collective form (shard_map over a scheduler mesh axis)
+# ---------------------------------------------------------------------------
+
+
+def sync_frontend_shard(ff: FleetFrontend, now: jax.Array, axis_name: str) -> FleetFrontend:
+    """One frontend's half of the fleet sync, inside ``shard_map``.
+
+    Global queue view = previously agreed snapshot + Σ_f (own view − own
+    snapshot): each frontend's delta is exactly what it did since the last
+    agreement, so the psum reconstructs true outstanding work without any
+    frontend observing the workers directly. μ̂ merges by pmean (paper §5);
+    λ̂ streams stay per-frontend — only their all_gather'd SUM is adopted
+    as the fleet arrival-rate estimate."""
+    delta = ff.core.q_view - ff.q_snap
+    total = ff.q_snap + jax.lax.psum(delta, axis_name)
+    total = jnp.maximum(total, 0)
+    mu = jax.lax.pmean(ff.core.learner.mu_hat, axis_name)
+    lam_all = jax.lax.all_gather(est.lam_hat_ema(ff.core.arr), axis_name)  # [S]
+    core = ff.core.replace(
+        q_view=total, learner=ff.core.learner.replace(mu_hat=mu)
+    )
+    return ff.replace(
+        core=core, q_snap=total, lam_global=jnp.sum(lam_all),
+        t_sync=jnp.asarray(now, jnp.float32),
+    )
+
+
+def _shard_map():
+    if hasattr(jax, "shard_map"):  # jax ≥ 0.5
+        return jax.shard_map
+    from jax.experimental.shard_map import shard_map as smap
+
+    return smap
+
+
+def make_fleet_step(mesh, m: int, policy: str = pol.PPOT_SQ2,
+                    axis_name: str = "sched"):
+    """Build the coordination-FREE fleet scheduling step over
+    ``mesh[axis_name]``: ``fn(frontends, keys, nows) -> (workers[S, m],
+    frontends')``. Every pytree leaf of ``frontends`` (and ``keys``,
+    ``nows``) carries a leading frontend axis of size S. Each frontend
+    places its batch through the batched dispatch engine against its own
+    stale view and clock (``nows[f]`` — frontends run on independent
+    machines with independent arrival streams); NO collective runs here —
+    staleness accrues until the caller fires ``make_fleet_sync``'s fn."""
+
+    def shard_fn(ff, k, now):
+        f1 = jax.tree.map(lambda x: x[0], ff)
+        w, core = rs._schedule_impl(f1.core, k[0], now[0], m, policy)
+        f2 = f1.replace(core=core)
+        return w[None], jax.tree.map(lambda x: x[None], f2)
+
+    mapped = _shard_map()(
+        shard_fn, mesh=mesh,
+        in_specs=(P(axis_name), P(axis_name), P(axis_name)),
+        out_specs=(P(axis_name), P(axis_name)),
+    )
+    return jax.jit(mapped)
+
+
+def make_fleet_sync(mesh, axis_name: str = "sched"):
+    """Build the jitted fleet sync: ``fn(frontends, now) -> frontends'``
+    (psum delta-reconciled queue views, pmean μ̂, all_gather'd λ̂ merge).
+    Fire it every ``sync_every`` steps — that cadence IS the staleness
+    bound."""
+
+    def shard_fn(ff, now):
+        f1 = jax.tree.map(lambda x: x[0], ff)
+        f2 = sync_frontend_shard(f1, now, axis_name)
+        return jax.tree.map(lambda x: x[None], f2)
+
+    mapped = _shard_map()(
+        shard_fn, mesh=mesh,
+        in_specs=(P(axis_name), P()),
+        out_specs=P(axis_name),
+    )
+    return jax.jit(mapped)

@@ -6,8 +6,17 @@ Replica heterogeneity on one host is emulated by giving replicas different
 per-token work (extra decode iterations), standing in for different chip
 generations / co-tenant load (paper §6.1 "controlling worker speed").
 
+Requests are admitted in BATCHES (``--arrival-batch k``): the router places
+the whole batch in one dispatch-engine call (``route(now, k)``) and the
+batch's completions fold back in one call — the ROADMAP "wire arrival_batch
+into serve" item. ``--executor engine`` swaps the sequential per-request
+replicas for ``serving.engine.ContinuousBatchingEngine`` instances: routed
+batches land in slot pools via multi-request admission
+(``try_admit_batch``), replicas tick continuously, and heterogeneity comes
+from tick cadence (a slowdown-s replica advances every s-th tick).
+
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \\
-      --replicas 4 --requests 200
+      --replicas 4 --requests 200 --arrival-batch 8 [--executor engine]
 """
 from __future__ import annotations
 
@@ -59,12 +68,90 @@ class LocalReplica:
         return np.asarray(out)
 
 
+def _run_replica_executor(args, cfg, replicas, router, rng):
+    """Sequential per-request replicas, batch-routed: one ``route(now, k)``
+    engine call places the whole batch; its completions fold back in one
+    ``complete`` call (batch telemetry)."""
+    latencies = []
+    t_wall = time.time()
+    rid = 0
+    while rid < args.requests:
+        k = min(args.arrival_batch, args.requests - rid)
+        now = time.time() - t_wall
+        prompts = [rng.randint(1, cfg.vocab, size=4) for _ in range(k)]
+        js = router.route(now, k)
+        comps = []
+        for prompt, j in zip(prompts, js):
+            t0 = time.time()
+            replicas[int(j)].serve(prompt, args.n_new)
+            t1 = time.time()
+            latencies.append(t1 - t0)
+            # stamp at TRUE wall times — the batch's completions must not
+            # compress onto the route time or the learner's staleness
+            # horizon sees a distorted clock
+            comps.append(Completion(rid, int(j), t0 - t_wall, t1 - t_wall))
+            rid += 1
+        router.complete(comps)
+    return np.asarray(latencies)
+
+
+def _run_engine_executor(args, cfg, engines, slowdowns, router, rng):
+    """Continuous-batching executor: each replica is a slot-pool engine;
+    routed batches are admitted via ``try_admit_batch`` (one multi-slot
+    prompt replay per replica per batch) and replicas tick continuously —
+    a slowdown-s replica advances one decode step every s-th tick.
+    ``engines`` arrive warmed (and rate-probed for μ̄) from ``main``."""
+    pending: list[list] = [[] for _ in slowdowns]  # routed, not yet admitted
+    t_arr: dict[int, float] = {}
+    t_adm: dict[int, float] = {}
+    latencies = []
+    t_wall = time.time()
+    rid = 0
+    done = 0
+    tick = 0
+    while done < args.requests:
+        # admit a routed batch whenever requests remain
+        if rid < args.requests:
+            k = min(args.arrival_batch, args.requests - rid)
+            now = time.time() - t_wall
+            js = router.route(now, k)
+            for j in js:
+                prompt = rng.randint(1, cfg.vocab, size=4)
+                pending[int(j)].append((rid, prompt))
+                t_arr[rid] = now
+                rid += 1
+        for r, eng in enumerate(engines):
+            if tick % slowdowns[r]:
+                continue  # heterogeneity: slow replicas tick less often
+            if pending[r]:
+                reqs = [(q, p, args.n_new) for q, p in pending[r]]
+                accepted = eng.try_admit_batch(reqs)
+                now = time.time() - t_wall
+                pending[r] = [rp for rp, ok in zip(pending[r], accepted) if not ok]
+                for (q, _p, _n), ok in zip(reqs, accepted):
+                    if ok:
+                        t_adm[q] = now
+            comps = []
+            for q, _toks in eng.step():
+                now = time.time() - t_wall
+                latencies.append(now - t_arr[q])
+                comps.append(Completion(q, r, t_adm.get(q, t_arr[q]), now))
+                done += 1
+            if comps:
+                router.complete(comps)
+        tick += 1
+    return np.asarray(latencies)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
     ap.add_argument("--replicas", type=int, default=4)
     ap.add_argument("--requests", type=int, default=100)
     ap.add_argument("--n-new", type=int, default=8)
+    ap.add_argument("--arrival-batch", type=int, default=1)
+    ap.add_argument("--executor", default="replica", choices=("replica", "engine"))
+    ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--policy", default=pol.PPOT_SQ2, choices=list(pol.ALL_POLICIES))
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -72,36 +159,50 @@ def main(argv=None):
     cfg = configs.reduced(configs.get_config(args.arch))
     params = api.init_params(cfg, jax.random.PRNGKey(args.seed))
     slowdowns = [1 + 2 * (i % 3) for i in range(args.replicas)]  # 1×,3×,5×,…
-    replicas = [LocalReplica(cfg, params, s) for s in slowdowns]
 
-    # warm-up: compile each replica's decode and measure its real rate —
-    # μ̄ must be in the same units as the service times the learner sees
+    # warm-up: compile each executor's own decode path and measure real
+    # per-replica rates — μ̄ must be in the same units as the service times
+    # the learner will see
     rng0 = np.random.RandomState(123)
     rates = []
-    for r in replicas:
-        r.serve(rng0.randint(1, cfg.vocab, size=4), args.n_new)  # compile
-        t0 = time.time()
-        r.serve(rng0.randint(1, cfg.vocab, size=4), args.n_new)
-        rates.append(1.0 / max(time.time() - t0, 1e-4))
+    if args.executor == "engine":
+        from repro.serving.engine import ContinuousBatchingEngine
+
+        engines = [
+            ContinuousBatchingEngine(cfg, params, n_slots=args.slots, max_len=64)
+            for _ in slowdowns
+        ]
+        for eng, s in zip(engines, slowdowns):
+            eng.try_admit_batch([(-1, np.array([1, 2]), 2)])
+            eng.step()  # compile admit + step
+            t0 = time.time()
+            eng.step()
+            tick = max(time.time() - t0, 1e-4)
+            while eng.active.any():
+                eng.step()
+            # a request costs ~n_new decode steps; a slowdown-s replica
+            # ticks every s-th loop turn
+            rates.append(1.0 / (args.n_new * s * tick))
+    else:
+        replicas = [LocalReplica(cfg, params, s) for s in slowdowns]
+        for r in replicas:
+            r.serve(rng0.randint(1, cfg.vocab, size=4), args.n_new)  # compile
+            t0 = time.time()
+            r.serve(rng0.randint(1, cfg.vocab, size=4), args.n_new)
+            rates.append(1.0 / max(time.time() - t0, 1e-4))
     mu_bar = float(sum(rates))
     router = RosellaRouter(args.replicas, mu_bar=mu_bar, policy=args.policy,
                            seed=args.seed)
 
     rng = np.random.RandomState(args.seed)
-    latencies = []
-    t_wall = time.time()
-    for r in range(args.requests):
-        now = time.time() - t_wall
-        prompt = rng.randint(1, cfg.vocab, size=4)
-        j = int(router.route(now, 1)[0])
-        t0 = time.time()
-        replicas[j].serve(prompt, args.n_new)
-        dt = time.time() - t0
-        latencies.append(dt)
-        router.complete([Completion(r, j, now, now + dt)])
-    lat = np.asarray(latencies)
+    if args.executor == "engine":
+        lat = _run_engine_executor(args, cfg, engines, slowdowns, router, rng)
+    else:
+        lat = _run_replica_executor(args, cfg, replicas, router, rng)
     out = {
         "policy": args.policy,
+        "executor": args.executor,
+        "arrival_batch": args.arrival_batch,
         "mean_ms": float(lat.mean() * 1e3),
         "p95_ms": float(np.percentile(lat, 95) * 1e3),
         "mu_hat": [round(float(x), 3) for x in router.mu_hat],

@@ -1,13 +1,17 @@
 from repro.serving.router import (
+    FleetRouter,
     RosellaRouter,
     SimulatedPool,
+    run_fleet_simulation,
     run_simulation,
     run_simulation_reference,
 )
 
 __all__ = [
+    "FleetRouter",
     "RosellaRouter",
     "SimulatedPool",
+    "run_fleet_simulation",
     "run_simulation",
     "run_simulation_reference",
 ]

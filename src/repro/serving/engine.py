@@ -15,9 +15,15 @@ Key mechanics:
   * cache pytrees stay stacked across slots (one jit, zero retraces);
     stacked-layer leaves carry the slot dim at axis 1 ([L, B, ...]),
     non-stacked at axis 0 — all axis logic is path-based;
-  * admission replays the prompt through the same decode step, as ONE
-    jitted ``lax.scan`` over the prompt tokens (no per-token host
-    round-trips; chunked prefill is the obvious extension).
+  * admission replays prompts through the same decode step, as ONE jitted
+    ``lax.scan`` over token STEPS — and it is multi-request: a whole
+    admission batch (``try_admit_batch``, fed by the router's
+    ``arrival_batch`` routing) replays ALL newly admitted prompts
+    simultaneously, one scan step advancing every admitted slot by one
+    token (rows are independent under the per-row vmap, so simultaneous
+    replay is exactly the sequential schedule), padded to a power-of-two
+    step bucket (one compile per bucket, not per prompt-length
+    combination). Chunked prefill is the obvious extension.
 """
 from __future__ import annotations
 
@@ -74,61 +80,85 @@ class ContinuousBatchingEngine:
             )
         )
 
-        def _admit_replay(params, slot, toks, pos, last_tok, cache):
-            """Prompt replay as ONE jitted lax.scan over the tokens: each
-            step advances ONLY ``slot`` (same schedule as the sequential
-            loop it replaces — merge row, bump that row's position), but
-            without P host round-trips and P cache-merge dispatches.
-            ``toks`` arrives padded to a power-of-two bucket with -1
-            sentinels (one compile per bucket, not per prompt length);
-            sentinel steps pass the carry through untouched."""
+        def _admit_replay_multi(params, toks, pos, last_tok, cache):
+            """Multi-request prompt replay as ONE jitted lax.scan over token
+            steps: ``toks`` is i32[T, n_slots] (time-major), −1 = "this slot
+            has no token at this step". Every step teacher-forces the
+            admitted slots' tokens through the batched decode and merges
+            ONLY those rows (mask merge) — per-row caches/positions are
+            independent, so replaying K prompts simultaneously is
+            schedule-identical to K sequential single-slot replays, at
+            max(P_k) steps instead of Σ P_k. ``T`` arrives padded to a
+            power-of-two bucket (one compile per bucket); fully-sentinel
+            tail steps pass the carry through untouched."""
 
-            def body(carry, tok):
+            def body(carry, tok_row):
                 def step(c):
                     last_tok, pos, cache = c
-                    last_tok = last_tok.at[slot, 0].set(tok)
-                    _, cache2, pos2 = _batched_decode(
-                        cfg, params, last_tok, pos, cache
-                    )
-                    cache = _merge_rows(cache2, cache, only=slot)
-                    pos = pos.at[slot].set(pos2[slot])
-                    return (last_tok, pos, cache)
+                    mask = tok_row >= 0
+                    lt = jnp.where(mask[:, None], tok_row[:, None], last_tok)
+                    _, cache2, pos2 = _batched_decode(cfg, params, lt, pos, cache)
+                    cache = _merge_rows(cache2, cache, mask=mask)
+                    pos = jnp.where(mask, pos2, pos)
+                    return (lt, pos, cache)
 
-                return jax.lax.cond(tok >= 0, step, lambda c: c, carry), None
+                return jax.lax.cond(
+                    jnp.any(tok_row >= 0), step, lambda c: c, carry
+                ), None
 
             (last_tok, pos, cache), _ = jax.lax.scan(
                 body, (last_tok, pos, cache), toks
             )
             return last_tok, pos, cache
 
-        self._admit_replay = jax.jit(_admit_replay)
+        self._admit_replay_multi = jax.jit(_admit_replay_multi)
 
     # -- slot management -----------------------------------------------------
     def try_admit(self, rid: int, prompt: np.ndarray, n_new: int) -> bool:
+        return self.try_admit_batch([(rid, prompt, n_new)])[0]
+
+    def try_admit_batch(
+        self, requests: "list[tuple[int, np.ndarray, int]]"
+    ) -> "list[bool]":
+        """Admit a batch of ``(rid, prompt, n_new)`` requests into free
+        slots — the engine half of the router's ``arrival_batch`` batching.
+        As many requests as there are free slots are accepted (in order);
+        ALL accepted prompts replay through ONE jitted multi-slot scan
+        (``max`` prompt length steps, not the sum), then each slot's LAST
+        prompt token is left in ``last_tok`` so the next engine tick emits
+        its first generated token — exactly the sequential-decode schedule.
+        Returns one accept flag per request."""
         free = [i for i in range(self.n_slots) if not self.active[i]]
-        if not free:
-            return False
-        i = free[0]
-        self.slots[i] = Slot(rid=rid, remaining=n_new)
-        self.pos = self.pos.at[i].set(0)
-        # feed prompt[:-1] through the decode step in ONE jitted scan
-        # (advancing ONLY slot i); the LAST prompt token is left in
-        # last_tok so the next engine tick consumes it and emits the first
-        # generated token — exactly the sequential-decode schedule.
-        if len(prompt) > 1:
-            P = len(prompt) - 1
+        accept: list[bool] = []
+        admitted: list[tuple[int, np.ndarray]] = []
+        for rid, prompt, n_new in requests:
+            if not free:
+                accept.append(False)
+                continue
+            i = free.pop(0)
+            self.slots[i] = Slot(rid=rid, remaining=n_new)
+            self.pos = self.pos.at[i].set(0)
+            admitted.append((i, np.asarray(prompt)))
+            accept.append(True)
+        if not admitted:
+            return accept
+        P = max(len(p) - 1 for _, p in admitted)
+        if P > 0:
             bucket = 8
             while bucket < P:
                 bucket <<= 1
-            toks = np.full((bucket,), -1, np.int32)
-            toks[:P] = prompt[:-1]
-            self.last_tok, self.pos, self.cache = self._admit_replay(
-                self.params, jnp.int32(i), jnp.asarray(toks),
-                self.pos, self.last_tok, self.cache,
+            toks = np.full((bucket, self.n_slots), -1, np.int32)
+            for i, p in admitted:
+                if len(p) > 1:
+                    toks[: len(p) - 1, i] = p[:-1]
+            self.last_tok, self.pos, self.cache = self._admit_replay_multi(
+                self.params, jnp.asarray(toks), self.pos, self.last_tok,
+                self.cache,
             )
-        self.last_tok = self.last_tok.at[i, 0].set(int(prompt[-1]))
-        self.active[i] = True
-        return True
+        for i, p in admitted:
+            self.last_tok = self.last_tok.at[i, 0].set(int(p[-1]))
+            self.active[i] = True
+        return accept
 
     # -- the engine tick -----------------------------------------------------
     def step(self) -> "list[tuple[int, list[int]]]":

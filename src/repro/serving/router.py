@@ -25,6 +25,17 @@ telemetry all move as numpy/jnp arrays — no per-request Python objects, no
 heapq churn, and exactly ONE μ̂ device→host sample per arrival batch. The
 PR-1 per-request loop is kept as ``run_simulation_reference`` (the parity
 oracle and the baseline for benchmarks/serve_bench.py).
+
+**Fleet mode** (repro.fleet): ``FleetRouter`` runs S logical routers over
+ONE replica pool — each frontend routes its share of the arrivals against
+its own stale queue view (exact about its own in-flight work, blind to the
+other S−1 frontends') with the double-buffered μ̂ SHARED through the sync
+layer: every ``sync_every`` turns the views reconcile (per-frontend deltas
+summed into the agreed global view), μ̂ estimates merge, and the
+per-frontend λ̂ streams sum into the fleet arrival-rate estimate.
+``run_fleet_simulation`` is the closed-loop harness; with S = 1 (and
+``async_mu=False``, the deterministic mode) it is bit-exact to
+``run_simulation``.
 """
 from __future__ import annotations
 
@@ -38,6 +49,7 @@ from repro.core import estimator as est
 from repro.core import learner as lrn
 from repro.core import policies as pol
 from repro.core import scheduler as rs
+from repro.fleet import conflict as cfl
 
 
 @dataclasses.dataclass
@@ -302,6 +314,110 @@ class ReferenceRouter:
         return np.asarray(self.sched.mu_hat)
 
 
+class FleetRouter:
+    """S logical Rosella routers over ONE replica pool — the serving form
+    of the frontend fleet (repro.fleet).
+
+    Each frontend is a full ``RosellaRouter`` that sees only its own share
+    of arrivals and its own completions: its ``q_view`` is exact about its
+    own in-flight work and BLIND to the other S−1 frontends' between syncs
+    (the stale-view regime S concurrent frontends create). ``sync`` is the
+    bounded-staleness layer: the agreed global view is rebuilt from
+    per-frontend deltas (own view − snapshot at last agreement, summed —
+    the host-side mirror of ``fleet.sync.sync_frontend_shard``'s psum),
+    every frontend adopts it, the double-buffered μ̂ estimates merge into a
+    shared front buffer, and the per-frontend λ̂ streams sum into the
+    fleet arrival-rate estimate. ``herd_correction`` inflates each
+    frontend's view by the expected peer placements since its last sync
+    (``fleet.conflict``), damping the pile-on on short queues.
+
+    With S = 1 and ``async_mu=False`` every ``sync`` is a numeric no-op and
+    ``serve_turn`` delegates verbatim — bit-exact to a lone
+    ``RosellaRouter``. (Under the default ``async_mu=True`` a sync adopts
+    the latest learner μ̂ unconditionally, whereas a lone router flips only
+    when the async refresh has materialized — statistically equivalent,
+    not bit-equal.)
+    """
+
+    def __init__(self, n_frontends: int, n_replicas: int, mu_bar: float, *,
+                 policy: str = pol.PPOT_SQ2, c0: float = 0.1,
+                 c_window: float = 10.0, seed: int = 0, async_mu: bool = True,
+                 herd_correction: bool = False):
+        self.S = n_frontends
+        self.n = n_replicas
+        self.herd_correction = herd_correction
+        # frontend 0 inherits the base seed verbatim so the S=1 fleet is
+        # stream-identical to a single RosellaRouter
+        self.frontends = [
+            RosellaRouter(n_replicas, mu_bar, policy=policy, c0=c0,
+                          c_window=c_window, seed=seed + 7919 * f,
+                          async_mu=async_mu)
+            for f in range(n_frontends)
+        ]
+        self._snap = np.zeros((n_replicas,), np.int64)  # agreed view @ last sync
+        self._herd_applied = np.zeros((n_frontends, n_replicas), np.int64)
+        self.t_sync = 0.0
+        self.lam_global = 0.0
+
+    def serve_turn(self, f: int, now: float, k: int, comp_workers=None,
+                   comp_times=None, comp_now: float | None = None):
+        """Frontend ``f``'s serving turn (completion flush + benchmark draw
+        + batch route) against its own stale view."""
+        fr = self.frontends[f]
+        if self.herd_correction and self.S > 1:
+            # keep q_view inflated by the CURRENT expected peer placements:
+            # apply only the increment over what is already folded in (the
+            # whole correction is discarded at the next sync reconcile)
+            lam_f = float(est.lam_hat_ema(fr.arr))
+            want = np.round(np.asarray(cfl.expected_peer_placements(
+                lam_f, now - self.t_sync, fr.mu_front, self.S
+            ))).astype(np.int64)
+            delta = want - self._herd_applied[f]
+            if delta.any():
+                fr.q_view = fr.q_view + jnp.asarray(delta, jnp.int32)
+                self._herd_applied[f] = want
+        return fr.serve_turn(now, k, comp_workers, comp_times, comp_now)
+
+    def sync(self, now: float) -> dict:
+        """Reconcile the fleet: rebuild the global queue view from
+        per-frontend deltas, share it, merge μ̂, sum the λ̂ streams.
+        Returns staleness telemetry (pre-sync per-frontend view gaps)."""
+        qs = np.stack(
+            [np.asarray(fr.q_view) for fr in self.frontends]
+        ).astype(np.int64)
+        qs -= self._herd_applied  # corrections are a routing bias, not state
+        self._herd_applied[:] = 0
+        deltas = qs - self._snap[None, :]
+        global_q = np.maximum(self._snap + deltas.sum(axis=0), 0)
+        gaps = np.abs(qs - global_q[None, :]).sum(axis=1)
+        shared = jnp.asarray(global_q, jnp.int32)
+        mus = np.stack([np.asarray(fr.learner.mu_hat) for fr in self.frontends])
+        mu_merged = lrn.sync_estimates(jnp.asarray(mus))  # paper-§5 merge
+        lam_f = np.array([float(est.lam_hat_ema(fr.arr)) for fr in self.frontends])
+        for fr in self.frontends:
+            fr.q_view = jnp.array(shared)  # per-frontend buffer (donated later)
+            fr.mu_front = mu_merged
+            fr._mu_pending = None
+        self._snap = global_q
+        self.lam_global = float(lam_f.sum())
+        self.t_sync = float(now)
+        return {"view_gaps": gaps, "lam_f": lam_f, "global_q": global_q}
+
+    @property
+    def lam_hats(self) -> np.ndarray:
+        """Per-frontend λ̂ estimates (device→host sync per frontend)."""
+        return np.array(
+            [float(est.lam_hat_ema(fr.arr)) for fr in self.frontends]
+        )
+
+    @property
+    def mu_hat(self) -> np.ndarray:
+        """Merged learner estimates across the fleet."""
+        return np.stack(
+            [np.asarray(fr.learner.mu_hat) for fr in self.frontends]
+        ).mean(axis=0)
+
+
 def run_simulation(
     router: RosellaRouter,
     pool: SimulatedPool,
@@ -381,6 +497,138 @@ def run_simulation(
 
     resp = np.concatenate(responses) if responses else np.empty(0)
     return resp, np.asarray(mu_trace)
+
+
+def run_fleet_simulation(
+    router: FleetRouter,
+    pool: SimulatedPool,
+    *,
+    arrival_rate: float,
+    horizon: float,
+    request_cost: float = 1.0,
+    speed_schedule: "list[tuple[float, np.ndarray]] | None" = None,
+    seed: int = 0,
+    arrival_batch: int = 1,
+    sync_every: int = 1,
+):
+    """Closed-loop serving simulation with S concurrent frontends.
+
+    Identical numpy RNG streams to ``run_simulation`` (same arrival gaps,
+    same request costs — the same workload): each arrival batch splits into
+    S contiguous chunks, every frontend routes its chunk against its own
+    stale view in its own engine call, completions return to the frontend
+    that placed them, and the fleet reconciles every ``sync_every`` turns
+    (the staleness bound, in units of arrival batches). With S = 1,
+    ``async_mu=False`` routers and any ``sync_every``, the responses are
+    bit-equal to ``run_simulation`` (the async_mu=True default differs
+    only in WHEN a refreshed μ̂ is adopted — see ``FleetRouter``).
+
+    Returns ``(response_times, mu_trace, info)`` — ``info`` carries the
+    placement log (frontend / worker / sync-epoch per request) and per-sync
+    staleness gaps for ``metrics.fleet_summary``.
+    """
+    S = router.S
+    if arrival_batch < S:
+        raise ValueError(f"arrival_batch={arrival_batch} must be >= S={S}")
+    base, rem = divmod(arrival_batch, S)
+    chunks = [base + (f < rem) for f in range(S)]
+    offs = np.concatenate([[0], np.cumsum(chunks)])
+
+    rng = np.random.RandomState(seed)
+    t = 0.0
+    turn = 0
+    responses: list[np.ndarray] = []
+    mu_trace: list[np.ndarray] = []
+    log_fr: list[np.ndarray] = []
+    log_w: list[np.ndarray] = []
+    log_ep: list[np.ndarray] = []
+    sync_gaps: list[np.ndarray] = []
+    p_done = np.empty(0)
+    p_rep = np.empty(0, np.int32)
+    p_start = np.empty(0)
+    p_fr = np.empty(0, np.int32)
+    sched_i = 0
+
+    while t < horizon:
+        gaps = rng.exponential(1.0 / arrival_rate, size=arrival_batch)
+        times = t + np.cumsum(gaps)
+        t = float(times[-1])
+        if speed_schedule is not None:
+            while sched_i < len(speed_schedule) and speed_schedule[sched_i][0] <= t:
+                pool.set_speeds(speed_schedule[sched_i][1])
+                sched_i += 1
+
+        # bounded-staleness sync (numeric no-op at S=1)
+        if turn % max(sync_every, 1) == 0:
+            info = router.sync(t)
+            if S > 1:
+                sync_gaps.append(info["view_gaps"])
+
+        # completions flush back to the frontend that PLACED them
+        due = p_done <= t
+        comp: list[tuple] = [(None, None, t)] * S
+        if due.any():
+            for f in range(S):
+                m = due & (p_fr == f)
+                if not m.any():
+                    continue
+                order = np.argsort(p_done[m], kind="stable")
+                comp[f] = (
+                    p_rep[m][order], (p_done - p_start)[m][order],
+                    float(p_done[m].max()),
+                )
+            keep = ~due
+            p_done, p_rep, p_start, p_fr = (
+                p_done[keep], p_rep[keep], p_start[keep], p_fr[keep]
+            )
+
+        # every frontend routes its chunk in its own engine call
+        workers = np.empty(arrival_batch, np.int64)
+        fakes: list[tuple[int, np.ndarray]] = []
+        for f in range(S):
+            cw, ct, cn = comp[f]
+            fake_js, ws = router.serve_turn(f, t, chunks[f], cw, ct, cn)
+            workers[offs[f]:offs[f + 1]] = ws
+            if len(fake_js):
+                fakes.append((f, fake_js))
+
+        for f, fake_js in fakes:
+            fs, fd = pool.submit_batch(
+                fake_js, np.full(len(fake_js), t),
+                np.full(len(fake_js), request_cost * 0.25),
+            )
+            p_done = np.concatenate([p_done, fd])
+            p_rep = np.concatenate([p_rep, fake_js.astype(np.int32)])
+            p_start = np.concatenate([p_start, fs])
+            p_fr = np.concatenate([p_fr, np.full(len(fake_js), f, np.int32)])
+
+        costs = request_cost * rng.exponential(1.0, size=arrival_batch)
+        ss, dd = pool.submit_batch(workers, times, costs)
+        responses.append(dd - times)
+        req_fr = np.repeat(np.arange(S, dtype=np.int32), chunks)
+        p_done = np.concatenate([p_done, dd])
+        p_rep = np.concatenate([p_rep, workers.astype(np.int32)])
+        p_start = np.concatenate([p_start, ss])
+        p_fr = np.concatenate([p_fr, req_fr])
+
+        log_fr.append(req_fr.astype(np.int64))
+        log_w.append(workers.copy())
+        log_ep.append(np.full(arrival_batch, turn // max(sync_every, 1), np.int64))
+        mu_trace.append(np.asarray(router.frontends[0].mu_front))
+        turn += 1
+
+    resp = np.concatenate(responses) if responses else np.empty(0)
+    info = {
+        "frontends": np.concatenate(log_fr) if log_fr else np.empty(0, np.int64),
+        "workers": np.concatenate(log_w) if log_w else np.empty(0, np.int64),
+        "epochs": np.concatenate(log_ep) if log_ep else np.empty(0, np.int64),
+        "sync_gaps": (
+            np.stack(sync_gaps) if sync_gaps else np.zeros((0, S))
+        ),
+        "lam_hats": router.lam_hats,
+        "turns": turn,
+    }
+    return resp, np.asarray(mu_trace), info
 
 
 def run_simulation_reference(

@@ -205,6 +205,91 @@ def test_sharded_schedule_single_device():
     assert int(np.asarray(states2.q_view).sum()) == 16
 
 
+def test_sharded_schedule_multi_device_subprocess():
+    """Sharded frontends at REAL axis sizes S ∈ {2, 4} (forced host
+    devices; subprocess because the device-count flag must be set before
+    jax initializes): per-shard λ̂ streams stay independent, and queue
+    views agree across shards after the sync — for both the every-call
+    pmean sync (``make_sharded_schedule``) and the bounded-staleness fleet
+    layer (``fleet.make_fleet_step`` + ``make_fleet_sync``), where views
+    must also genuinely DIVERGE between syncs."""
+    import json
+    import os
+    import subprocess
+    import sys
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    code = """
+import json
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.core import learner as lrn, scheduler as rs
+from repro.fleet import init_fleet_frontends, make_fleet_step, make_fleet_sync
+
+out = {}
+for S in (2, 4):
+    mesh = jax.make_mesh((S,), ("sched",))
+    lcfg = lrn.default_learner_config(mu_bar=8.0)
+
+    # every-call pmean sync (the PR-1 sharded scheduler) at axis size S
+    states = rs.init_rosella_shards(S, 8, lcfg)
+    fn = rs.make_sharded_schedule(mesh, m=16)
+    for i in range(3):
+        keys = jax.random.split(jax.random.fold_in(jax.random.PRNGKey(0), i), S)
+        workers, states = fn(states, keys, jnp.float32(1.0 + i))
+    q = np.asarray(states.q_view)
+    res = {
+        "w_shape": list(np.asarray(workers).shape),
+        "w_ok": bool((np.asarray(workers) >= 0).all()
+                     and (np.asarray(workers) < 8).all()),
+        "sched_views_agree": bool((q == q[0]).all()),
+    }
+
+    # bounded-staleness fleet layer: distinct per-shard clocks -> distinct
+    # lambda streams; no collective until sync
+    ffs = init_fleet_frontends(S, 8, lcfg)
+    step = make_fleet_step(mesh, m=16)
+    sync = make_fleet_sync(mesh)
+    nows = jnp.arange(1, S + 1, dtype=jnp.float32)
+    for i in range(4):
+        keys = jax.random.split(jax.random.fold_in(jax.random.PRNGKey(1), i), S)
+        w, ffs = step(ffs, keys, nows * (i + 1))
+    qpre = np.asarray(ffs.core.q_view)
+    lam_pre = 1.0 / np.maximum(np.asarray(ffs.core.arr.mean_gap), 1e-9)
+    ffs = sync(ffs, jnp.float32(99.0))
+    qpost = np.asarray(ffs.core.q_view)
+    lam_post = 1.0 / np.maximum(np.asarray(ffs.core.arr.mean_gap), 1e-9)
+    res.update({
+        "fleet_pre_diverged": bool((qpre != qpre[0]).any()),
+        "fleet_post_agree": bool((qpost == qpost[0]).all()),
+        "fleet_total_ok": int(qpost[0].sum()) == 4 * S * 16,
+        "lam_distinct": bool(np.unique(np.round(lam_pre, 6)).size == S),
+        "lam_streams_kept": bool(np.allclose(lam_pre, lam_post)),
+        "lam_global_is_sum": bool(np.allclose(
+            np.asarray(ffs.lam_global), lam_pre.sum(), rtol=1e-5)),
+    })
+    out[str(S)] = res
+print(json.dumps(out))
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env=env, timeout=540, cwd=repo,
+    )
+    assert proc.returncode == 0, f"stderr:\n{proc.stderr[-3000:]}"
+    res = json.loads(proc.stdout.strip().splitlines()[-1])
+    for S in ("2", "4"):
+        r = res[S]
+        assert r["w_shape"] == [int(S), 16] and r["w_ok"], (S, r)
+        assert r["sched_views_agree"], (S, r)
+        assert r["fleet_pre_diverged"] and r["fleet_post_agree"], (S, r)
+        assert r["fleet_total_ok"], (S, r)
+        assert r["lam_distinct"] and r["lam_streams_kept"], (S, r)
+        assert r["lam_global_is_sum"], (S, r)
+
+
 def test_estimator_batch_observation_closed_form():
     """observe_arrivals_ema(m) == m evenly spaced observe_arrival_ema steps."""
     s0 = est.init_ema_arrival()

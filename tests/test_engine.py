@@ -72,6 +72,39 @@ def test_engine_continuous_admission():
     assert results[1] == _sequential_generate(cfg, params, list(p1), 2)
 
 
+def test_engine_batch_admission_matches_sequential():
+    """``try_admit_batch`` replays all admitted prompts in ONE multi-slot
+    scan; outputs must equal the per-request sequential decode, and
+    overflow requests must be rejected without disturbing admitted ones."""
+    cfg = _cfg()
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(2)
+    prompts = [rng.randint(1, cfg.vocab, size=ln) for ln in (3, 5, 2, 4)]
+    n_new = 4
+
+    eng = ContinuousBatchingEngine(cfg, params, n_slots=3, max_len=64)
+    accept = eng.try_admit_batch(
+        [(rid, p, n_new) for rid, p in enumerate(prompts)]
+    )
+    assert accept == [True, True, True, False]  # 3 slots, 4 requests
+
+    results = {}
+    for _ in range(n_new + 2):
+        for rid, toks in eng.step():
+            results[rid] = toks
+    assert set(results) == {0, 1, 2}
+    for rid in range(3):
+        ref = _sequential_generate(cfg, params, list(prompts[rid]), n_new)
+        assert results[rid] == ref, (rid, results[rid], ref)
+
+    # freed slots admit the straggler; its decode is undisturbed
+    assert eng.try_admit_batch([(3, prompts[3], n_new)]) == [True]
+    for _ in range(n_new + 2):
+        for rid, toks in eng.step():
+            results[rid] = toks
+    assert results[3] == _sequential_generate(cfg, params, list(prompts[3]), n_new)
+
+
 def test_engine_slot_reuse_and_capacity():
     cfg = _cfg()
     params = api.init_params(cfg, jax.random.PRNGKey(0))

@@ -1,0 +1,268 @@
+"""Frontend fleet (repro.fleet): stale-view accounting in the simulator,
+the bounded-staleness sync layer (pure-jnp fold + serving-side reconcile),
+the herd-conflict model, fleet metrics, and S=1 parity of the fleet serving
+harness against the single-frontend loop."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import metrics as M
+from repro.core import policies as pol
+from repro.core import simulator as sim
+from repro.fleet import (
+    collision_stats,
+    expected_collision_rate,
+    expected_peer_placements,
+    fleet_lam_hats,
+    init_fleet_sim,
+    sync_sim_views,
+)
+from repro.serving import (
+    FleetRouter,
+    RosellaRouter,
+    SimulatedPool,
+    run_fleet_simulation,
+    run_simulation,
+)
+
+MU8 = [0.3, 0.5, 1.0, 2.0, 1.0, 0.5, 2.0, 0.7]
+
+
+def _sim(S, sync_every, rounds=6000, seed=3, herd=False, lam_frac=0.85):
+    lam = lam_frac * sum(MU8)
+    cfg = sim.SimConfig(n=8, policy=pol.PPOT_SQ2, rounds=rounds,
+                        n_frontends=S, fleet_sync_every=sync_every,
+                        fleet_herd_correction=herd)
+    params = sim.make_params(lam=lam, mu=MU8)
+    final, trace = sim.simulate(cfg, params, jax.random.PRNGKey(seed))
+    return final, trace, lam
+
+
+# --- sync layer (pure-jnp fold) ---------------------------------------------
+
+
+def test_sync_sim_views_reconciles_and_merges():
+    S, n = 3, 5
+    fleet = init_fleet_sim(S, n, jnp.ones((n,)))
+    fleet = fleet.replace(
+        q_delta=jnp.arange(S * n, dtype=jnp.int32).reshape(S, n),
+        arr=fleet.arr.replace(
+            mean_gap=jnp.array([0.5, 0.25, 1.0]),  # λ̂_f = 2, 4, 1
+            count=jnp.array([5, 5, 5]),
+        ),
+    )
+    q_true = jnp.array([3, 0, 1, 4, 2], jnp.int32)
+    mu = jnp.array([1.0, 2.0, 3.0, 4.0, 5.0])
+    out = sync_sim_views(fleet, q_true, mu, jnp.float32(7.0))
+    np.testing.assert_array_equal(
+        np.asarray(out.q_snap), np.tile(np.asarray(q_true), (S, 1))
+    )
+    assert int(np.abs(np.asarray(out.q_delta)).sum()) == 0
+    np.testing.assert_array_equal(
+        np.asarray(out.mu_view), np.tile(np.asarray(mu), (S, 1))
+    )
+    np.testing.assert_allclose(float(out.lam_global), 7.0, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(out.t_sync), np.full(S, 7.0))
+    # λ̂ streams stay PER-frontend (independence): untouched by the merge
+    np.testing.assert_allclose(
+        np.asarray(fleet_lam_hats(out)), [2.0, 4.0, 1.0], rtol=1e-6
+    )
+
+
+# --- simulator fleet mode ----------------------------------------------------
+
+
+def test_fleet_sim_s1_views_never_diverge():
+    """Default config (S=1, sync every round): the frontend view IS the
+    true queue at every arrival — the bit-exactness invariant's observable
+    half (view_gap ≡ 0, all arrivals on frontend 0)."""
+    final, trace, _ = _sim(S=1, sync_every=1, rounds=3000)
+    code = np.asarray(trace["code"])
+    arr = code == sim.EV_ARRIVAL
+    assert np.asarray(trace["view_gap"])[arr].max() == 0
+    assert set(np.asarray(trace["frontend"])[arr].tolist()) == {0}
+
+
+def test_fleet_sim_accounting_and_partition():
+    """S=4 stale mode: task conservation holds at TRUE worker state,
+    arrivals partition across all frontends, views agree exactly in sync
+    rounds and diverge between them."""
+    S, sync_every = 4, 32
+    final, trace, lam = _sim(S=S, sync_every=sync_every)
+    code = np.asarray(trace["code"])
+    arr = code == sim.EV_ARRIVAL
+    tasks_in = np.asarray(trace["n_tasks"])[arr].sum()
+    done = (code == sim.EV_REAL_DONE).sum()
+    assert tasks_in == done + int(np.asarray(final.q_real).sum())
+
+    fr = np.asarray(trace["frontend"])[arr]
+    share = np.bincount(fr, minlength=S) / fr.size
+    assert (share > 0.1).all(), share  # uniform partition, loose bound
+
+    gaps = np.asarray(trace["view_gap"])[arr]
+    rounds = np.nonzero(arr)[0]
+    in_sync_round = (rounds % sync_every) == 0
+    assert (gaps[in_sync_round] == 0).all()  # bounded staleness: fresh at sync
+    assert gaps[~in_sync_round].max() > 0  # and genuinely stale between
+
+    ages = np.asarray(trace["sync_age"])[arr]
+    assert (ages >= 0).all()
+    # per-frontend λ̂ calibrates to ~λ/S
+    lam_f = np.asarray(fleet_lam_hats(final.fleet))
+    np.testing.assert_allclose(lam_f, lam / S, rtol=0.5)
+    np.testing.assert_allclose(lam_f.sum(), lam, rtol=0.25)
+
+
+def test_fleet_staleness_costs_the_tail():
+    """Reduced coordination must show up as response-time inflation
+    (deterministic seeds; measured ratio ≈ 1.6× at these shapes)."""
+    p99 = {}
+    p50 = {}
+    for se in (1, 128):
+        _, trace, _ = _sim(S=4, sync_every=se, rounds=8000)
+        m = M.analyze(trace, n=8, warmup_frac=0.25)
+        p50[se] = float(np.percentile(m.response_times, 50))
+        p99[se] = float(np.percentile(m.response_times, 99))
+    assert p99[128] > 1.15 * p99[1], (p50, p99)
+    assert p50[128] > p50[1], (p50, p99)
+
+
+def test_fleet_summary_from_trace():
+    S = 2
+    final, trace, lam = _sim(S=S, sync_every=16, rounds=4000)
+    s = M.fleet_summary_from_trace(
+        trace, n_frontends=S, sync_every=16,
+        lam_hat_frontends=np.asarray(fleet_lam_hats(final.fleet)),
+        lam_true=lam,
+    )
+    assert s["placements"] > 0
+    assert 0.0 <= s["collision_rate"] <= 1.0
+    assert len(s["arrival_share"]) == S
+    assert abs(sum(s["arrival_share"]) - 1.0) < 1e-6
+    assert s["lam_calibration_rel_err"]["mean"] < 1.0
+    assert s["staleness"]["gap_mean"] >= 0.0
+    assert s["sync_age"]["max"] > 0.0
+
+
+# --- conflict model ----------------------------------------------------------
+
+
+def test_collision_stats_exact_small_case():
+    # epoch 0: frontends 0,1 both hit worker 3 (collide), frontend 0 alone
+    # hits worker 1; epoch 1: same worker 3 but only frontend 0 (no collide)
+    fr = np.array([0, 1, 0, 0, 1])
+    w = np.array([3, 3, 1, 3, 2])
+    ep = np.array([0, 0, 0, 1, 1])
+    s = collision_stats(fr, w, ep)
+    assert s["placements"] == 5
+    assert s["contested_cells"] == 1  # (epoch 0, worker 3)
+    np.testing.assert_allclose(s["collision_rate"], 2 / 5)
+
+
+def test_expected_peer_placements_mass_and_rate():
+    mu = jnp.array([1.0, 2.0, 3.0, 4.0])
+    extra = expected_peer_placements(2.0, 3.0, mu, n_frontends=4)
+    np.testing.assert_allclose(float(jnp.sum(extra)), 3 * 2.0 * 3.0, rtol=1e-5)
+    assert float(extra[3]) > float(extra[0])  # ∝ μ̂: herd goes to fast workers
+    assert float(jnp.sum(
+        expected_peer_placements(2.0, 3.0, mu, n_frontends=1)
+    )) == 0.0
+    assert expected_collision_rate(1, 4.0, 8, 1.0) == 0.0
+    r2 = expected_collision_rate(2, 4.0, 8, 1.0)
+    r8 = expected_collision_rate(8, 4.0, 8, 1.0)
+    assert 0.0 < r2 < r8 < 1.0
+
+
+def test_fleet_sim_herd_correction_runs():
+    """Herd-corrected dispatch is a behavior knob, not a crash: same
+    conservation accounting, different placements."""
+    final, trace, _ = _sim(S=4, sync_every=64, rounds=3000, herd=True)
+    code = np.asarray(trace["code"])
+    arr = code == sim.EV_ARRIVAL
+    tasks_in = np.asarray(trace["n_tasks"])[arr].sum()
+    done = (code == sim.EV_REAL_DONE).sum()
+    assert tasks_in == done + int(np.asarray(final.q_real).sum())
+
+
+# --- serving fleet -----------------------------------------------------------
+
+SPEEDS = np.array([0.25, 0.5, 1.0, 2.0, 1.0, 0.5, 2.0, 1.0])
+
+
+def test_fleet_router_s1_bit_equal_to_run_simulation():
+    """S=1 fleet serving is the single-frontend loop, bit for bit
+    (identical RNG streams, every sync a numeric no-op)."""
+    r1 = RosellaRouter(8, mu_bar=SPEEDS.sum(), seed=0, async_mu=False)
+    resp1, _ = run_simulation(r1, SimulatedPool(SPEEDS), arrival_rate=4.0,
+                              horizon=120.0, seed=0, arrival_batch=16)
+    rf = FleetRouter(1, 8, mu_bar=SPEEDS.sum(), seed=0, async_mu=False)
+    respf, _, info = run_fleet_simulation(
+        rf, SimulatedPool(SPEEDS), arrival_rate=4.0, horizon=120.0,
+        seed=0, arrival_batch=16, sync_every=4,
+    )
+    np.testing.assert_array_equal(resp1, respf)
+    assert info["turns"] > 0
+
+
+def test_fleet_router_sync_reconciles_views():
+    """After serve turns on split views, sync makes every frontend adopt
+    the delta-reconstructed global view, merge μ̂, and sum λ̂ streams."""
+    S = 3
+    rf = FleetRouter(S, 8, mu_bar=float(SPEEDS.sum()), seed=1, async_mu=False)
+    for turn in range(3):
+        for f in range(S):
+            rf.serve_turn(f, 1.0 + turn, 4)
+    qs = np.stack([np.asarray(fr.q_view) for fr in rf.frontends])
+    assert (qs != qs[0]).any()  # stale: frontends see only their own work
+    info = rf.sync(4.0)
+    qs2 = np.stack([np.asarray(fr.q_view) for fr in rf.frontends])
+    assert (qs2 == qs2[0]).all()
+    # global view = sum of per-frontend outstanding (3 turns × 4 each)
+    assert qs2[0].sum() == qs.sum()
+    assert info["view_gaps"].shape == (S,)
+    mus = [np.asarray(fr.mu_front) for fr in rf.frontends]
+    for m_ in mus[1:]:
+        np.testing.assert_array_equal(mus[0], m_)
+    np.testing.assert_allclose(rf.lam_global, rf.lam_hats.sum(), rtol=1e-6)
+
+
+@pytest.mark.parametrize("S", [2, 4])
+def test_run_fleet_simulation_multi_frontend(S):
+    """S frontends over one pool: every request routed and completed, the
+    placement log covers all frontends, staleness telemetry populated."""
+    rf = FleetRouter(S, 8, mu_bar=float(SPEEDS.sum()), seed=0, async_mu=False)
+    resp, mu_trace, info = run_fleet_simulation(
+        rf, SimulatedPool(SPEEDS), arrival_rate=4.0, horizon=100.0,
+        seed=0, arrival_batch=16, sync_every=4,
+    )
+    assert resp.size == info["frontends"].size == info["workers"].size
+    assert set(np.unique(info["frontends"])) == set(range(S))
+    assert info["sync_gaps"].size > 0
+    assert np.isfinite(resp).all()
+    s = M.fleet_summary(
+        info["frontends"], info["workers"], info["epochs"],
+        n_frontends=S, lam_hat_frontends=info["lam_hats"], lam_true=4.0,
+        view_gaps=info["sync_gaps"],
+    )
+    assert s["collision_rate"] > 0.0  # concurrent frontends do collide
+    assert s["lam_fleet_rel_err"] < 0.6
+
+
+def test_fleet_router_herd_correction_biases_views():
+    """With herd correction ON, a frontend's routing view carries the
+    expected peer load (∝ μ̂) on top of its own outstanding work."""
+    S = 4
+    rf = FleetRouter(S, 8, mu_bar=float(SPEEDS.sum()), seed=0,
+                     async_mu=False, herd_correction=True)
+    rf.sync(0.0)
+    for f in range(S):  # prime the λ̂ streams
+        rf.serve_turn(f, 1.0, 4)
+        rf.serve_turn(f, 2.0, 4)
+    q_before = np.asarray(rf.frontends[0].q_view).copy()
+    rf.serve_turn(0, 20.0, 4)  # long gap → large expected peer load
+    q_after = np.asarray(rf.frontends[0].q_view)
+    # view grew by more than this turn's own 4 placements
+    assert q_after.sum() >= q_before.sum() + 4
+    extra = q_after.sum() - q_before.sum() - 4
+    assert extra > 0, (q_before, q_after)
