@@ -6,12 +6,19 @@ Per policy:
   * serial   — the one-task-at-a-time ``lax.scan`` frontend loop (per-task
                key split + single-task policy closure + per-task queue
                fold-back — the seed's ``schedule_batch`` hot path)
-  * batched  — one engine call: counter-hash probe pair, inverse-CDF
-               sampling, snapshot select, matmul histogram fold-back
+  * batched  — one engine call in its PRODUCTION configuration: the
+               μ̂-proportional policies draw probes through the amortized
+               Walker alias table (built once per μ̂ refresh, outside the
+               timed region — exactly how the router/fleet thread it),
+               everything else as before (counter-hash probe RNG, snapshot
+               select, matmul histogram fold-back)
 
-plus, for PPoT-SQ(2), the fused v2 Pallas kernel in interpret mode
-(correctness / dataflow proxy; TPU timings don't exist on a CPU container —
-the VMEM/MXU design is argued in kernels/ppot_dispatch/kernel.py).
+plus the PPoT-SQ(2) ablation column: the same engine forced onto the
+per-call inverse-CDF path (``table=None`` — the PR-2 hot path, two
+searchsorted sweeps per call), the alias-table build cost, and the
+reconstructed PR-1 path, all timed with the same best-of-rounds timer in
+the same process — so every improvement ratio has a same-run denominator
+next to the recorded-baseline one.
 
 Timing methodology: per-call latency is sampled over ``rounds`` repeated
 timing rounds and the BEST round is reported (the container's CPU clock is
@@ -19,9 +26,17 @@ noisy-neighbor throttled; best-of-rounds recovers the machine's actual
 capability, p50/p99 over rounds quantify the jitter).
 
 The paper targets "millions of tasks per second"; PR-1 recorded 5.8M
-decisions/s for batched PPoT-SQ(2) at the reference shape (n=64, B=4096).
-This PR's acceptance bar is ≥ 1.5× that number, recorded in
-``BENCH_dispatch.json`` (``ppot_sq2.improvement_vs_pr1``).
+decisions/s and PR-2 9.24M for batched PPoT-SQ(2) at the reference shape
+(n=64, B=4096). This PR's acceptance bar is ≥ 1.8× PR-2 (≥ 16.5M),
+recorded in ``BENCH_dispatch.json`` (``ppot_sq2.meets_1p8x_bar``); the
+PR-2/PR-3 record is preserved under the ``pr3_baseline`` key.
+
+  PYTHONPATH=src:. python benchmarks/sched_throughput.py \
+      [--smoke] [--n 64[,256,...]] [--B 4096[,16384,...]] [--out PATH]
+
+Comma lists sweep the (n, B) grid: the FIRST pair is the headline shape,
+every combination lands in the json's ``sweep`` table (alias vs
+searchsorted decisions/s per shape).
 """
 from __future__ import annotations
 
@@ -39,6 +54,7 @@ from repro.core import policies as pol
 from repro.kernels.ppot_dispatch import ops as pd_ops
 
 PR1_BASELINE_DPS = 5.8e6  # recorded by PR 1 at n=64, B=4096 on CPU
+PR2_BASELINE_DPS = 9.24e6  # recorded by PR 2 (searchsorted path), same shape
 
 
 def _time_rounds(fn, *args, iters=20, rounds=5):
@@ -56,14 +72,49 @@ def _time_rounds(fn, *args, iters=20, rounds=5):
     return float(s.min()), float(np.percentile(s, 50)), float(np.percentile(s, 99))
 
 
-def run(n: int = 64, B: int = 4096, seed: int = 0, *, serial_B: int | None = None,
-        iters: int = 20, rounds: int = 5, json_path: str | None = None):
-    """Time every policy through the engine. ``serial_B`` defaults to B."""
-    serial_B = B if serial_B is None else serial_B
+def _setup(n: int, B: int, seed: int):
     key = jax.random.PRNGKey(seed)
     mu = jax.random.uniform(key, (n,)) * 4
     q = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, 10)
+    return key, mu, q
+
+
+def ablation(n: int, B: int, seed: int = 0, *, iters: int = 20, rounds: int = 5):
+    """Alias-vs-searchsorted decisions/s for PPoT-SQ(2) at one (n, B)."""
+    key, mu, q = _setup(n, B, seed)
     cfg = pol.default_policy_config()
+    table = dsp.build_alias_table(mu)
+
+    def alias_path(key, q):
+        return dsp.dispatch(pol.PPOT_SQ2, key, q, mu, mu, cfg, B,
+                            use_kernel=False, table=table)
+
+    def ss_path(key, q):
+        return dsp.dispatch(pol.PPOT_SQ2, key, q, mu, mu, cfg, B,
+                            use_kernel=False)
+
+    t_a, _, _ = _time_rounds(alias_path, key, q, iters=iters, rounds=rounds)
+    t_s, _, _ = _time_rounds(ss_path, key, q, iters=iters, rounds=rounds)
+    t_b, _, _ = _time_rounds(dsp.build_alias_table, mu,
+                             iters=max(iters, 20), rounds=rounds)
+    return {
+        "n": n, "B": B,
+        "alias_decisions_per_s": B / t_a,
+        "searchsorted_decisions_per_s": B / t_s,
+        "alias_vs_searchsorted": t_s / t_a,
+        "table_build_us": t_b * 1e6,
+    }
+
+
+def run(n: int = 64, B: int = 4096, seed: int = 0, *, serial_B: int | None = None,
+        iters: int = 20, rounds: int = 5, json_path: str | None = None,
+        sweep_shapes: "list[tuple[int, int]] | None" = None,
+        smoke_reference: bool = True):
+    """Time every policy through the engine. ``serial_B`` defaults to B."""
+    serial_B = B if serial_B is None else serial_B
+    key, mu, q = _setup(n, B, seed)
+    cfg = pol.default_policy_config()
+    table = dsp.build_alias_table(mu)  # amortized: built once per μ̂ refresh
     rows = []
     speedups = {}
     batched_dps = {}
@@ -89,8 +140,13 @@ def run(n: int = 64, B: int = 4096, seed: int = 0, *, serial_B: int | None = Non
                 q2, w = jax.lax.scan(body, q, keys)
                 return w, q2
 
-        def batched(key, q, policy=policy):
-            return dsp.dispatch(policy, key, q, mu, mu, cfg, B, use_kernel=False)
+        # production configuration: amortized alias table for the
+        # μ̂-proportional policies, plain engine for the rest
+        tbl = table if policy in dsp.ALIAS_POLICIES else None
+
+        def batched(key, q, policy=policy, tbl=tbl):
+            return dsp.dispatch(policy, key, q, mu, mu, cfg, B,
+                                use_kernel=False, table=tbl)
 
         t_s, _, _ = _time_rounds(serial, key, q, iters=max(iters // 4, 2),
                                  rounds=max(rounds // 2, 2))
@@ -105,6 +161,7 @@ def run(n: int = 64, B: int = 4096, seed: int = 0, *, serial_B: int | None = Non
             "us_per_call_p99": t_b99 * 1e6,
             "decisions_per_s": dps_b,
             "speedup_vs_serial": speedups[policy],
+            "probe_sampler": "alias" if tbl is not None else "direct",
         }
         if policy == pol.SPARROW:
             # sparrow's "serial" is the same batched water-fill re-run (no
@@ -121,10 +178,19 @@ def run(n: int = 64, B: int = 4096, seed: int = 0, *, serial_B: int | None = Non
                                 f"decisions_per_s={dps_b:.0f};"
                                 f"speedup={speedups[policy]:.0f}x"))
 
+    # --- PPoT ablation column: searchsorted (PR-2 path), table build,
+    # and the reconstructed PR-1 path, all same-run / same-timer ----------
+    abl = ablation(n, B, seed, iters=iters, rounds=rounds)
+    dps_ss = abl["searchsorted_decisions_per_s"]
+    rows.append(csv_row("sched_batched_ppot_searchsorted", 1e6 / dps_ss,
+                        f"decisions_per_s={dps_ss:.0f};pr2_path_same_run"))
+    rows.append(csv_row("sched_alias_table_build", abl["table_build_us"],
+                        "amortized_once_per_mu_refresh"))
+
     # PR-1's batched PPoT hot path (threefry probe pair + clipped
     # searchsorted + sort-based fold), reconstructed verbatim and timed
-    # with the SAME best-of-rounds timer — de-confounds the ≥1.5× gate
-    # from the timer-methodology change vs the recorded 5.8M number.
+    # with the SAME best-of-rounds timer — de-confounds the baseline
+    # ratios from the timer-methodology change vs the recorded numbers.
     from repro.kernels.ppot_dispatch import ref as pd_ref
 
     @jax.jit
@@ -148,9 +214,9 @@ def run(n: int = 64, B: int = 4096, seed: int = 0, *, serial_B: int | None = Non
     rows.append(csv_row("sched_batched_ppot_pr1_path", t_p1 / B * 1e6,
                         f"decisions_per_s={dps_p1:.0f};same_run_baseline"))
 
-    # pallas fused v2 kernel, interpret mode (not a perf number — a
-    # correctness/dataflow proxy that the fused probe→select→fold path
-    # returns the engine's exact (workers, q_after))
+    # pallas fused kernels, interpret mode (not perf numbers — correctness/
+    # dataflow proxies that the fused probe→select→fold paths return the
+    # engine's exact (workers, q_after)): v2 inverse-CDF and v3 alias
     t0 = time.time()
     rk = dsp.dispatch(pol.PPOT_SQ2, key, q, mu, mu, cfg, min(B, 512),
                       use_kernel=True, interpret=True)
@@ -165,6 +231,16 @@ def run(n: int = 64, B: int = 4096, seed: int = 0, *, serial_B: int | None = Non
     rows.append(csv_row("sched_pallas_fused_interpret", t_int / min(B, 512) * 1e6,
                         f"mode=interpret;bit_identical={fused_ok};"
                         "see_kernel_py_for_TPU_design"))
+    rka = dsp.dispatch(pol.PPOT_SQ2, key, q, mu, mu, cfg, min(B, 512),
+                       use_kernel=True, interpret=True, table=table)
+    rja = dsp.dispatch(pol.PPOT_SQ2, key, q, mu, mu, cfg, min(B, 512),
+                       use_kernel=False, table=table)
+    fused_alias_ok = bool(
+        np.array_equal(np.asarray(rka.workers), np.asarray(rja.workers))
+        and np.array_equal(np.asarray(rka.q_after), np.asarray(rja.q_after))
+    )
+    rows.append(csv_row("sched_pallas_fused_alias_interpret", 0.0,
+                        f"mode=interpret;bit_identical={fused_alias_ok}"))
     # v1 (select-only) kernel entry point stays exercised as the oracle
     t0 = time.time()
     pd_ops.dispatch(key, mu, q, min(B, 512), interpret=True)
@@ -172,49 +248,89 @@ def run(n: int = 64, B: int = 4096, seed: int = 0, *, serial_B: int | None = Non
     rows.append(csv_row("sched_pallas_interpret", t_v1 / min(B, 512) * 1e6,
                         "mode=interpret;v1_select_only_oracle"))
 
-    # The ≥50× / ≥1.5×-PR-1 acceptance bars are defined at the reference
-    # shape (n=64, B=4096); at other shapes report raw numbers only.
+    # The acceptance bars are defined at the reference shape (n=64,
+    # B=4096); at other shapes report raw numbers only.
     at_reference = (n, B, serial_B) == (64, 4096, 4096)
-    improvement = batched_dps[pol.PPOT_SQ2] / PR1_BASELINE_DPS
-    improvement_same_run = batched_dps[pol.PPOT_SQ2] / dps_p1
+    dps_alias = batched_dps[pol.PPOT_SQ2]
+    improvement_pr1 = dps_alias / PR1_BASELINE_DPS
+    improvement_pr2 = dps_alias / PR2_BASELINE_DPS
+    improvement_same_run = dps_alias / dps_ss
     claim = (
         f"ppot_speedup={speedups[pol.PPOT_SQ2]:.0f}x;"
-        f"meets_1M_per_s={batched_dps[pol.PPOT_SQ2] > 1e6};"
+        f"meets_1M_per_s={dps_alias > 1e6};"
     )
     if at_reference:
-        claim += (f"meets_50x={speedups[pol.PPOT_SQ2] >= 50};"
-                  f"vs_pr1_5.8M={improvement:.2f}x;"
-                  f"vs_pr1_same_run={improvement_same_run:.2f}x")
+        claim += (f"vs_pr2_9.24M={improvement_pr2:.2f}x;"
+                  f"vs_searchsorted_same_run={improvement_same_run:.2f}x;"
+                  f"meets_1p8x={improvement_pr2 >= 1.8 and dps_alias >= 16.5e6}")
     else:
         claim += "reference_shape=False(bars_apply_at_n64_B4096)"
     rows.append(csv_row("sched_claim_millions_per_sec", 0.0, claim))
 
+    sweep = []
+    for (sn, sB) in (sweep_shapes or []):
+        if (sn, sB) == (n, B):
+            continue
+        sweep.append(ablation(sn, sB, seed, iters=max(iters // 2, 2),
+                              rounds=max(rounds // 2, 2)))
+        rows.append(csv_row(
+            f"sched_sweep_n{sn}_B{sB}", 0.0,
+            f"alias={sweep[-1]['alias_decisions_per_s']:.0f};"
+            f"searchsorted={sweep[-1]['searchsorted_decisions_per_s']:.0f}"))
+
     summary = {
         "config": {"n": n, "B": B, "serial_B": serial_B, "iters": iters,
                    "rounds": rounds, "backend": jax.default_backend(),
-                   "methodology": "best-of-rounds per-call latency"},
+                   "methodology": "best-of-rounds per-call latency",
+                   "probe_sampler": "alias (amortized per mu-refresh)"},
         "policies": policy_stats,
         "ppot_sq2": {
-            "decisions_per_s": batched_dps[pol.PPOT_SQ2],
+            "decisions_per_s": dps_alias,
             "us_per_call_best": policy_stats[pol.PPOT_SQ2]["us_per_call_best"],
             "us_per_call_p50": policy_stats[pol.PPOT_SQ2]["us_per_call_p50"],
             "us_per_call_p99": policy_stats[pol.PPOT_SQ2]["us_per_call_p99"],
             "speedup_vs_serial": speedups[pol.PPOT_SQ2],
             "pr1_recorded_baseline_decisions_per_s": PR1_BASELINE_DPS,
-            "improvement_vs_pr1_recorded": improvement,
-            # same machine state, same timer — the methodology-clean ratio
+            "improvement_vs_pr1_recorded": improvement_pr1,
+            "pr2_recorded_baseline_decisions_per_s": PR2_BASELINE_DPS,
+            "improvement_vs_pr2_recorded": improvement_pr2,
+            # same machine state, same timer — the methodology-clean ratios
+            "searchsorted_same_run_decisions_per_s": dps_ss,
+            "improvement_vs_searchsorted_same_run": improvement_same_run,
             "pr1_path_same_run_decisions_per_s": dps_p1,
-            "improvement_vs_pr1_same_run": improvement_same_run,
-            "meets_1p5x_bar": bool(
+            "alias_table_build_us": abl["table_build_us"],
+            "meets_1p8x_bar": bool(
                 at_reference
-                and improvement >= 1.5
-                and improvement_same_run >= 1.5
+                and improvement_pr2 >= 1.8
+                and dps_alias >= 16.5e6
             ),
             "at_reference_shape": at_reference,
         },
+        "sweep": sweep,
         "fused_kernel_interpret_bit_identical": fused_ok,
+        "fused_alias_kernel_interpret_bit_identical": fused_alias_ok,
     }
+    if smoke_reference:
+        # the smoke-shape record ci.sh's perf smoke compares against
+        sref = ablation(16, 1024, seed, iters=4, rounds=2)
+        summary["smoke_reference"] = {
+            "n": 16, "B": 1024,
+            "decisions_per_s": sref["alias_decisions_per_s"],
+        }
     if json_path:
+        # keep the PR-2/PR-3 record: whatever the committed file held
+        # before this rewrite survives under "pr3_baseline"
+        if os.path.exists(json_path):
+            with open(json_path) as f:
+                try:
+                    prev = json.load(f)
+                except json.JSONDecodeError:
+                    prev = None
+            if prev is not None:
+                summary["pr3_baseline"] = prev.get("pr3_baseline") or {
+                    k: prev[k] for k in ("config", "policies", "ppot_sq2")
+                    if k in prev
+                }
         with open(json_path, "w") as f:
             json.dump(summary, f, indent=1)
         rows.append(csv_row("sched_bench_json", 0.0, f"wrote={json_path}"))
@@ -222,16 +338,32 @@ def run(n: int = 64, B: int = 4096, seed: int = 0, *, serial_B: int | None = Non
                   "summary": summary}
 
 
+def _int_list(s: str) -> "list[int]":
+    return [int(x) for x in s.split(",") if x]
+
+
 if __name__ == "__main__":
     import argparse
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--n", default=None, help="worker count(s), comma list")
+    ap.add_argument("--B", default=None, help="batch size(s), comma list")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     if args.out is None:  # smoke runs must not clobber the full-shape record
         name = "BENCH_dispatch_smoke.json" if args.smoke else "BENCH_dispatch.json"
         args.out = os.path.join(os.path.dirname(__file__), "..", name)
-    kw = dict(n=16, B=1024, serial_B=128, iters=4, rounds=2) if args.smoke else {}
+    ns = _int_list(args.n) if args.n else None
+    Bs = _int_list(args.B) if args.B else None
+    if args.smoke:
+        kw = dict(n=ns[0] if ns else 16, B=Bs[0] if Bs else 1024,
+                  serial_B=128, iters=4, rounds=2, smoke_reference=False)
+    else:
+        kw = dict(n=ns[0] if ns else 64, B=Bs[0] if Bs else 4096)
+    if ns or Bs:
+        kw["sweep_shapes"] = [
+            (sn, sB) for sn in (ns or [kw["n"]]) for sB in (Bs or [kw["B"]])
+        ]
     for r in run(json_path=os.path.abspath(args.out), **kw)[0]:
         print(r)

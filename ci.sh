@@ -15,10 +15,36 @@ export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q -m "not slow" \
     tests/test_dispatch.py tests/test_policies.py tests/test_kernels.py \
     tests/test_learner.py tests/test_theory.py tests/test_fleet.py \
-    tests/test_router_and_straggler.py tests/test_properties.py
+    tests/test_router_and_straggler.py tests/test_properties.py \
+    tests/test_alias.py tests/test_scanloop.py
 
 # ~10 s engine smoke: all policies, reduced shapes
 timeout 120 python benchmarks/sched_throughput.py --smoke
+
+# non-gating perf smoke: compare the fresh smoke-shape PPoT decisions/s
+# against the smoke_reference recorded in the committed BENCH_dispatch.json
+# and warn beyond a 20% regression (throttled-container noise makes this
+# advisory, not a gate; the smoke artifact itself is gitignored)
+python - <<'EOF' || true
+import json
+try:
+    fresh = json.load(open("BENCH_dispatch_smoke.json"))
+    ref = json.load(open("BENCH_dispatch.json")).get("smoke_reference")
+    got = fresh["ppot_sq2"]["decisions_per_s"]
+    if ref and ref.get("decisions_per_s"):
+        want = ref["decisions_per_s"]
+        ratio = got / want
+        line = (f"perf-smoke: ppot_sq2 {got/1e6:.1f}M dec/s vs committed "
+                f"smoke_reference {want/1e6:.1f}M ({ratio:.2f}x)")
+        if ratio < 0.8:
+            line += "  ** WARNING: >20% below the committed reference **"
+        print(line)
+    else:
+        print(f"perf-smoke: ppot_sq2 {got/1e6:.1f}M dec/s "
+              "(no smoke_reference in BENCH_dispatch.json)")
+except Exception as e:  # advisory only — never fail CI on the smoke
+    print(f"perf-smoke: skipped ({e})")
+EOF
 
 # non-gating perf smokes: record the serving + fleet perf trajectories at
 # reduced scale (they write BENCH_serve_smoke.json / BENCH_fleet_smoke.json,

@@ -25,7 +25,11 @@ Mechanics:
                       an order of magnitude cheaper than threefry on the
                       hot path. The CDF is built once per batch and
                       threaded through the draws dict to every consumer
-                      (jnp sampling, v1 kernel, fused v2 kernel).
+                      (jnp sampling, v1 kernel, fused v2 kernel). Callers
+                      that refresh μ̂ on a cadence pass an amortized
+                      ``AliasTable`` instead (``build_alias_table``, O(1)
+                      draws via ``alias_sample``) — the searchsorted
+                      sweeps drop off the per-call cost entirely.
 
   selection           SQ(2) / LL(2) / ε-greedy folds are elementwise
                       against the queue snapshot every task in the batch
@@ -70,12 +74,109 @@ from repro.kernels.ppot_dispatch import ref as pd_ref
 from repro.kernels.ppot_dispatch.kernel import (
     ppot_dispatch as _ppot_kernel,
     ppot_dispatch_fused as _ppot_kernel_fused,
+    ppot_dispatch_fused_alias as _ppot_kernel_fused_alias,
 )
 
 
 class DispatchResult(NamedTuple):
     workers: jax.Array  # i32[B] chosen worker per task; -1 at inactive slots
     q_after: jax.Array  # i32[n] queue view with the batch folded back
+
+
+class AliasTable(NamedTuple):
+    """Walker alias table for O(1) proportional sampling.
+
+    ``prob[i]`` is the acceptance threshold of bin ``i`` and ``alias[i]``
+    the overflow partner: a draw (u, v) lands in bin ``i = ⌊u·n⌋`` and
+    resolves to ``i`` if ``v < prob[i]`` else ``alias[i]`` — two gathers
+    and a compare, independent of n. Built once per μ̂ refresh
+    (``build_alias_table``) and threaded through the engine the way the
+    CDF is, so the per-dispatch cost drops from two O(B log n)
+    searchsorted sweeps to O(B) gathers (ROADMAP "next 2×" item).
+    """
+
+    prob: jax.Array  # f32[n] acceptance threshold per bin
+    alias: jax.Array  # i32[n] overflow partner per bin
+
+
+#: Policies whose μ̂-proportional probe draw can run through an
+#: ``AliasTable`` (HALO samples from μ_true, never from the table's μ̂).
+ALIAS_POLICIES = (pol.PSS, pol.PPOT_SQ2, pol.PPOT_LL2, pol.BANDIT)
+
+
+@jax.jit
+def build_alias_table(mu_hat: jax.Array) -> AliasTable:
+    """Vose/Walker alias-table construction, O(n) + one sort.
+
+    Amortized across every dispatch between two μ̂ refreshes — far too
+    expensive to build per call (the ROADMAP's objection to a per-call
+    table), trivially cheap per refresh. All-zero μ̂ (dead cluster)
+    degenerates to the uniform table, the same guard as ``make_cdf``.
+
+    The classic small/large pairing runs as a ``fori_loop`` over two
+    index stacks packed into one array (smalls grow from 0, larges from
+    n): each iteration finalizes exactly one bin, so n iterations finish
+    the table. Exact for degenerate weights: uniform μ̂ → prob ≡ 1
+    (every draw keeps its own bin), single-hot μ̂ → every cold bin
+    aliases to the hot one with prob 0.
+    """
+    n = mu_hat.shape[0]
+    total = jnp.sum(mu_hat)
+    w = jnp.where(total > 0, mu_hat, jnp.ones_like(mu_hat))
+    p = (w * (n / jnp.sum(w))).astype(jnp.float32)  # scaled weights, mean 1
+    idx = jnp.arange(n, dtype=jnp.int32)
+    small = p < 1.0
+    # one array, two stacks: smalls at [0, ns), larges at [n-nl, n)
+    stack = idx[jnp.argsort(jnp.where(small, idx, n + idx))].astype(jnp.int32)
+    ns0 = jnp.sum(small).astype(jnp.int32)
+
+    def body(_, st):
+        p, prob, alias, stack, ns, nl = st
+        has_s, has_l = ns > 0, nl > 0
+        both = has_s & has_l
+        s = stack[jnp.maximum(ns - 1, 0)]
+        l = stack[n - jnp.maximum(nl, 1)]
+        # the bin finalized this iteration (a small while any remain)
+        fin = jnp.where(has_s, s, l)
+        prob = prob.at[fin].set(jnp.where(both, p[s], 1.0))
+        alias = alias.at[fin].set(jnp.where(both, l, fin))
+        pl = p[l] - (1.0 - p[s])  # large's residual mass after the pairing
+        p = jnp.where(both, p.at[l].set(pl), p)
+        goes_small = both & (pl < 1.0)
+        # residual large drops into the slot the finalized small vacated
+        stack = jnp.where(
+            goes_small, stack.at[jnp.maximum(ns - 1, 0)].set(l), stack
+        )
+        ns = jnp.where(both, jnp.where(goes_small, ns, ns - 1),
+                       jnp.where(has_s, ns - 1, ns))
+        nl = jnp.where(both, jnp.where(goes_small, nl - 1, nl),
+                       jnp.where(has_s, nl, nl - 1))
+        return p, prob, alias, stack, ns, nl
+
+    # seed the loop carry FROM the inputs (0·p + const) so every element
+    # carries the input's replication type — a pure-constant init trips
+    # shard_map's scan replication check when the table is built inside a
+    # collective (fleet sync: the carry would start "replicated" and end
+    # probe-dependent)
+    prob0 = p * 0.0 + 1.0
+    alias0 = idx + stack * 0
+    _, prob, alias, _, _, _ = jax.lax.fori_loop(
+        0, n, body, (p, prob0, alias0, stack, ns0, jnp.int32(n) - ns0)
+    )
+    return AliasTable(prob=prob, alias=alias)
+
+
+def alias_sample(table: AliasTable, u: jax.Array, v: jax.Array) -> jax.Array:
+    """O(1) proportional sample: bin ⌊u·n⌋, keep if v < prob else alias.
+
+    Two gathers + one compare per draw — the amortized replacement for
+    ``inverse_cdf_sample``'s O(log n) searchsorted sweep. Exactly the
+    categorical distribution the table was built from (the (u, v) grid is
+    16-bit on the hot path, the same resolution as the inverse-CDF draw).
+    """
+    n = table.prob.shape[0]
+    i = jnp.minimum((u * n).astype(jnp.int32), n - 1)
+    return jnp.where(v < table.prob[i], i, table.alias[i]).astype(jnp.int32)
 
 
 def _on_tpu() -> bool:
@@ -135,6 +236,26 @@ def _uniform_pair(key: jax.Array, B: int) -> tuple[jax.Array, jax.Array]:
     return u1, u2
 
 
+def _uniform_quad(key: jax.Array, B: int):
+    """(u1, u2, v1, v2) — the alias sampler's four uniforms per task.
+
+    The first counter-hash sweep is ``_uniform_pair`` verbatim (the bin
+    draws u1/u2 stay on the stream the inverse-CDF engine consumes); the
+    second sweep re-mixes the same Weyl counter against a different key
+    schedule for the acceptance draws v1/v2 — one extra fmix sweep, still
+    an order of magnitude cheaper than a threefry call.
+    """
+    kd = _key_data(key)
+    x = jnp.arange(B, dtype=jnp.uint32) * jnp.uint32(0x9E3779B9) + kd[0]
+    h1 = _fmix32(x ^ (kd[1] * jnp.uint32(0x85EBCA6B)))
+    h2 = _fmix32((x + jnp.uint32(0x7F4A7C15)) ^ (kd[1] * jnp.uint32(0xC2B2AE35)))
+    u1 = (h1 >> 16).astype(jnp.float32) * (1.0 / 65536.0)
+    u2 = (h1 & jnp.uint32(0xFFFF)).astype(jnp.float32) * (1.0 / 65536.0)
+    v1 = (h2 >> 16).astype(jnp.float32) * (1.0 / 65536.0)
+    v2 = (h2 & jnp.uint32(0xFFFF)).astype(jnp.float32) * (1.0 / 65536.0)
+    return u1, u2, v1, v2
+
+
 def _fold_counts(q: jax.Array, workers: jax.Array,
                  active: jax.Array | None) -> jax.Array:
     """Per-worker placement counts WITHOUT a scatter or a sort: split each
@@ -166,7 +287,7 @@ def _fold_counts(q: jax.Array, workers: jax.Array,
 
 
 def _draws(policy: str, key, B: int, n: int, cfg, mu_hat, mu_true,
-           *, need_j: bool = True) -> dict:
+           *, need_j: bool = True, table: AliasTable | None = None) -> dict:
     """Draw every random quantity the policy needs for a batch of B tasks.
 
     Each [B]-shaped entry (batch axis leading) can be re-chunked by the
@@ -176,33 +297,60 @@ def _draws(policy: str, key, B: int, n: int, cfg, mu_hat, mu_true,
     read the same array. ``need_j=False`` skips materializing j1/j2 for
     the fused-kernel path (the kernel re-derives them from u1/u2 on
     device, bit-identically).
+
+    When the caller hands in an amortized ``table`` (built once per μ̂
+    refresh), the μ̂-proportional policies (``ALIAS_POLICIES``) draw their
+    probes via ``alias_sample`` — (u, v) pairs, two gathers + a compare —
+    instead of the per-call CDF + searchsorted sweep. NOTE the RNG stream
+    changes: the alias draw consumes an extra acceptance uniform per
+    probe, so selections differ draw-for-draw from the inverse-CDF engine
+    while matching it in distribution (tests/test_alias.py pins both).
     """
     d: dict[str, jax.Array] = {}
+    if table is not None and policy not in ALIAS_POLICIES:
+        table = None  # μ_true-driven / uniform policies ignore the μ̂ table
     if policy == pol.UNIFORM:
         d["j_uni"] = jax.random.randint(key, (B,), 0, n, dtype=jnp.int32)
     elif policy == pol.POT:
         jj = jax.random.randint(key, (2, B), 0, n, dtype=jnp.int32)
         d["j1"], d["j2"] = jj[0], jj[1]
     elif policy == pol.PSS:
-        cdf = pd_ref.make_cdf(mu_hat)
-        u = jax.random.uniform(key, (B,))
-        d["j1"] = jnp.clip(inverse_cdf_sample(cdf, u), 0, n - 1)
+        if table is not None:
+            u, _, v, _ = _uniform_quad(key, B)
+            d["j1"] = alias_sample(table, u, v)
+        else:
+            cdf = pd_ref.make_cdf(mu_hat)
+            u = jax.random.uniform(key, (B,))
+            d["j1"] = jnp.clip(inverse_cdf_sample(cdf, u), 0, n - 1)
     elif policy == pol.HALO:
         cdf = pd_ref.make_cdf(mu_true)
         u = jax.random.uniform(key, (B,))
         d["j1"] = jnp.clip(inverse_cdf_sample(cdf, u), 0, n - 1)
     elif policy in (pol.PPOT_SQ2, pol.PPOT_LL2):
-        d["cdf"] = pd_ref.make_cdf(mu_hat)
-        d["u1"], d["u2"] = _uniform_pair(key, B)
-        if need_j:
-            d["j1"] = inverse_cdf_sample(d["cdf"], d["u1"])
-            d["j2"] = inverse_cdf_sample(d["cdf"], d["u2"])
+        if table is not None:
+            u1, u2, v1, v2 = _uniform_quad(key, B)
+            if need_j:
+                d["j1"] = alias_sample(table, u1, v1)
+                d["j2"] = alias_sample(table, u2, v2)
+            else:  # fused alias kernel re-derives j from (u, v) on device
+                d["u1"], d["u2"], d["v1"], d["v2"] = u1, u2, v1, v2
+        else:
+            d["cdf"] = pd_ref.make_cdf(mu_hat)
+            d["u1"], d["u2"] = _uniform_pair(key, B)
+            if need_j:
+                d["j1"] = inverse_cdf_sample(d["cdf"], d["u1"])
+                d["j2"] = inverse_cdf_sample(d["cdf"], d["u2"])
     elif policy == pol.BANDIT:
         k1, k3, k4 = jax.random.split(key, 3)
-        d["cdf"] = pd_ref.make_cdf(mu_hat)
-        d["u1"], d["u2"] = _uniform_pair(k1, B)
-        d["j1"] = inverse_cdf_sample(d["cdf"], d["u1"])
-        d["j2"] = inverse_cdf_sample(d["cdf"], d["u2"])
+        if table is not None:
+            u1, u2, v1, v2 = _uniform_quad(k1, B)
+            d["j1"] = alias_sample(table, u1, v1)
+            d["j2"] = alias_sample(table, u2, v2)
+        else:
+            cdf = pd_ref.make_cdf(mu_hat)
+            u1, u2 = _uniform_pair(k1, B)
+            d["j1"] = inverse_cdf_sample(cdf, u1)
+            d["j2"] = inverse_cdf_sample(cdf, u2)
         d["explore"] = jax.random.uniform(k3, (B,)) < cfg.bandit_eta
         d["j_uni"] = jax.random.randint(k4, (B,), 0, n, dtype=jnp.int32)
     elif policy == pol.SPARROW:
@@ -358,6 +506,7 @@ def _dispatch_impl(
     fold_chunks: int = 1,
     use_kernel: bool | None = None,
     interpret: bool | None = None,
+    table: AliasTable | None = None,  # amortized μ̂ alias table (per refresh)
 ) -> DispatchResult:
     """Place ``B`` tasks in one engine call. Returns (workers[B], q_after).
 
@@ -372,7 +521,10 @@ def _dispatch_impl(
     placement (for SPARROW the pin is applied after water-filling).
     ``use_kernel=None`` auto-selects the Pallas PPoT kernel on TPU; plain
     PPoT-SQ(2) batches (no mask, no pins) run the FUSED v2 kernel, which
-    returns (workers, q_after) in one call.
+    returns (workers, q_after) in one call. ``table`` switches the
+    μ̂-proportional probe draw to the amortized alias sampler (and the
+    fused kernel to its alias-probe variant); the caller owns the
+    build-per-refresh cadence — pass a table built from THIS ``mu_hat``.
     """
     n = q.shape[0]
     if use_kernel is None:
@@ -417,17 +569,25 @@ def _dispatch_impl(
         act = jnp.concatenate([head, pad])
         if forced is not None:
             forced = jnp.concatenate([forced, jnp.full((Bp - B,), -1, jnp.int32)])
-    d = _draws(policy, key, Bp, n, cfg, mu_hat, mu_true, need_j=not fused)
+    d = _draws(policy, key, Bp, n, cfg, mu_hat, mu_true, need_j=not fused,
+               table=table)
 
     if fused:
         # One Pallas call: probe → select → in-kernel fold-back.
-        workers, q_after = _ppot_kernel_fused(
-            d["cdf"], q, d["u1"], d["u2"], interpret=interpret
-        )
+        if table is not None:
+            workers, q_after = _ppot_kernel_fused_alias(
+                table.prob, table.alias, q, d["u1"], d["v1"], d["u2"], d["v2"],
+                interpret=interpret,
+            )
+        else:
+            workers, q_after = _ppot_kernel_fused(
+                d["cdf"], q, d["u1"], d["u2"], interpret=interpret
+            )
         return DispatchResult(workers=workers, q_after=q_after)
 
     if C == 1:
-        kernel = use_kernel and policy == pol.PPOT_SQ2
+        # v1 select kernel is CDF-based; alias batches already carry j1/j2
+        kernel = use_kernel and policy == pol.PPOT_SQ2 and "cdf" in d
         workers = _select(policy, q, d, mu_hat, mu_true, cfg,
                           kernel=kernel, interpret=interpret)
         if forced is not None:
@@ -477,12 +637,16 @@ dispatch_inplace = functools.partial(
 
 
 def dispatch_sequential(
-    policy: str, key, q, mu_hat, mu_true, cfg, B: int, *, active=None
+    policy: str, key, q, mu_hat, mu_true, cfg, B: int, *, active=None,
+    table: AliasTable | None = None,
 ) -> DispatchResult:
     """Reference oracle: identical probe stream, per-task queue fold-back.
 
     This is the paper's sequential frontend loop, kept only for parity
     testing and as the serial baseline in benchmarks/sched_throughput.
+    With ``table`` it consumes the alias (u, v) stream, so it stays the
+    bit-exact oracle for alias-mode batches too.
     """
     return dispatch(policy, key, q, mu_hat, mu_true, cfg, B,
-                    active=active, fold_chunks=B, use_kernel=False)
+                    active=active, fold_chunks=B, use_kernel=False,
+                    table=table)

@@ -60,18 +60,21 @@ def _schedule_impl(
     now: jax.Array,
     m: int,
     policy: str = pol.PPOT_SQ2,
+    table: dsp.AliasTable | None = None,
 ) -> tuple[jax.Array, RosellaState]:
     """Place ``m`` jobs arriving at ``now``; returns (workers[m], state').
 
     One batched engine call: all m jobs probe the frontend's queue snapshot
     and the batch folds back into the view with one histogram fold (the
     paper's probe sees the queue including in-flight assignments from this
-    frontend)."""
+    frontend). ``table`` (optional) is an amortized alias table for the
+    μ̂-proportional probe draw — callers that refresh μ̂ on a cadence (the
+    fleet's frozen views) build it once per refresh."""
     arr = est.observe_arrivals_ema(state.arr, now, m, window=est.EMA_ARR_WINDOW)
     mu_true = state.learner.mu_hat  # runtime has no oracle speeds
     res = dsp.dispatch(
         policy, key, state.q_view, state.learner.mu_hat, mu_true,
-        pol.default_policy_config(), m,
+        pol.default_policy_config(), m, table=table,
     )
     return res.workers, state.replace(q_view=res.q_after, arr=arr)
 
@@ -108,12 +111,16 @@ def route_view(
     now: jax.Array,
     m: int,
     policy: str = pol.PPOT_SQ2,
+    table: dsp.AliasTable | None = None,
 ) -> tuple[jax.Array, jax.Array, est.EmaArrivalState]:
     """Route ``m`` requests against a queue view + μ̂ snapshot; no learner
-    state in the dependency chain. Returns (workers[m], q_view', arr')."""
+    state in the dependency chain. Returns (workers[m], q_view', arr').
+    ``table`` is the amortized alias table matching THIS μ̂ snapshot — the
+    router rebuilds it only when the front buffer flips."""
     arr2 = est.observe_arrivals_ema(arr, now, m, window=est.EMA_ARR_WINDOW)
     res = dsp.dispatch(
-        policy, key, q_view, mu_hat, mu_hat, pol.default_policy_config(), m
+        policy, key, q_view, mu_hat, mu_hat, pol.default_policy_config(), m,
+        table=table,
     )
     return res.workers, res.q_after, arr2
 
@@ -166,41 +173,16 @@ def complete_step(
     return q2, learner2
 
 
-@functools.partial(jax.jit, static_argnums=(9, 10, 11, 12), donate_argnums=(0,))
-def serve_step(
-    q_view: jax.Array,  # i32[n] — donated
-    learner: lrn.LearnerState,  # NOT donated: the μ̂ front buffer may alias
-    # learner.mu_hat (at init, and whenever a flip adopted it) — donating
-    # would invalidate the routing snapshot
-    arr: est.EmaArrivalState,
-    mu_hat: jax.Array,  # f32[n] μ̂ snapshot (front buffer)
-    lcfg: lrn.LearnerConfig,
-    key: jax.Array,
-    comp_workers: jax.Array,  # i32[P] due completions (pad with -1)
-    comp_times: jax.Array,  # f32[P]
-    scalars,  # (now, last_fake_time, comp_now)
-    m: int,
-    policy: str = pol.PPOT_SQ2,
-    max_fake: int = 8,
-    use_fresh_mu: bool = False,
+def _serve_step_math(
+    q_view, learner, arr, mu_hat, lcfg, key, comp_workers, comp_times,
+    scalars, m, policy, max_fake, use_fresh_mu,
+    table: dsp.AliasTable | None = None, use_alias: bool = False,
 ):
-    """One whole serving turn in ONE jit dispatch: flush the due completion
-    batch, draw benchmark requests, route the arrival batch.
-
-    The three stages keep the double-buffer seam inside the executable:
-    the route subgraph depends only on (q_view drained of completions, the
-    μ̂ SNAPSHOT argument, arrival estimator), never on the learner fold /
-    refresh subgraph — XLA can run LEARNER-AGGREGATE concurrently on
-    another thread while the route computes. ``use_fresh_mu=True`` instead
-    routes on THIS flush's refreshed μ̂ (PR-1's blocking semantics,
-    bit-deterministic — the router's ``async_mu=False`` mode). Key
-    consumption and update ordering are bit-identical to
-    ``complete_arrays`` + ``benchmark_requests`` + ``route``; an
-    all-padding completion batch skips the learner fold exactly like the
-    host loop skips ``complete_arrays``.
-
-    Returns (fake_js[max_fake], workers[m], q_view', learner', arr', key').
-    """
+    """The traced body of ``serve_step`` — shared verbatim with the
+    scan-compiled serving loop (``serving/scanloop.py``) so both consume
+    bit-identical key streams and f32 math. See ``serve_step`` for the
+    contract; keep every array here explicitly dtyped (the scan loop
+    traces this under an x64 context for its f64 event clock)."""
     now, last_fake, comp_now = scalars
     q1 = absorb_completions(q_view, comp_workers)
     lam0 = est.lam_hat_ema(arr)
@@ -217,11 +199,69 @@ def serve_step(
     n = q1.shape[0]
     fake_js = fake_jobs_from(lcfg, k_fake, lam0, now - last_fake, max_fake, n)
     arr2 = est.observe_arrivals_ema(arr, now, m, window=est.EMA_ARR_WINDOW)
-    mu_route = learner2.mu_hat if use_fresh_mu else mu_hat
+    if use_fresh_mu:
+        mu_route = learner2.mu_hat
+        # blocking semantics route on THIS flush's μ̂ — the amortized front
+        # table would be stale, so rebuild from the fresh estimates (still
+        # one build per completion flush, not per request).
+        tbl = dsp.build_alias_table(mu_route) if use_alias else None
+    else:
+        mu_route = mu_hat
+        tbl = table if use_alias else None
     res = dsp.dispatch(
-        policy, k_route, q1, mu_route, mu_route, pol.default_policy_config(), m
+        policy, k_route, q1, mu_route, mu_route, pol.default_policy_config(),
+        m, table=tbl,
     )
     return fake_js, res.workers, res.q_after, learner2, arr2, key2
+
+
+@functools.partial(
+    jax.jit, static_argnums=(9, 10, 11, 12, 14), donate_argnums=(0,)
+)
+def serve_step(
+    q_view: jax.Array,  # i32[n] — donated
+    learner: lrn.LearnerState,  # NOT donated: the μ̂ front buffer may alias
+    # learner.mu_hat (at init, and whenever a flip adopted it) — donating
+    # would invalidate the routing snapshot
+    arr: est.EmaArrivalState,
+    mu_hat: jax.Array,  # f32[n] μ̂ snapshot (front buffer)
+    lcfg: lrn.LearnerConfig,
+    key: jax.Array,
+    comp_workers: jax.Array,  # i32[P] due completions (pad with -1)
+    comp_times: jax.Array,  # f32[P]
+    scalars,  # (now, last_fake_time, comp_now)
+    m: int,
+    policy: str = pol.PPOT_SQ2,
+    max_fake: int = 8,
+    use_fresh_mu: bool = False,
+    table: dsp.AliasTable | None = None,  # amortized front-buffer table
+    use_alias: bool = False,
+):
+    """One whole serving turn in ONE jit dispatch: flush the due completion
+    batch, draw benchmark requests, route the arrival batch.
+
+    The three stages keep the double-buffer seam inside the executable:
+    the route subgraph depends only on (q_view drained of completions, the
+    μ̂ SNAPSHOT argument, arrival estimator), never on the learner fold /
+    refresh subgraph — XLA can run LEARNER-AGGREGATE concurrently on
+    another thread while the route computes. ``use_fresh_mu=True`` instead
+    routes on THIS flush's refreshed μ̂ (PR-1's blocking semantics,
+    bit-deterministic — the router's ``async_mu=False`` mode). Key
+    consumption and update ordering are bit-identical to
+    ``complete_arrays`` + ``benchmark_requests`` + ``route``; an
+    all-padding completion batch skips the learner fold exactly like the
+    host loop skips ``complete_arrays``.
+
+    ``use_alias=True`` draws the μ̂-proportional probes through the
+    amortized alias ``table`` (rebuilt by the router only on a front-buffer
+    flip; rebuilt in-step from the fresh μ̂ under ``use_fresh_mu``).
+
+    Returns (fake_js[max_fake], workers[m], q_view', learner', arr', key').
+    """
+    return _serve_step_math(
+        q_view, learner, arr, mu_hat, lcfg, key, comp_workers, comp_times,
+        scalars, m, policy, max_fake, use_fresh_mu, table, use_alias
+    )
 
 
 @functools.partial(jax.jit, static_argnums=(4, 5))
@@ -247,7 +287,9 @@ def fake_jobs_from(
     u1, u2 = dsp._uniform_pair(key, max_fake)
     ks = jnp.arange(max_fake + 1, dtype=jnp.float32)
     logfact = jnp.concatenate([
-        jnp.zeros((1,)),
+        # explicitly f32: this fn must trace identically under an enabled
+        # x64 context (the scan-compiled serving loop) and without one
+        jnp.zeros((1,), jnp.float32),
         jnp.cumsum(jnp.log(jnp.arange(1, max_fake + 1, dtype=jnp.float32))),
     ])
     logp = ks * jnp.log(jnp.maximum(lam, 1e-30)) - lam - logfact

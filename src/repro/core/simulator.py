@@ -106,6 +106,11 @@ class SimConfig:
     # True → inflate each view by the expected placements of the other
     # S−1 frontends since its last sync (repro.fleet.conflict herd model).
     fleet_herd_correction: bool = False
+    # True (default) → μ̂-proportional probe draws go through the frozen
+    # view's Walker alias table (built at sync, O(1) per draw — the
+    # amortized hot path). False forces the per-call inverse-CDF draw,
+    # reproducing the PR-2/PR-3 RNG stream exactly (parity baselines).
+    use_alias: bool = True
 
 
 @pytree_dataclass
@@ -233,6 +238,12 @@ def simulate(cfg: SimConfig, params: SimParams, key: jax.Array):
         # not against true worker state.
         view = flt.frontend_view(state.fleet, f)
         mu_view = state.fleet.mu_view[f]
+        # The frozen view carries its alias table (rebuilt at sync): probe
+        # sampling between syncs is two gathers + a compare, not a CDF scan.
+        table = (
+            flt.frontend_table(state.fleet, f)
+            if cfg.use_alias and cfg.policy in dsp.ALIAS_POLICIES else None
+        )
         view_gap = jnp.sum(jnp.abs(view - state.q_real)).astype(jnp.int32)
         sync_age = state.now - state.fleet.t_sync[f]
         if cfg.fleet_herd_correction and S > 1:
@@ -256,7 +267,7 @@ def simulate(cfg: SimConfig, params: SimParams, key: jax.Array):
             cfg.policy, kd, view, mu_view, mu_now, pcfg, mt,
             active=active, forced=forced,
             fold_chunks=(mt if cfg.batch_self_correct else 1),
-            use_kernel=False,
+            use_kernel=False, table=table,
         )
         workers = res.workers  # i32[mt], -1 at inactive slots
         wsafe = jnp.where(active, workers, 0)

@@ -35,6 +35,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import dispatch as dsp
 from repro.core import estimator as est
 from repro.core import scheduler as rs
 from repro.utils.struct import pytree_dataclass
@@ -52,6 +53,10 @@ class FleetSimState:
     q_snap: jax.Array  # i32[S, n] queue snapshot at each frontend's last sync
     q_delta: jax.Array  # i32[S, n] own placements since that sync
     mu_view: jax.Array  # f32[S, n] μ̂ view frozen at the last sync
+    alias_p: jax.Array  # f32[S, n] alias-table thresholds for mu_view —
+    # part of the FROZEN view: built at sync, amortized across every
+    # dispatch until the next sync (the O(1) probe draw)
+    alias_a: jax.Array  # i32[S, n] alias-table partners for mu_view
     arr: est.EmaArrivalState  # per-frontend λ̂ EMA (leaves shaped [S])
     t_sync: jax.Array  # f32[S] time of each frontend's last sync
     lam_global: jax.Array  # f32 merged fleet λ̂ (Σ_f λ̂_f at last sync)
@@ -59,10 +64,13 @@ class FleetSimState:
 
 def init_fleet_sim(S: int, n: int, mu_view0: jax.Array) -> FleetSimState:
     mu0 = jnp.broadcast_to(jnp.asarray(mu_view0, jnp.float32), (n,))
+    t0 = dsp.build_alias_table(mu0)
     return FleetSimState(
         q_snap=jnp.zeros((S, n), jnp.int32),
         q_delta=jnp.zeros((S, n), jnp.int32),
         mu_view=jnp.broadcast_to(mu0[None], (S, n)),
+        alias_p=jnp.broadcast_to(t0.prob[None], (S, n)),
+        alias_a=jnp.broadcast_to(t0.alias[None], (S, n)),
         arr=est.EmaArrivalState(
             last_time=jnp.zeros((S,), jnp.float32),
             mean_gap=jnp.zeros((S,), jnp.float32),
@@ -76,6 +84,11 @@ def init_fleet_sim(S: int, n: int, mu_view0: jax.Array) -> FleetSimState:
 def frontend_view(fleet: FleetSimState, f: jax.Array) -> jax.Array:
     """Frontend ``f``'s dispatch view: stale snapshot + own in-flight work."""
     return fleet.q_snap[f] + fleet.q_delta[f]
+
+
+def frontend_table(fleet: FleetSimState, f: jax.Array) -> dsp.AliasTable:
+    """Frontend ``f``'s frozen alias table (matches ``mu_view[f]``)."""
+    return dsp.AliasTable(prob=fleet.alias_p[f], alias=fleet.alias_a[f])
 
 
 def fold_own_placements(
@@ -118,15 +131,28 @@ class FleetFrontend:
 
     core: rs.RosellaState
     q_snap: jax.Array  # i32[n] the agreed global view at the last sync
+    alias_p: jax.Array  # f32[n] frozen alias table (thresholds) for the
+    # merged μ̂ adopted at the last sync — the coordination-free step
+    # samples through it, rebuilt only by the sync collective
+    alias_a: jax.Array  # i32[n] frozen alias table (partners)
     lam_global: jax.Array  # f32 merged fleet λ̂ from the last sync
     t_sync: jax.Array  # f32
 
 
+def frontend_shard_table(ff: FleetFrontend) -> dsp.AliasTable:
+    """The shard's frozen alias table (matches the μ̂ of its last sync)."""
+    return dsp.AliasTable(prob=ff.alias_p, alias=ff.alias_a)
+
+
 def init_fleet_frontends(S: int, n: int, lcfg, mu_init: float = 1.0) -> FleetFrontend:
     """Stack ``S`` fresh frontends on a leading axis for shard_map."""
+    core = rs.init_rosella(n, lcfg, mu_init)
+    t0 = dsp.build_alias_table(core.learner.mu_hat)
     one = FleetFrontend(
-        core=rs.init_rosella(n, lcfg, mu_init),
+        core=core,
         q_snap=jnp.zeros((n,), jnp.int32),
+        alias_p=t0.prob,
+        alias_a=t0.alias,
         lam_global=jnp.float32(0.0),
         t_sync=jnp.float32(0.0),
     )

@@ -33,10 +33,16 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import dispatch as dsp
 from repro.core import estimator as est
 from repro.core import policies as pol
 from repro.core import scheduler as rs
-from repro.fleet.state import FleetFrontend, FleetSimState, fleet_lam_hats
+from repro.fleet.state import (
+    FleetFrontend,
+    FleetSimState,
+    fleet_lam_hats,
+    frontend_shard_table,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -51,13 +57,19 @@ def sync_sim_views(
     now: jax.Array,
 ) -> FleetSimState:
     """Reconcile every frontend's view at true worker state (one fold, no
-    collectives — the simulator's round-based form of the sync layer)."""
+    collectives — the simulator's round-based form of the sync layer).
+    The frozen alias table is part of the view: ONE build from the newly
+    adopted μ̂, broadcast to every frontend, amortized until the next
+    sync."""
     S = fleet.q_snap.shape[0]
     lam_f = fleet_lam_hats(fleet)
+    table = dsp.build_alias_table(mu_central)
     return fleet.replace(
         q_snap=jnp.broadcast_to(q_true[None], fleet.q_snap.shape),
         q_delta=jnp.zeros_like(fleet.q_delta),
         mu_view=jnp.broadcast_to(mu_central[None], fleet.mu_view.shape),
+        alias_p=jnp.broadcast_to(table.prob[None], fleet.alias_p.shape),
+        alias_a=jnp.broadcast_to(table.alias[None], fleet.alias_a.shape),
         t_sync=jnp.full((S,), now, jnp.float32),
         lam_global=jnp.sum(lam_f),
     )
@@ -85,9 +97,13 @@ def sync_frontend_shard(ff: FleetFrontend, now: jax.Array, axis_name: str) -> Fl
     core = ff.core.replace(
         q_view=total, learner=ff.core.learner.replace(mu_hat=mu)
     )
+    # the frozen alias table rides the sync: every shard rebuilds from the
+    # SAME pmean'd μ̂ (identical tables, no extra collective) and samples
+    # through it coordination-free until the next sync
+    table = dsp.build_alias_table(mu)
     return ff.replace(
-        core=core, q_snap=total, lam_global=jnp.sum(lam_all),
-        t_sync=jnp.asarray(now, jnp.float32),
+        core=core, q_snap=total, alias_p=table.prob, alias_a=table.alias,
+        lam_global=jnp.sum(lam_all), t_sync=jnp.asarray(now, jnp.float32),
     )
 
 
@@ -100,7 +116,7 @@ def _shard_map():
 
 
 def make_fleet_step(mesh, m: int, policy: str = pol.PPOT_SQ2,
-                    axis_name: str = "sched"):
+                    axis_name: str = "sched", use_alias: bool = True):
     """Build the coordination-FREE fleet scheduling step over
     ``mesh[axis_name]``: ``fn(frontends, keys, nows) -> (workers[S, m],
     frontends')``. Every pytree leaf of ``frontends`` (and ``keys``,
@@ -108,11 +124,15 @@ def make_fleet_step(mesh, m: int, policy: str = pol.PPOT_SQ2,
     places its batch through the batched dispatch engine against its own
     stale view and clock (``nows[f]`` — frontends run on independent
     machines with independent arrival streams); NO collective runs here —
-    staleness accrues until the caller fires ``make_fleet_sync``'s fn."""
+    staleness accrues until the caller fires ``make_fleet_sync``'s fn.
+    With ``use_alias`` (default) the μ̂-proportional probes draw through
+    the shard's FROZEN alias table (rebuilt by the sync collective), so
+    the between-sync hot path does O(1) sampling work per probe."""
 
     def shard_fn(ff, k, now):
         f1 = jax.tree.map(lambda x: x[0], ff)
-        w, core = rs._schedule_impl(f1.core, k[0], now[0], m, policy)
+        tbl = frontend_shard_table(f1) if use_alias else None
+        w, core = rs._schedule_impl(f1.core, k[0], now[0], m, policy, tbl)
         f2 = f1.replace(core=core)
         return w[None], jax.tree.map(lambda x: x[None], f2)
 

@@ -21,6 +21,18 @@ Two generations live here:
     VPU tiles) is the default — sweep it on real hardware (ROADMAP: TPU
     timings).
 
+``ppot_dispatch_fused_alias`` (v3)
+    the v2 pipeline with the probe stage swapped for the amortized Walker
+    alias table (``core/dispatch.build_alias_table``): instead of the
+    dense [B_BLK, n] CDF comparisons, each candidate is a bin draw
+    ``i = ⌊u·n⌋`` plus two b_blk-tiled table gathers (prob + alias rows
+    fetched via the same one-hot MXU dots the queue gather uses) and a
+    compare. The table is built once per μ̂ refresh, so the per-block work
+    is O(B_BLK·n) one-hot dots only — the CDF reduce disappears. v2 stays
+    as the inverse-CDF parity oracle; the alias kernel's oracle is the
+    engine's jnp alias path on the same (u, v) stream (bit-identical,
+    tests/test_alias.py).
+
 HARDWARE ADAPTATION (DESIGN.md §2): a CPU scheduler does a per-job binary
 search over the CDF. On TPU, branchy binary search wastes the VPU; instead
 each grid step loads the whole worker state (CDF + queue lengths, n ≤ 2048
@@ -125,6 +137,89 @@ def ppot_dispatch(cdf, q, u1, u2, *, interpret: bool = False):
         interpret=interpret,
     )(cdf, q.astype(jnp.float32), u1, u2)
     return out[:B]
+
+
+def _alias_gather(table_f, iota, b):
+    """b_blk-tiled table-row gather: one-hot(b) · table (MXU dot).
+    ``table_f`` may carry trailing columns ([n] or [n, C]) — one one-hot
+    and one dot fetch every column at once."""
+    oh = (iota == b[:, None]).astype(jnp.float32)
+    return oh, jax.lax.dot_general(
+        oh, table_f, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _alias_probe(table2, iota, n, u, v):
+    """Alias draw for one candidate block: bin ⌊u·n⌋, keep/redirect.
+    ``table2`` f32[n, 2] stacks (prob, alias) so the draw costs ONE
+    one-hot + ONE MXU dot (both table rows fetched together)."""
+    b = jnp.minimum((u * n).astype(jnp.int32), n - 1)
+    _, pa = _alias_gather(table2, iota, b)
+    return jnp.where(v < pa[:, 0], b, pa[:, 1].astype(jnp.int32))
+
+
+def _fused_alias_kernel(B, b_blk, prob_ref, alias_ref, q_ref,
+                        u1_ref, v1_ref, u2_ref, v2_ref, w_ref, qa_ref):
+    """v3: alias-table probe + SQ(2) select + fold-back histogram."""
+    i = pl.program_id(0)
+    q = q_ref[...]  # i32[n]
+    n = q.shape[0]
+    qf = q.astype(jnp.float32)
+    table2 = jnp.stack(  # [n, 2]: thresholds | partners (ids exact in f32)
+        [prob_ref[...], alias_ref[...].astype(jnp.float32)], axis=1
+    )
+    iota = jax.lax.broadcasted_iota(jnp.int32, (b_blk, n), 1)
+    j1 = _alias_probe(table2, iota, n, u1_ref[...], v1_ref[...])
+    j2 = _alias_probe(table2, iota, n, u2_ref[...], v2_ref[...])
+    oh1, q1 = _alias_gather(qf, iota, j1)
+    oh2, q2 = _alias_gather(qf, iota, j2)
+    take1 = q1 <= q2
+    w_ref[...] = jnp.where(take1, j1, j2).astype(jnp.int32)
+
+    slot = i * b_blk + jax.lax.broadcasted_iota(jnp.int32, (b_blk, n), 0)
+    ohw = jnp.where(take1[:, None], oh1, oh2) * (slot < B).astype(jnp.float32)
+    counts = jnp.sum(ohw, axis=0).astype(jnp.int32)
+
+    @pl.when(i == 0)
+    def _():
+        qa_ref[...] = q
+
+    qa_ref[...] += counts
+
+
+@functools.partial(jax.jit, static_argnames=("b_blk", "interpret"))
+def ppot_dispatch_fused_alias(prob, alias, q, u1, v1, u2, v2, *,
+                              b_blk: int = B_BLK, interpret: bool = False):
+    """v3 fused contract: prob f32[n], alias i32[n], q i32[n],
+    u/v f32[B] → (workers i32[B], q_after i32[n]).
+
+    The alias-probe variant of ``ppot_dispatch_fused``: same grid, same
+    revisited-accumulator fold-back, but the probe stage is two amortized
+    table gathers per candidate instead of a dense CDF reduce.
+    Bit-identical to the engine's jnp alias path on the same uniforms.
+    """
+    B = u1.shape[0]
+    n = prob.shape[0]
+    pad = (-B) % b_blk
+    if pad:
+        u1, v1 = jnp.pad(u1, (0, pad)), jnp.pad(v1, (0, pad))
+        u2, v2 = jnp.pad(u2, (0, pad)), jnp.pad(v2, (0, pad))
+    grid = ((B + pad) // b_blk,)
+    rep = pl.BlockSpec((n,), lambda i: (0,))
+    blk = pl.BlockSpec((b_blk,), lambda i: (i,))
+    workers, q_after = pl.pallas_call(
+        functools.partial(_fused_alias_kernel, B, b_blk),
+        grid=grid,
+        in_specs=[rep, rep, rep, blk, blk, blk, blk],
+        out_specs=[blk, rep],  # q_after: revisited accumulator
+        out_shape=[
+            jax.ShapeDtypeStruct((B + pad,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), q.dtype),
+        ],
+        interpret=interpret,
+    )(prob, alias, q, u1, v1, u2, v2)
+    return workers[:B], q_after
 
 
 @functools.partial(jax.jit, static_argnames=("b_blk", "interpret"))

@@ -21,6 +21,20 @@ def make_cdf(mu_hat):
     return c / c[-1]
 
 
+def ppot_dispatch_alias_ref(prob, alias, q, u1, v1, u2, v2):
+    """Alias-probe oracle for the v3 fused kernel: prob f32[n], alias
+    i32[n], q i32[n], u/v f32[B] ∈ [0,1). Returns i32[B] chosen workers —
+    the same (u, v)-stream math as ``core.dispatch.alias_sample`` + SQ(2).
+    """
+    n = prob.shape[0]
+    b1 = jnp.minimum((u1 * n).astype(jnp.int32), n - 1)
+    b2 = jnp.minimum((u2 * n).astype(jnp.int32), n - 1)
+    j1 = jnp.where(v1 < prob[b1], b1, alias[b1]).astype(jnp.int32)
+    j2 = jnp.where(v2 < prob[b2], b2, alias[b2]).astype(jnp.int32)
+    take1 = q[j1] <= q[j2]
+    return jnp.where(take1, j1, j2)
+
+
 def ppot_dispatch_ref(cdf, q, u1, u2):
     """cdf f32[n] (inclusive, cdf[-1]==1), q i32[n], u1/u2 f32[B] ∈ [0,1).
     Returns i32[B] chosen workers."""

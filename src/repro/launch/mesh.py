@@ -7,7 +7,7 @@ jax (see dryrun.py); smoke tests and benches see the real single device.
 """
 from __future__ import annotations
 
-import jax
+from repro.utils.jax_compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -15,13 +15,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     Multi-pod: 2×16×16 = 512 chips (pod, data, model)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_test_mesh(shape=(2, 4), axes=("data", "model")):
     """Small virtual mesh for CI tests (requires host-device override)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)

@@ -31,17 +31,17 @@ from repro.optim import adamw
 
 
 def make_mesh_auto():
+    from repro.utils.jax_compat import make_mesh
+
     n = len(jax.devices())
     if n == 1:
-        return jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        return make_mesh((1, 1), ("data", "model"))
     model = 1
     for m in (8, 4, 2):
         if n % m == 0:
             model = m
             break
-    return jax.make_mesh((n // model, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((n // model, model), ("data", "model"))
 
 
 def main(argv=None):

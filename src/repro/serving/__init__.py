@@ -1,17 +1,21 @@
 from repro.serving.router import (
     FleetRouter,
     RosellaRouter,
+    SequentialPool,
     SimulatedPool,
     run_fleet_simulation,
     run_simulation,
     run_simulation_reference,
 )
+from repro.serving.scanloop import run_simulation_scan
 
 __all__ = [
     "FleetRouter",
     "RosellaRouter",
+    "SequentialPool",
     "SimulatedPool",
     "run_fleet_simulation",
     "run_simulation",
     "run_simulation_reference",
+    "run_simulation_scan",
 ]

@@ -45,6 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import dispatch as dsp
 from repro.core import estimator as est
 from repro.core import learner as lrn
 from repro.core import policies as pol
@@ -121,6 +122,27 @@ class SimulatedPool:
         self.speeds = np.asarray(speeds, float)
 
 
+class SequentialPool(SimulatedPool):
+    """``SimulatedPool`` whose batch submit is the literal per-request
+    recurrence ``start = max(arrival, free_at); done = start + cost/speed``
+    — scalar-op-for-scalar-op the same arithmetic as the scan-compiled
+    loop's in-carry replica chain, so exact-parity tests between
+    ``run_simulation`` and ``run_simulation_scan`` use this pool on the
+    host side (the closed-form cummax chain in ``submit_batch`` agrees
+    only to ~1e-12, which is parity-test noise, not bit-equality)."""
+
+    def submit_batch(self, replicas, arrivals, costs):
+        replicas = np.asarray(replicas, np.int64)
+        starts = np.empty(len(replicas))
+        dones = np.empty(len(replicas))
+        for i, (r, a, c) in enumerate(zip(replicas, arrivals, costs)):
+            start = max(a, self.free_at[r])
+            done = start + c / self.speeds[r]
+            self.free_at[r] = done
+            starts[i], dones[i] = start, done
+        return starts, dones
+
+
 #: Fixed completion capacity of the fused serving turn — one padded shape
 #: ⇒ ONE compiled program for the whole serving loop (overflow folds
 #: through ``complete_arrays`` first, which is numerically identical).
@@ -152,7 +174,7 @@ class RosellaRouter:
 
     def __init__(self, n_replicas: int, mu_bar: float, *, policy: str = pol.PPOT_SQ2,
                  c0: float = 0.1, c_window: float = 10.0, seed: int = 0,
-                 async_mu: bool = True):
+                 async_mu: bool = True, use_alias: bool = True):
         self.n = n_replicas
         self.policy = policy
         # async_mu=True (production): routing adopts a refreshed μ̂ only once
@@ -161,11 +183,20 @@ class RosellaRouter:
         # routing always uses the latest μ̂ (PR-1 blocking semantics) —
         # bit-deterministic, used by parity tests.
         self.async_mu = async_mu
+        # use_alias=True (production): μ̂-proportional probes draw through a
+        # Walker alias table amortized across the μ̂ refresh interval —
+        # rebuilt ONLY when the front buffer flips, O(1) per draw.
+        # use_alias=False forces the per-call inverse-CDF path (the PR-2
+        # RNG stream — exact-parity mode for tests/benchmarks).
+        self.use_alias = use_alias and policy in dsp.ALIAS_POLICIES
         self.lcfg = lrn.default_learner_config(mu_bar, c0=c0, c_window=c_window)
         self.q_view = jnp.zeros((n_replicas,), jnp.int32)
         self.arr = est.init_ema_arrival()
         self.learner = lrn.init_learner(n_replicas, self.lcfg, 1.0)
         self.mu_front = self.learner.mu_hat  # materialized routing snapshot
+        self.table_front = (
+            dsp.build_alias_table(self.mu_front) if self.use_alias else None
+        )
         self._mu_pending: jax.Array | None = None  # in-flight refreshed μ̂
         self.last_fake_time = 0.0  # host-side: scalars ride jit args as-is
         self.key = jax.random.PRNGKey(seed)
@@ -176,19 +207,23 @@ class RosellaRouter:
 
     def _flip_mu(self):
         """Adopt the refreshed μ̂ iff its async computation already landed
-        (or unconditionally in deterministic async_mu=False mode)."""
+        (or unconditionally in deterministic async_mu=False mode). A flip
+        is the ONLY event that rebuilds the alias table — the amortization
+        boundary of the O(1) probe draw."""
         if self._mu_pending is not None and (
             not self.async_mu or self._mu_pending.is_ready()
         ):
             self.mu_front = self._mu_pending
             self._mu_pending = None
+            if self.use_alias:
+                self.table_front = dsp.build_alias_table(self.mu_front)
 
     def route(self, now: float, k: int = 1) -> np.ndarray:
         """Route a batch of k requests in one dispatch-engine call."""
         self._flip_mu()
         workers, self.q_view, self.arr = rs.route_view(
             self.q_view, self.arr, self.mu_front, self._next_key(),
-            float(now), k, self.policy,
+            float(now), k, self.policy, self.table_front,
         )
         return np.asarray(workers)
 
@@ -223,6 +258,7 @@ class RosellaRouter:
                 (float(now), self.last_fake_time,
                  float(comp_now) if comp_now is not None else float(now)),
                 k, self.policy, 8, not self.async_mu,
+                self.table_front, self.use_alias,
             )
         )
         self.last_fake_time = float(now)
@@ -342,16 +378,17 @@ class FleetRouter:
     def __init__(self, n_frontends: int, n_replicas: int, mu_bar: float, *,
                  policy: str = pol.PPOT_SQ2, c0: float = 0.1,
                  c_window: float = 10.0, seed: int = 0, async_mu: bool = True,
-                 herd_correction: bool = False):
+                 herd_correction: bool = False, use_alias: bool = True):
         self.S = n_frontends
         self.n = n_replicas
         self.herd_correction = herd_correction
         # frontend 0 inherits the base seed verbatim so the S=1 fleet is
-        # stream-identical to a single RosellaRouter
+        # stream-identical to a single RosellaRouter (use_alias included:
+        # False forces every frontend onto the inverse-CDF stream)
         self.frontends = [
             RosellaRouter(n_replicas, mu_bar, policy=policy, c0=c0,
                           c_window=c_window, seed=seed + 7919 * f,
-                          async_mu=async_mu)
+                          async_mu=async_mu, use_alias=use_alias)
             for f in range(n_frontends)
         ]
         self._snap = np.zeros((n_replicas,), np.int64)  # agreed view @ last sync
@@ -394,9 +431,17 @@ class FleetRouter:
         mus = np.stack([np.asarray(fr.learner.mu_hat) for fr in self.frontends])
         mu_merged = lrn.sync_estimates(jnp.asarray(mus))  # paper-§5 merge
         lam_f = np.array([float(est.lam_hat_ema(fr.arr)) for fr in self.frontends])
+        # ONE table rebuild per sync, shared by every frontend — the fleet
+        # form of "rebuild only on μ̂ front-buffer flip" (a sync IS the flip)
+        table_merged = (
+            dsp.build_alias_table(mu_merged)
+            if any(fr.use_alias for fr in self.frontends) else None
+        )
         for fr in self.frontends:
             fr.q_view = jnp.array(shared)  # per-frontend buffer (donated later)
             fr.mu_front = mu_merged
+            if fr.use_alias:
+                fr.table_front = table_merged
             fr._mu_pending = None
         self._snap = global_q
         self.lam_global = float(lam_f.sum())

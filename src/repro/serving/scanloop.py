@@ -1,0 +1,284 @@
+"""Scan-compiled closed-loop serving simulation — the whole run is ONE
+compiled program.
+
+``run_simulation`` (serving/router.py) already moves each arrival batch as
+arrays, but the LOOP is still Python: every turn pays a host→device
+dispatch of ``serve_step``, a host-side pending-completion bookkeeping
+pass, and a device→host μ̂ sample. This module compiles the entire
+Fig-8/Fig-11 run into a single ``lax.scan`` whose carry holds everything
+the host loop kept in Python state, with fixed capacities:
+
+  * the router state (queue view, learner sample rings, arrival EMA, PRNG
+    key, fake-job clock) — the ``serve_step`` carry,
+  * the in-flight completion set (``pend_cap`` slots: done/start times,
+    replica, insertion sequence, validity) replacing the host's growing
+    numpy arrays; each turn flushes the ≤ ``SERVE_COMP_CAP`` oldest due
+    completions in (done-time, insertion) order — exactly the host's
+    stable sort,
+  * the replica pool (``free_at`` per replica): the per-turn submission
+    chain runs as an inner scan replicating ``SimulatedPool.submit``'s
+    recurrence ``start = max(arrival, free_at); done = start + cost/μ``
+    scalar-op-for-scalar-op (pair with ``SequentialPool`` on the host
+    side for exact-parity tests).
+
+The numpy side of the workload (arrival gaps, request costs, the speed
+schedule) is pre-drawn on the host with the SAME ``RandomState`` call
+sequence as ``run_simulation``, so both loops see identical workloads; the
+jax key stream is consumed by the shared ``scheduler._serve_step_math``,
+so routing decisions are bit-identical to a ``RosellaRouter`` in its
+deterministic ``async_mu=False`` mode. Event times ride the carry in
+f64 (the loop traces under a scoped ``enable_x64`` context — every
+scheduler-side array is explicitly f32/i32, so the f32 math is unchanged)
+and only cross to f32 at the same points the host loop crosses the jit
+boundary.
+
+Parity contract (tests/test_scanloop.py):
+  * ``use_alias=False`` + ``SequentialPool`` host loop → EXACT: the
+    response arrays are equal float-for-float (inverse-CDF RNG stream);
+  * ``use_alias=True`` (the production alias stream) → statistical: p50/
+    p99 response times agree within a few % (different probe draws, same
+    distribution).
+
+Capacity overflows (a turn with more due completions than the flush cap,
+or more in-flight work than ``pend_cap``) are counted and returned in
+``info`` — they void exactness (the host loop pre-folds overflow instead),
+so parity tests assert both counters are zero.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import learner as lrn
+from repro.core import scheduler as rs
+from repro.serving import router as rt
+
+#: In-flight completion capacity of the scan carry. Bounded by the total
+#: outstanding work the workload can accumulate; overflows are counted in
+#: ``info["pend_overflow"]`` (excess submissions are dropped — never
+#: silently: parity tests require the counter to be 0). 1024 clears the
+#: Fig-8/Fig-11 workloads with ~2× headroom; the per-turn flush sort is
+#: O(pend_cap log pend_cap), so oversizing it costs real wall-clock
+#: (4096 roughly triples the per-turn cost at these shapes).
+PEND_CAP = 1024
+
+
+def _precompute_workload(arrival_rate, horizon, request_cost, speed_schedule,
+                         seed, arrival_batch, speeds0):
+    """Replay ``run_simulation``'s numpy RandomState call sequence up
+    front: per turn, arrival gaps then request costs — identical draws,
+    identical workload."""
+    rng = np.random.RandomState(seed)
+    t = 0.0
+    sched_i = 0
+    speeds = np.asarray(speeds0, float).copy()
+    times_l, costs_l, speeds_l = [], [], []
+    while t < horizon:
+        gaps = rng.exponential(1.0 / arrival_rate, size=arrival_batch)
+        times = t + np.cumsum(gaps)
+        t = float(times[-1])
+        if speed_schedule is not None:
+            while sched_i < len(speed_schedule) and speed_schedule[sched_i][0] <= t:
+                speeds = np.asarray(speed_schedule[sched_i][1], float).copy()
+                sched_i += 1
+        times_l.append(times)
+        costs_l.append(request_cost * rng.exponential(1.0, size=arrival_batch))
+        speeds_l.append(speeds.copy())
+    if not times_l:
+        return None
+    return (np.stack(times_l), np.stack(costs_l), np.stack(speeds_l))
+
+
+@functools.lru_cache(maxsize=8)
+def _build_scan(n, k, comp_cap, pend_cap, policy, max_fake, use_alias,
+                fake_cost):
+    """Compile-once factory for the whole-run scan program (cached on the
+    static shape/config tuple; the scan length T is carried by the xs
+    shapes, so a new horizon recompiles — one compile per workload shape;
+    the learner config rides as a jit pytree arg, not a baked closure)."""
+
+    def body(lcfg, carry, xs):
+        (q_view, learner, arr, key, last_fake, free_at,
+         p_done, p_start, p_rep, p_seq, p_valid, seq_ctr,
+         over_flush, over_pend) = carry
+        times64, costs64, speeds64 = xs
+        t64 = times64[-1]
+        t32 = t64.astype(jnp.float32)
+
+        # -- flush due completions, oldest done first (stable by insertion,
+        #    the host loop's np.argsort(..., kind="stable") semantics)
+        due = p_valid & (p_done <= t64)
+        n_due = jnp.sum(due)
+        keydone = jnp.where(due, p_done, jnp.inf)
+        order = jnp.lexsort((p_seq, keydone))
+        sel = order[:comp_cap]
+        rank_ok = jnp.arange(comp_cap) < n_due
+        comp_w = jnp.where(rank_ok, p_rep[sel], -1).astype(jnp.int32)
+        comp_t = jnp.where(
+            rank_ok, (p_done[sel] - p_start[sel]).astype(jnp.float32), 0.0
+        ).astype(jnp.float32)
+        comp_now64 = jnp.max(jnp.where(rank_ok, p_done[sel], -jnp.inf))
+        comp_now32 = jnp.where(n_due > 0, comp_now64, t64).astype(jnp.float32)
+        flushed = jnp.zeros_like(p_valid).at[sel].set(rank_ok)
+        p_valid = p_valid & ~flushed
+        over_flush = over_flush + jnp.maximum(n_due - comp_cap, 0).astype(jnp.int32)
+
+        # -- μ̂ trace sample: the front buffer entering this turn (the value
+        #    run_simulation appends — learner μ̂ as of the last flush)
+        mu_tr = learner.mu_hat
+
+        # -- the serving turn: same traced math as scheduler.serve_step in
+        #    use_fresh_mu mode (async_mu=False), same key consumption
+        fake_js, workers, q_view, learner, arr, key = rs._serve_step_math(
+            q_view, learner, arr, learner.mu_hat, lcfg, key,
+            comp_w, comp_t, (t32, last_fake, comp_now32),
+            k, policy, max_fake, True, None, use_alias,
+        )
+        last_fake = t32
+
+        # -- replica-pool chain, fakes then reals (the host's two
+        #    submit_batch calls), as the exact sequential recurrence
+        act = jnp.concatenate([fake_js >= 0, jnp.ones((k,), bool)])
+        sub_w = jnp.concatenate([jnp.maximum(fake_js, 0), workers])
+        sub_arr = jnp.concatenate([jnp.full((max_fake,), t64), times64])
+        sub_cost = jnp.concatenate(
+            [jnp.full((max_fake,), fake_cost), costs64]
+        )
+
+        def pstep(fa, x):
+            w, a, c, ac = x
+            start = jnp.maximum(a, fa[w])
+            done = start + c / speeds64[w]
+            fa = jnp.where(ac, fa.at[w].set(done), fa)
+            return fa, (start, done)
+
+        free_at, (sub_start, sub_done) = jax.lax.scan(
+            pstep, free_at, (sub_w, sub_arr, sub_cost, act)
+        )
+        resp = sub_done[max_fake:] - times64  # f64[k]
+
+        # -- append the new in-flight work: compact survivors to the front
+        #    (insertion order), then write fakes-then-reals behind them
+        pkey = jnp.where(p_valid, p_seq, jnp.iinfo(jnp.int32).max)
+        perm = jnp.argsort(pkey)
+        p_done, p_start, p_rep, p_seq, p_valid = (
+            p_done[perm], p_start[perm], p_rep[perm], p_seq[perm], p_valid[perm]
+        )
+        nv = jnp.sum(p_valid)
+        pos = jnp.cumsum(act.astype(jnp.int32)) - 1
+        slot = jnp.where(act, nv + pos, pend_cap)  # inactive fakes drop
+        p_done = p_done.at[slot].set(sub_done, mode="drop")
+        p_start = p_start.at[slot].set(sub_start, mode="drop")
+        p_rep = p_rep.at[slot].set(sub_w.astype(jnp.int32), mode="drop")
+        p_seq = p_seq.at[slot].set(seq_ctr + pos, mode="drop")
+        p_valid = p_valid.at[slot].set(True, mode="drop")
+        over_pend = over_pend + jnp.sum(act & (slot >= pend_cap)).astype(jnp.int32)
+        seq_ctr = seq_ctr + jnp.sum(act).astype(jnp.int32)
+
+        carry = (q_view, learner, arr, key, last_fake, free_at,
+                 p_done, p_start, p_rep, p_seq, p_valid, seq_ctr,
+                 over_flush, over_pend)
+        return carry, (resp, mu_tr)
+
+    @jax.jit
+    def run(lcfg, carry0, xs):
+        return jax.lax.scan(functools.partial(body, lcfg), carry0, xs)
+
+    return run
+
+
+def run_simulation_scan(
+    router: rt.RosellaRouter,
+    pool: rt.SimulatedPool,
+    *,
+    arrival_rate: float,
+    horizon: float,
+    request_cost: float = 1.0,
+    speed_schedule: "list[tuple[float, np.ndarray]] | None" = None,
+    seed: int = 0,
+    arrival_batch: int = 1,
+    pend_cap: int = PEND_CAP,
+):
+    """Drop-in for ``run_simulation`` with the whole loop scan-compiled.
+
+    ``router`` supplies the initial state and configuration (policy,
+    learner config, key, ``use_alias``) and ``pool`` the replica speeds —
+    both are advanced to their final states on return, like the host loop.
+    Semantics are the router's deterministic ``async_mu=False`` mode (the
+    scan cannot observe host-timing-dependent μ̂ flips; pass an
+    ``async_mu=False`` router when comparing streams).
+
+    Returns ``(response_times, mu_trace, info)``; ``info`` carries the
+    overflow counters (both 0 ⇒ the fixed capacities were faithful to the
+    host loop) and the turn count.
+    """
+    wl = _precompute_workload(
+        arrival_rate, horizon, request_cost, speed_schedule, seed,
+        arrival_batch, pool.speeds,
+    )
+    if wl is None:
+        return np.empty(0), np.zeros((0, router.n)), {
+            "turns": 0, "flush_overflow": 0, "pend_overflow": 0}
+    times_np, costs_np, speeds_np = wl
+    T, k = times_np.shape
+    n = router.n
+
+    from jax.experimental import enable_x64
+
+    with enable_x64():
+        xs = (
+            jnp.asarray(times_np, jnp.float64),
+            jnp.asarray(costs_np, jnp.float64),
+            jnp.asarray(speeds_np, jnp.float64),
+        )
+        carry0 = (
+            jnp.asarray(router.q_view),
+            router.learner,
+            router.arr,
+            jnp.asarray(router.key),
+            jnp.float32(router.last_fake_time),
+            jnp.asarray(pool.free_at, jnp.float64),
+            jnp.full((pend_cap,), jnp.inf, jnp.float64),  # p_done
+            jnp.zeros((pend_cap,), jnp.float64),  # p_start
+            jnp.zeros((pend_cap,), jnp.int32),  # p_rep
+            jnp.zeros((pend_cap,), jnp.int32),  # p_seq
+            jnp.zeros((pend_cap,), bool),  # p_valid
+            jnp.int32(0),  # seq_ctr
+            jnp.int32(0),  # over_flush
+            jnp.int32(0),  # over_pend
+        )
+        run = _build_scan(
+            # the flush batch can never exceed the pending buffer; the
+            # SERVE_COMP_CAP shape keeps the learner fold identical to the
+            # host loop's serve_step padding at the default capacities
+            n, k, min(rt.SERVE_COMP_CAP, pend_cap), pend_cap,
+            router.policy, 8, router.use_alias, request_cost * 0.25,
+        )
+        carry, (resp, mu_trace) = run(router.lcfg, carry0, xs)
+        resp = np.asarray(resp).reshape(-1)
+        mu_trace = np.asarray(mu_trace)
+        info = {
+            "turns": T,
+            "flush_overflow": int(carry[-2]),
+            "pend_overflow": int(carry[-1]),
+        }
+        # advance the host-side objects to the final state, as the host
+        # loop would have left them
+        router.q_view = jnp.asarray(np.asarray(carry[0]))
+        router.learner = jax.tree.map(
+            lambda x: jnp.asarray(np.asarray(x)), carry[1]
+        )
+        router.arr = jax.tree.map(lambda x: jnp.asarray(np.asarray(x)), carry[2])
+        router.key = jnp.asarray(np.asarray(carry[3]))
+        router.last_fake_time = float(carry[4])
+        router.mu_front = router.learner.mu_hat
+        router._mu_pending = None
+        pool.free_at = np.asarray(carry[5])
+    if router.use_alias:
+        import repro.core.dispatch as dsp
+
+        router.table_front = dsp.build_alias_table(router.mu_front)
+    return resp, mu_trace, info

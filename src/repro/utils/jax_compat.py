@@ -7,11 +7,28 @@ path through ``models/lm.backbone`` (the continuous-batching engine vmaps
 the single-sequence decode over slots). The barrier is semantically the
 identity — only an XLA scheduling fence — so batching it is the identity
 on the batched operands with unchanged batch dims.
+
+``make_mesh``: ``jax.make_mesh(..., axis_types=(jax.sharding.AxisType
+.Auto, ...))`` only exists on jax ≥ 0.5 — on the pinned 0.4.x neither the
+kwarg nor the ``AxisType`` enum is there, and every call site that spelled
+it out raised ``AttributeError`` before the mesh was even built. All mesh
+construction goes through this shim: on new jax it forwards explicit Auto
+axis types (the semantics every caller wants), on old jax it calls plain
+``jax.make_mesh`` (whose axes are Auto by definition — there is no other
+kind).
 """
 from __future__ import annotations
 
 import jax
 from jax.interpreters import batching
+
+
+def make_mesh(axis_shapes, axis_names, **kwargs):
+    """Version-portable ``jax.make_mesh`` with Auto axis types."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None and "axis_types" not in kwargs:
+        kwargs["axis_types"] = (axis_type.Auto,) * len(axis_names)
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)
 
 
 def _optimization_barrier_prim():
@@ -34,4 +51,34 @@ def register_optimization_barrier_batching() -> None:
     batching.primitive_batchers[prim] = _batch
 
 
+def register_optimization_barrier_ad() -> None:
+    """jax 0.4.x also ships no differentiation rule for the barrier
+    ("Differentiation rule for 'optimization_barrier' not implemented"),
+    which broke every train-step grad through ``models/lm.backbone``'s
+    scan fence. The barrier is the identity on values, so its JVP pushes
+    the tangents through another barrier (keeping the fence on the
+    forward AND tangent computations) and its transpose is the identity
+    on cotangents."""
+    from jax.interpreters import ad
+
+    prim = _optimization_barrier_prim()
+    if prim in ad.primitive_jvps:
+        return
+
+    def _jvp(primals, tangents):
+        out = prim.bind(*primals)
+        tans = [
+            ad.instantiate_zeros(t) if isinstance(t, ad.Zero) else t
+            for t in tangents
+        ]
+        return out, prim.bind(*tans)
+
+    def _transpose(cts, *primals):
+        return tuple(cts)
+
+    ad.primitive_jvps[prim] = _jvp
+    ad.primitive_transposes[prim] = _transpose
+
+
 register_optimization_barrier_batching()
+register_optimization_barrier_ad()

@@ -1,0 +1,205 @@
+"""Walker alias-table sampler (core/dispatch): construction correctness,
+statistical parity with the inverse-CDF engine, engine/kernel agreement,
+and the amortization seams (router front-buffer flip, fleet frozen views).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dispatch as dsp
+from repro.core import policies as pol
+from repro.kernels.ppot_dispatch import ref as pd_ref
+
+CFG = pol.default_policy_config()
+
+
+def _mass(table: dsp.AliasTable) -> np.ndarray:
+    """Total probability the table assigns to each worker (analytic)."""
+    prob, alias = np.asarray(table.prob), np.asarray(table.alias)
+    n = len(prob)
+    mass = prob.copy()
+    for i in range(n):
+        mass[alias[i]] += 1.0 - prob[i]
+    return mass / n
+
+
+@pytest.mark.parametrize("n,seed", [(8, 0), (64, 1), (7, 2), (256, 3)])
+def test_alias_table_mass_reconstruction(n, seed):
+    """The table is an EXACT decomposition of the target distribution:
+    per-worker mass (own prob + incoming alias mass) / n == μ̂ / Σμ̂."""
+    mu = np.abs(np.random.RandomState(seed).randn(n)) + 1e-3
+    table = dsp.build_alias_table(jnp.asarray(mu, jnp.float32))
+    np.testing.assert_allclose(_mass(table), mu / mu.sum(), atol=1e-5)
+
+
+def test_alias_table_degenerate_cases():
+    """Uniform → every bin keeps itself (prob ≡ 1); single-hot → all mass
+    routes to the hot worker exactly (no draw can land elsewhere);
+    two-point and all-zero (dead-cluster uniform guard) are exact."""
+    # uniform: prob == 1 everywhere, sampling is ⌊u·n⌋
+    t = dsp.build_alias_table(jnp.ones((8,), jnp.float32))
+    np.testing.assert_allclose(np.asarray(t.prob), 1.0, atol=1e-6)
+    # single-hot: every cold bin aliases to the hot one with prob 0
+    t = dsp.build_alias_table(jnp.asarray([0.0, 0.0, 4.0, 0.0], jnp.float32))
+    u = jnp.linspace(0.0, 0.999, 37)
+    v = jnp.linspace(0.0, 0.999, 37)
+    js = dsp.alias_sample(t, u, v)
+    assert (np.asarray(js) == 2).all()
+    # two-point 3:1 split — exact masses
+    t = dsp.build_alias_table(jnp.asarray([3.0, 1.0], jnp.float32))
+    np.testing.assert_allclose(_mass(t), [0.75, 0.25], atol=1e-7)
+    # all-zero μ̂ degenerates to uniform (same guard as make_cdf)
+    t = dsp.build_alias_table(jnp.zeros((4,), jnp.float32))
+    np.testing.assert_allclose(_mass(t), 0.25, atol=1e-7)
+
+
+@pytest.mark.parametrize("n", [8, 64, 256])
+def test_alias_statistical_parity_vs_inverse_cdf(n):
+    """Per-worker selection frequencies of the alias sampler match both
+    the analytic distribution and the inverse-CDF engine (TV-distance
+    bound ~3·sqrt(n/B) — a few σ of multinomial noise)."""
+    B = 1 << 17
+    mu = jnp.asarray(
+        np.abs(np.random.RandomState(n).randn(n)) + 0.05, jnp.float32
+    )
+    table = dsp.build_alias_table(mu)
+    key = jax.random.PRNGKey(0)
+    u1, _, v1, _ = dsp._uniform_quad(key, B)
+    j_alias = dsp.alias_sample(table, u1, v1)
+    j_icdf = dsp.inverse_cdf_sample(pd_ref.make_cdf(mu), u1)
+    p = np.asarray(mu / mu.sum())
+    f_alias = np.bincount(np.asarray(j_alias), minlength=n) / B
+    f_icdf = np.bincount(np.asarray(j_icdf), minlength=n) / B
+    bound = 3.0 * np.sqrt(n / B)
+    assert 0.5 * np.abs(f_alias - p).sum() < bound
+    assert 0.5 * np.abs(f_alias - f_icdf).sum() < 2 * bound
+
+
+def test_engine_alias_draws_match_manual_sampling():
+    """dispatch(table=...) consumes exactly the (u, v) quad stream:
+    workers equal the hand-rolled alias draws + SQ(2) select."""
+    n, B = 16, 64
+    key = jax.random.PRNGKey(3)
+    mu = jax.random.uniform(key, (n,)) * 4 + 0.1
+    q = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, 6)
+    table = dsp.build_alias_table(mu)
+    res = dsp.dispatch(pol.PPOT_SQ2, key, q, mu, mu, CFG, B,
+                       use_kernel=False, table=table)
+    u1, u2, v1, v2 = dsp._uniform_quad(key, B)
+    j1 = dsp.alias_sample(table, u1, v1)
+    j2 = dsp.alias_sample(table, u2, v2)
+    want = jnp.where(q[j1] <= q[j2], j1, j2)
+    np.testing.assert_array_equal(np.asarray(res.workers), np.asarray(want))
+    # fold-back accounting unchanged
+    assert int(res.q_after.sum() - q.sum()) == B
+
+
+def test_engine_alias_parity_q_independent():
+    """PSS (queue-independent) with a table: batched == sequential oracle
+    bitwise — the alias stream is engine-path-invariant like the CDF one."""
+    n = 8
+    key = jax.random.PRNGKey(0)
+    mu = jax.random.uniform(key, (n,)) * 4 + 0.1
+    q = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, 6)
+    table = dsp.build_alias_table(mu)
+    for B in (1, 7, 64):
+        rb = dsp.dispatch(pol.PSS, key, q, mu, mu, CFG, B, table=table)
+        rs_ = dsp.dispatch_sequential(pol.PSS, key, q, mu, mu, CFG, B,
+                                      table=table)
+        np.testing.assert_array_equal(np.asarray(rb.workers),
+                                      np.asarray(rs_.workers))
+
+
+@pytest.mark.parametrize("policy", [pol.PPOT_SQ2, pol.PPOT_LL2, pol.BANDIT])
+def test_alias_placement_distribution_matches_inverse_cdf(policy):
+    """Queue-dependent policies: per-worker PLACEMENT histograms under the
+    alias stream match the inverse-CDF stream (loose L1, as the batched-
+    vs-sequential distributional test does)."""
+    n, B, T = 8, 8, 300
+    mu = jnp.array([1.0, 1.0, 2.0, 4.0, 1.0, 2.0, 1.0, 1.0])
+    table = dsp.build_alias_table(mu)
+    rng = np.random.RandomState(0)
+    ca = np.zeros(n)
+    ci = np.zeros(n)
+    for t in range(T):
+        q = jnp.asarray(rng.randint(0, 6, size=n), jnp.int32)
+        k = jax.random.PRNGKey(t)
+        ca += np.bincount(
+            np.asarray(dsp.dispatch(policy, k, q, mu, mu, CFG, B,
+                                    table=table).workers), minlength=n)
+        ci += np.bincount(
+            np.asarray(dsp.dispatch(policy, k, q, mu, mu, CFG, B).workers),
+            minlength=n)
+    l1 = float(np.abs(ca / ca.sum() - ci / ci.sum()).sum())
+    assert l1 < 0.15, (policy, l1)
+
+
+@pytest.mark.parametrize("n,B", [(8, 64), (64, 512), (13, 100)])
+def test_fused_alias_kernel_matches_jnp(n, B):
+    """v3 fused kernel (interpret) == engine jnp alias path, bit-for-bit,
+    including q_after; and == the standalone alias ref."""
+    key = jax.random.PRNGKey(n + B)
+    mu = jax.random.uniform(key, (n,)) * 4 + 0.1
+    q = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, 6)
+    table = dsp.build_alias_table(mu)
+    rk = dsp.dispatch(pol.PPOT_SQ2, key, q, mu, mu, CFG, B,
+                      use_kernel=True, interpret=True, table=table)
+    rj = dsp.dispatch(pol.PPOT_SQ2, key, q, mu, mu, CFG, B,
+                      use_kernel=False, table=table)
+    np.testing.assert_array_equal(np.asarray(rk.workers), np.asarray(rj.workers))
+    np.testing.assert_array_equal(np.asarray(rk.q_after), np.asarray(rj.q_after))
+    u1, u2, v1, v2 = dsp._uniform_quad(key, B)
+    ref = pd_ref.ppot_dispatch_alias_ref(table.prob, table.alias, q,
+                                         u1, v1, u2, v2)
+    np.testing.assert_array_equal(np.asarray(rk.workers), np.asarray(ref))
+
+
+def test_router_table_rebuilds_only_on_flip():
+    """Double-buffered router: the alias table is rebuilt exactly when the
+    μ̂ front buffer flips (the amortization boundary), and always matches
+    build_alias_table(mu_front)."""
+    from repro.serving import RosellaRouter
+
+    r = RosellaRouter(4, mu_bar=4.0, seed=0, async_mu=False, use_alias=True)
+    t0 = r.table_front
+    np.testing.assert_array_equal(
+        np.asarray(t0.prob),
+        np.asarray(dsp.build_alias_table(r.mu_front).prob),
+    )
+    # turns without a completion flush never touch the table
+    r.serve_turn(1.0, 4)
+    assert r.table_front is t0
+    # a flush refreshes μ̂ → the NEXT turn flips the buffer and rebuilds
+    r.serve_turn(2.0, 4, comp_workers=np.array([0, 1, 2, 3]),
+                 comp_times=np.array([0.5, 0.4, 0.3, 0.2]), comp_now=2.0)
+    assert r.table_front is t0  # flip happens at the next turn boundary
+    r.serve_turn(3.0, 4)
+    assert r.table_front is not t0
+    np.testing.assert_array_equal(
+        np.asarray(r.table_front.prob),
+        np.asarray(dsp.build_alias_table(r.mu_front).prob),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(r.table_front.alias),
+        np.asarray(dsp.build_alias_table(r.mu_front).alias),
+    )
+
+
+def test_fleet_frozen_view_table_rebuilt_at_sync():
+    """The fleet's frozen μ̂ views carry their alias table: built at init,
+    rebuilt (for every frontend) only by a sync."""
+    from repro.fleet import state as flt
+    from repro.fleet import sync as fsync
+
+    S, n = 3, 6
+    fleet = flt.init_fleet_sim(S, n, jnp.ones((n,), jnp.float32))
+    mu_new = jnp.asarray([0.5, 1.0, 2.0, 4.0, 1.0, 0.25], jnp.float32)
+    want = dsp.build_alias_table(mu_new)
+    fleet2 = fsync.sync_sim_views(
+        fleet, jnp.zeros((n,), jnp.int32), mu_new, jnp.float32(1.0)
+    )
+    for f in range(S):
+        tbl = flt.frontend_table(fleet2, jnp.int32(f))
+        np.testing.assert_array_equal(np.asarray(tbl.prob), np.asarray(want.prob))
+        np.testing.assert_array_equal(np.asarray(tbl.alias), np.asarray(want.alias))

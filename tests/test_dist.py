@@ -42,8 +42,8 @@ cfg = ModelConfig(arch='t', family='dense', n_layers=2, d_model=32, n_heads=4,
                   n_kv_heads=2, d_head=8, d_ff=64, vocab=64,
                   dtype='float32', param_dtype='float32', remat='full',
                   attn_chunk=32, loss_chunk=32)
-mesh = jax.make_mesh((2, 2), ('data', 'model'),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.utils.jax_compat import make_mesh
+mesh = make_mesh((2, 2), ('data', 'model'))
 ctx = SH.make_ctx(mesh)
 params = api.init_params(cfg, jax.random.PRNGKey(0))
 opt = adamw.init(params)
@@ -93,8 +93,8 @@ cfg = ModelConfig(arch='t', family='dense', n_layers=2, d_model=32, n_heads=2,
                   n_kv_heads=2, d_head=16, d_ff=64, vocab=64,
                   dtype='float32', param_dtype='float32', remat='none',
                   attn_chunk=32, loss_chunk=32)
-mesh = jax.make_mesh((8, 1), ('data', 'model'),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.utils.jax_compat import make_mesh
+mesh = make_mesh((8, 1), ('data', 'model'))
 ctx = SH.make_ctx(mesh)
 params = api.init_params(cfg, jax.random.PRNGKey(0))
 B, S = 8, 32
@@ -126,8 +126,8 @@ import json
 import jax, jax.numpy as jnp, numpy as np
 from repro.dist.pipeline import pipeline_apply
 
-# plain make_mesh: jax.sharding.AxisType only exists on newer jax
-mesh = jax.make_mesh((4,), ('pipe',))
+from repro.utils.jax_compat import make_mesh  # AxisType-portable
+mesh = make_mesh((4,), ('pipe',))
 n_stages, n_micro, mb, d = 4, 8, 2, 16
 key = jax.random.PRNGKey(0)
 Ws = jax.random.normal(key, (n_stages, d, d)) * 0.3

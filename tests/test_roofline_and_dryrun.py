@@ -35,10 +35,12 @@ def test_analytic_flops_vs_hlo_unrolled():
     batch = {"tokens": jnp.zeros((B, S), jnp.int32),
              "labels": jnp.zeros((B, S), jnp.int32),
              "mask": jnp.ones((B, S))}
-    hlo_flops = (
+    ca = (
         jax.jit(lambda p: api.loss_fn(cfg, p, batch)[0])
-        .lower(params).compile().cost_analysis()["flops"]
+        .lower(params).compile().cost_analysis()
     )
+    # jax 0.4.x returns a per-device-program LIST of dicts, newer a dict
+    hlo_flops = (ca[0] if isinstance(ca, (list, tuple)) else ca)["flops"]
     analytic = (
         sum(n * _layer_fwd_flops(cfg, S / 2, k) for k, n in _kinds(cfg))
         + 2 * cfg.d_model * cfg.vocab
