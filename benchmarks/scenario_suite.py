@@ -1,0 +1,206 @@
+"""Scenario suite — the environment engine's benchmark: every registered
+scenario × policy panel, recording response percentiles (p50/p99) AND the
+adaptation-time metric (time from each environment shift until μ̂'s
+relative error re-enters its pre-shift band — the repo's first
+quantitative measurement of the paper's "adapts to environment changes
+quickly" claim).
+
+Per scenario the suite also records the engine's correctness anchors:
+
+  * ``null_bit_exact`` — the null scenario (homogeneous Poisson, static
+    speeds, no churn) is replayed against a direct ``run_simulation``
+    call and must match bit-for-bit;
+  * ``scan_parity_exact`` — the host loop vs. the one-program scan
+    (``run_workload_scan``) on a ``SequentialPool``, float-for-float, for
+    every scan-supported scenario.
+
+Writes BENCH_scenarios.json (committed). ``--smoke`` runs the reduced
+shapes and writes BENCH_scenarios_smoke.json (gitignored) for the
+non-gating CI perf smoke, which compares against the ``smoke_reference``
+section of the committed file and warns beyond a 20% throughput drop.
+
+Run:  PYTHONPATH=src:. python benchmarks/scenario_suite.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro import env
+from repro.core import metrics as M
+from repro.core import policies as pol
+from repro.serving import RosellaRouter, SequentialPool, SimulatedPool, run_simulation
+
+POLICIES = [
+    ("rosella", pol.PPOT_SQ2),
+    ("pot", pol.POT),
+    ("pss", pol.PSS),
+]
+
+FULL_SCENARIOS = [
+    "null", "reshuffle", "flash_crowd", "diurnal", "cotenant_shock",
+    "speed_drift", "churn", "churn_heavy", "trace_replay",
+]
+SMOKE_SCENARIOS = ["null", "flash_crowd", "churn"]
+
+
+def _run_one(scn, policy, seed, arrival_batch):
+    t0 = time.time()
+    out = env.run_scenario(
+        scn, policy=policy, seed=seed, arrival_batch=arrival_batch,
+        async_mu=False,
+    )
+    wall = time.time() - t0
+    resp, mu, wl = out["responses"], out["mu_trace"], out["workload"]
+    rec = M.serve_summary(resp)
+    rec["throughput_rps"] = round(len(resp) / max(wall, 1e-9), 1)
+    rec["wall_s"] = round(wall, 3)
+    if wl.trace_dropped:
+        # trace replay: requests beyond the last full arrival batch can't
+        # run (fixed turn shape) — surface the truncation in the record
+        rec["trace_dropped_tail"] = int(wl.trace_dropped)
+    for k in ("p50", "p99", "mean"):
+        rec[k] = round(rec[k], 4)
+    if len(wl.shift_times):
+        rec["adaptation"] = M.adaptation_report(
+            wl.times[:, -1], mu, wl.speeds, wl.shift_times, active=wl.active
+        )
+        rec["adaptation"]["mean"] = (
+            round(rec["adaptation"]["mean"], 3)
+            if np.isfinite(rec["adaptation"]["mean"]) else None
+        )
+        rec["adaptation"]["max"] = (
+            round(rec["adaptation"]["max"], 3)
+            if np.isfinite(rec["adaptation"]["max"]) else None
+        )
+    else:
+        rec["adaptation"] = None  # shift-free environment: nothing to adapt to
+    return rec
+
+
+def _null_bit_exact(scn, seed, arrival_batch) -> bool:
+    sp = np.asarray(scn.speeds, float)
+    ra = RosellaRouter(scn.n, mu_bar=sp.sum(), seed=seed, async_mu=False)
+    pa = SimulatedPool(sp)
+    resp_ref, mu_ref = run_simulation(
+        ra, pa, arrival_rate=scn.rate, horizon=scn.horizon, seed=seed,
+        arrival_batch=arrival_batch, request_cost=scn.request_cost,
+    )
+    out = env.run_scenario(scn, seed=seed, arrival_batch=arrival_batch)
+    return bool(
+        np.array_equal(resp_ref, out["responses"])
+        and np.array_equal(mu_ref, out["mu_trace"])
+    )
+
+
+def _scan_parity(scn, seed, arrival_batch) -> dict:
+    host = env.run_scenario(
+        scn, seed=seed, arrival_batch=arrival_batch, sequential_pool=True
+    )
+    scan = env.run_scenario(
+        scn, seed=seed, arrival_batch=arrival_batch, sequential_pool=True,
+        use_scan=True,
+    )
+    return {
+        "exact": bool(
+            np.array_equal(host["responses"], scan["responses"])
+            and np.array_equal(host["mu_trace"], scan["mu_trace"])
+        ),
+        "overflow": int(scan["info"]["flush_overflow"])
+        + int(scan["info"]["pend_overflow"]),
+    }
+
+
+def _warmup(arrival_batch, seed):
+    """Compile the per-policy serving programs (plain + membership-masked)
+    on throwaway short runs so the timed runs measure steady state — the
+    smoke comparison would otherwise be dominated by whether the jit cache
+    happened to be warm."""
+    for _, policy in POLICIES:
+        for wname in ("null", "churn"):
+            scn = env.make(wname, horizon=20.0)
+            env.run_scenario(scn, policy=policy, seed=seed,
+                             arrival_batch=arrival_batch, async_mu=False)
+
+
+def run_suite(scenario_names, *, horizon=None, arrival_batch=8, seed=0,
+              check_parity=True, warmup=True):
+    results: dict = {}
+    if warmup:
+        _warmup(arrival_batch, seed)
+    for name in scenario_names:
+        kw = {} if horizon is None else {"horizon": horizon}
+        scn = env.make(name, **kw)
+        entry: dict = {
+            "description": scn.description,
+            "n_workers": scn.n,
+            "horizon": scn.horizon,
+            "n_shifts": int(len(scn.shift_times(seed))),
+        }
+        entry["policies"] = {}
+        for pname, policy in POLICIES:
+            entry["policies"][pname] = _run_one(scn, policy, seed, arrival_batch)
+            print(f"{name:15s} {pname:8s} p50={entry['policies'][pname]['p50']:.2f} "
+                  f"p99={entry['policies'][pname]['p99']:.2f} "
+                  f"adapt={entry['policies'][pname]['adaptation'] and entry['policies'][pname]['adaptation']['mean']}")
+        if scn.is_null:
+            entry["null_bit_exact"] = _null_bit_exact(scn, seed, arrival_batch)
+            print(f"{name:15s} null_bit_exact={entry['null_bit_exact']}")
+        if check_parity and scn.scan_supported:
+            entry["scan_parity"] = _scan_parity(scn, seed, arrival_batch)
+            print(f"{name:15s} scan_parity_exact={entry['scan_parity']['exact']}")
+        results[name] = entry
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced shapes; writes BENCH_scenarios_smoke.json")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.smoke:
+        results = run_suite(
+            SMOKE_SCENARIOS, horizon=120.0, arrival_batch=8,
+            seed=args.seed, check_parity=False,
+        )
+        out = {"smoke": True, "scenarios": results}
+        path = "BENCH_scenarios_smoke.json"
+    else:
+        results = run_suite(FULL_SCENARIOS, arrival_batch=8, seed=args.seed)
+        # smoke_reference: the same reduced shapes the CI smoke runs, so
+        # the non-gating comparison is like-for-like
+        smoke_ref = run_suite(
+            SMOKE_SCENARIOS, horizon=120.0, arrival_batch=8,
+            seed=args.seed, check_parity=False,
+        )
+        out = {
+            "config": {
+                "arrival_batch": 8,
+                "seed": args.seed,
+                "policies": [p for p, _ in POLICIES],
+                "note": "host serving loop, async_mu=False (deterministic); "
+                        "adaptation = time for mu_hat rel. error to re-enter "
+                        "its pre-shift band (core/metrics.adaptation_report)",
+            },
+            "scenarios": results,
+            "smoke_reference": {
+                name: {
+                    p: {"throughput_rps": r["throughput_rps"], "p50": r["p50"]}
+                    for p, r in entry["policies"].items()
+                }
+                for name, entry in smoke_ref.items()
+            },
+        }
+        path = "BENCH_scenarios.json"
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

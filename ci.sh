@@ -16,7 +16,7 @@ python -m pytest -x -q -m "not slow" \
     tests/test_dispatch.py tests/test_policies.py tests/test_kernels.py \
     tests/test_learner.py tests/test_theory.py tests/test_fleet.py \
     tests/test_router_and_straggler.py tests/test_properties.py \
-    tests/test_alias.py tests/test_scanloop.py
+    tests/test_alias.py tests/test_scanloop.py tests/test_env.py
 
 # ~10 s engine smoke: all policies, reduced shapes
 timeout 120 python benchmarks/sched_throughput.py --smoke
@@ -53,6 +53,39 @@ EOF
 # refresh those by running the benchmarks without --smoke)
 timeout 600 python benchmarks/serve_bench.py --smoke || true
 timeout 1200 python benchmarks/fleet_scale.py --smoke || true
+
+# non-gating scenario smoke: reduced-shape environment-scenario runs
+# (gitignored BENCH_scenarios_smoke.json), compared against the
+# smoke_reference section of the committed BENCH_scenarios.json —
+# warn beyond a 20% host-loop throughput drop (advisory on this
+# throttled container, like the dispatch smoke above)
+timeout 600 python benchmarks/scenario_suite.py --smoke || true
+python - <<'EOF' || true
+import json
+try:
+    fresh = json.load(open("BENCH_scenarios_smoke.json"))["scenarios"]
+    ref = json.load(open("BENCH_scenarios.json")).get("smoke_reference", {})
+    worst = None
+    for name, entry in fresh.items():
+        for pname, rec in entry["policies"].items():
+            want = ref.get(name, {}).get(pname, {}).get("throughput_rps")
+            got = rec.get("throughput_rps")
+            if want and got:
+                r = got / want
+                if worst is None or r < worst[0]:
+                    worst = (r, name, pname, got, want)
+    if worst:
+        r, name, pname, got, want = worst
+        line = (f"scenario-smoke: worst {name}/{pname} {got:.0f} req/s vs "
+                f"committed {want:.0f} ({r:.2f}x)")
+        if r < 0.8:
+            line += "  ** WARNING: >20% below the committed reference **"
+        print(line)
+    else:
+        print("scenario-smoke: no smoke_reference in BENCH_scenarios.json")
+except Exception as e:  # advisory only — never fail CI on the smoke
+    print(f"scenario-smoke: skipped ({e})")
+EOF
 
 # informational: full not-slow suite (known model-layer failures tolerated)
 python -m pytest -q -m "not slow" || true

@@ -105,13 +105,24 @@ ALIAS_POLICIES = (pol.PSS, pol.PPOT_SQ2, pol.PPOT_LL2, pol.BANDIT)
 
 
 @jax.jit
-def build_alias_table(mu_hat: jax.Array) -> AliasTable:
+def build_alias_table(
+    mu_hat: jax.Array, active: jax.Array | None = None
+) -> AliasTable:
     """Vose/Walker alias-table construction, O(n) + one sort.
 
     Amortized across every dispatch between two μ̂ refreshes — far too
     expensive to build per call (the ROADMAP's objection to a per-call
     table), trivially cheap per refresh. All-zero μ̂ (dead cluster)
     degenerates to the uniform table, the same guard as ``make_cdf``.
+
+    ``active`` (bool[n], optional) is the cluster-membership mask: inactive
+    workers get EXACTLY zero mass — their scaled weight enters the pairing
+    as 0.0, so their acceptance threshold is exactly 0.0 and their alias
+    partner is an active worker (a zero-mass bin is always a "small" and
+    always pairs while large bins remain; it can never absorb residual
+    mass). No renormalization drift: active workers' relative masses are
+    untouched. If every active worker has μ̂ = 0, mass falls back to
+    uniform over the ACTIVE set (never the inactive one).
 
     The classic small/large pairing runs as a ``fori_loop`` over two
     index stacks packed into one array (smalls grow from 0, larges from
@@ -121,8 +132,18 @@ def build_alias_table(mu_hat: jax.Array) -> AliasTable:
     aliases to the hot one with prob 0.
     """
     n = mu_hat.shape[0]
-    total = jnp.sum(mu_hat)
-    w = jnp.where(total > 0, mu_hat, jnp.ones_like(mu_hat))
+    if active is None:
+        total = jnp.sum(mu_hat)
+        w = jnp.where(total > 0, mu_hat, jnp.ones_like(mu_hat))
+    else:
+        masked = jnp.where(active, mu_hat, 0.0)
+        total = jnp.sum(masked)
+        # all-active-zero → uniform over the active set; all-inactive
+        # (pathological) → uniform over everything, like the unmasked guard
+        fallback = jnp.where(
+            jnp.any(active), active.astype(mu_hat.dtype), jnp.ones_like(mu_hat)
+        )
+        w = jnp.where(total > 0, masked, fallback)
     p = (w * (n / jnp.sum(w))).astype(jnp.float32)  # scaled weights, mean 1
     idx = jnp.arange(n, dtype=jnp.int32)
     small = p < 1.0
@@ -163,6 +184,14 @@ def build_alias_table(mu_hat: jax.Array) -> AliasTable:
     _, prob, alias, _, _, _ = jax.lax.fori_loop(
         0, n, body, (p, prob0, alias0, stack, ns0, jnp.int32(n) - ns0)
     )
+    if active is not None:
+        # Hard mask guarantee, independent of pairing-loop float drift: an
+        # inactive bin accepts nothing (prob exactly 0 → every draw takes
+        # its alias) and every alias edge lands on an active worker.
+        prob = jnp.where(active, prob, 0.0)
+        first_active = jnp.argmax(active).astype(jnp.int32)
+        alias = jnp.where(active[alias], alias, first_active)
+        prob = jnp.where(jnp.any(active), prob, prob0)  # pathological all-off
     return AliasTable(prob=prob, alias=alias)
 
 
@@ -256,6 +285,38 @@ def _uniform_quad(key: jax.Array, B: int):
     return u1, u2, v1, v2
 
 
+def _active_choice(mask: jax.Array, u: jax.Array) -> jax.Array:
+    """Uniform draw over the ACTIVE workers: map u ∈ [0,1) through the
+    index table of active workers (actives first, in index order). The
+    masked replacement for ``randint(0, n)`` wherever a policy draws a
+    uniform worker — under churn no probe may land on an offline worker.
+    All-inactive degenerates to a uniform draw over everything (callers
+    never dispatch against an empty cluster; the guard only keeps the
+    gather in bounds)."""
+    n = mask.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    order = jnp.argsort(jnp.where(mask, idx, n + idx)).astype(jnp.int32)
+    n_act = jnp.sum(mask).astype(jnp.int32)
+    n_eff = jnp.maximum(n_act, 1)
+    j = jnp.minimum((u * n_eff).astype(jnp.int32), n_eff - 1)
+    return jnp.where(n_act > 0, order[j], (u * n).astype(jnp.int32))
+
+
+def masked_cdf(mu: jax.Array, mask: jax.Array) -> jax.Array:
+    """``make_cdf`` with inactive workers' mass zeroed exactly — the
+    searchsorted-path counterpart of the masked alias table. A zero-mass
+    bin i has cdf[i-1] == cdf[i], so ``#{cdf ≤ u}`` can never land on it.
+    All-active-zero falls back to uniform over the active set."""
+    w = jnp.where(mask, mu, 0.0)
+    total = jnp.sum(w)
+    fallback = jnp.where(
+        jnp.any(mask), mask.astype(mu.dtype), jnp.ones_like(mu)
+    )
+    w = jnp.where(total > 0, w, fallback)
+    c = jnp.cumsum(w)
+    return c / c[-1]
+
+
 def _fold_counts(q: jax.Array, workers: jax.Array,
                  active: jax.Array | None) -> jax.Array:
     """Per-worker placement counts WITHOUT a scatter or a sort: split each
@@ -287,7 +348,8 @@ def _fold_counts(q: jax.Array, workers: jax.Array,
 
 
 def _draws(policy: str, key, B: int, n: int, cfg, mu_hat, mu_true,
-           *, need_j: bool = True, table: AliasTable | None = None) -> dict:
+           *, need_j: bool = True, table: AliasTable | None = None,
+           mask: jax.Array | None = None) -> dict:
     """Draw every random quantity the policy needs for a batch of B tasks.
 
     Each [B]-shaped entry (batch axis leading) can be re-chunked by the
@@ -305,25 +367,41 @@ def _draws(policy: str, key, B: int, n: int, cfg, mu_hat, mu_true,
     changes: the alias draw consumes an extra acceptance uniform per
     probe, so selections differ draw-for-draw from the inverse-CDF engine
     while matching it in distribution (tests/test_alias.py pins both).
+
+    ``mask`` (bool[n], optional) restricts every draw to ACTIVE workers:
+    uniform draws map through the active-index table (``_active_choice``),
+    μ̂/μ-proportional draws sample a masked CDF (``masked_cdf``); a
+    caller-supplied ``table`` must already be masked
+    (``build_alias_table(mu, active)`` — the engine cannot verify).
+    ``mask=None`` leaves every RNG stream bit-identical to before.
     """
     d: dict[str, jax.Array] = {}
     if table is not None and policy not in ALIAS_POLICIES:
         table = None  # μ_true-driven / uniform policies ignore the μ̂ table
+
+    def _cdf(mu):
+        return pd_ref.make_cdf(mu) if mask is None else masked_cdf(mu, mask)
+
+    def _uni_workers(k, shape):
+        if mask is None:
+            return jax.random.randint(k, shape, 0, n, dtype=jnp.int32)
+        return _active_choice(mask, jax.random.uniform(k, shape))
+
     if policy == pol.UNIFORM:
-        d["j_uni"] = jax.random.randint(key, (B,), 0, n, dtype=jnp.int32)
+        d["j_uni"] = _uni_workers(key, (B,))
     elif policy == pol.POT:
-        jj = jax.random.randint(key, (2, B), 0, n, dtype=jnp.int32)
+        jj = _uni_workers(key, (2, B))
         d["j1"], d["j2"] = jj[0], jj[1]
     elif policy == pol.PSS:
         if table is not None:
             u, _, v, _ = _uniform_quad(key, B)
             d["j1"] = alias_sample(table, u, v)
         else:
-            cdf = pd_ref.make_cdf(mu_hat)
+            cdf = _cdf(mu_hat)
             u = jax.random.uniform(key, (B,))
             d["j1"] = jnp.clip(inverse_cdf_sample(cdf, u), 0, n - 1)
     elif policy == pol.HALO:
-        cdf = pd_ref.make_cdf(mu_true)
+        cdf = _cdf(mu_true)
         u = jax.random.uniform(key, (B,))
         d["j1"] = jnp.clip(inverse_cdf_sample(cdf, u), 0, n - 1)
     elif policy in (pol.PPOT_SQ2, pol.PPOT_LL2):
@@ -335,7 +413,7 @@ def _draws(policy: str, key, B: int, n: int, cfg, mu_hat, mu_true,
             else:  # fused alias kernel re-derives j from (u, v) on device
                 d["u1"], d["u2"], d["v1"], d["v2"] = u1, u2, v1, v2
         else:
-            d["cdf"] = pd_ref.make_cdf(mu_hat)
+            d["cdf"] = _cdf(mu_hat)
             d["u1"], d["u2"] = _uniform_pair(key, B)
             if need_j:
                 d["j1"] = inverse_cdf_sample(d["cdf"], d["u1"])
@@ -347,15 +425,15 @@ def _draws(policy: str, key, B: int, n: int, cfg, mu_hat, mu_true,
             d["j1"] = alias_sample(table, u1, v1)
             d["j2"] = alias_sample(table, u2, v2)
         else:
-            cdf = pd_ref.make_cdf(mu_hat)
+            cdf = _cdf(mu_hat)
             u1, u2 = _uniform_pair(k1, B)
             d["j1"] = inverse_cdf_sample(cdf, u1)
             d["j2"] = inverse_cdf_sample(cdf, u2)
         d["explore"] = jax.random.uniform(k3, (B,)) < cfg.bandit_eta
-        d["j_uni"] = jax.random.randint(k4, (B,), 0, n, dtype=jnp.int32)
+        d["j_uni"] = _uni_workers(k4, (B,))
     elif policy == pol.SPARROW:
         n_probe = max(int(cfg.sparrow_d) * B, B)
-        d["probes"] = jax.random.randint(key, (n_probe,), 0, n, dtype=jnp.int32)
+        d["probes"] = _uni_workers(key, (n_probe,))
     else:
         raise ValueError(f"unknown policy {policy!r}; choose from {pol.ALL_POLICIES}")
     return d
@@ -507,6 +585,7 @@ def _dispatch_impl(
     use_kernel: bool | None = None,
     interpret: bool | None = None,
     table: AliasTable | None = None,  # amortized μ̂ alias table (per refresh)
+    mask: jax.Array | None = None,  # bool[n] membership: only active workers
 ) -> DispatchResult:
     """Place ``B`` tasks in one engine call. Returns (workers[B], q_after).
 
@@ -525,6 +604,15 @@ def _dispatch_impl(
     μ̂-proportional probe draw to the amortized alias sampler (and the
     fused kernel to its alias-probe variant); the caller owns the
     build-per-refresh cadence — pass a table built from THIS ``mu_hat``.
+
+    ``mask`` (bool[n], optional) is the cluster-membership mask (worker
+    churn): NO task is ever placed on an inactive worker — uniform draws
+    map through the active-index table, proportional draws sample a
+    zero-massed CDF, and a supplied ``table`` must have been built with
+    the same mask (``build_alias_table(mu, active)``). Pinned ``forced``
+    slots are the caller's contract (pin to active workers). Masked
+    batches take the jnp path (the Pallas kernels are mask-oblivious);
+    ``mask=None`` is bit-identical to the pre-mask engine.
     """
     n = q.shape[0]
     if use_kernel is None:
@@ -539,7 +627,7 @@ def _dispatch_impl(
         # tasks water-fill around them (the seed interleaved pins at their
         # slot positions; folding them up front is the batched equivalent).
         act = active if active is not None else jnp.ones((B,), bool)
-        d = _draws(policy, key, B, n, cfg, mu_hat, mu_true)
+        d = _draws(policy, key, B, n, cfg, mu_hat, mu_true, mask=mask)
         if forced is not None:
             pin = (forced >= 0) & act
             wpin = jnp.where(pin, forced, 0)
@@ -560,7 +648,7 @@ def _dispatch_impl(
     C, Bp = _chunking(B, fold_chunks)
     fused = (
         use_kernel and policy == pol.PPOT_SQ2 and C == 1
-        and active is None and forced is None
+        and active is None and forced is None and mask is None
     )
     act = active
     if Bp != B:
@@ -570,7 +658,7 @@ def _dispatch_impl(
         if forced is not None:
             forced = jnp.concatenate([forced, jnp.full((Bp - B,), -1, jnp.int32)])
     d = _draws(policy, key, Bp, n, cfg, mu_hat, mu_true, need_j=not fused,
-               table=table)
+               table=table, mask=mask)
 
     if fused:
         # One Pallas call: probe → select → in-kernel fold-back.
@@ -638,15 +726,16 @@ dispatch_inplace = functools.partial(
 
 def dispatch_sequential(
     policy: str, key, q, mu_hat, mu_true, cfg, B: int, *, active=None,
-    table: AliasTable | None = None,
+    table: AliasTable | None = None, mask: jax.Array | None = None,
 ) -> DispatchResult:
     """Reference oracle: identical probe stream, per-task queue fold-back.
 
     This is the paper's sequential frontend loop, kept only for parity
     testing and as the serial baseline in benchmarks/sched_throughput.
-    With ``table`` it consumes the alias (u, v) stream, so it stays the
-    bit-exact oracle for alias-mode batches too.
+    With ``table`` it consumes the alias (u, v) stream, and with ``mask``
+    the masked draw streams, so it stays the bit-exact oracle for
+    alias-mode and membership-masked batches too.
     """
     return dispatch(policy, key, q, mu_hat, mu_true, cfg, B,
                     active=active, fold_chunks=B, use_kernel=False,
-                    table=table)
+                    table=table, mask=mask)

@@ -112,15 +112,18 @@ def route_view(
     m: int,
     policy: str = pol.PPOT_SQ2,
     table: dsp.AliasTable | None = None,
+    mask: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array, est.EmaArrivalState]:
     """Route ``m`` requests against a queue view + μ̂ snapshot; no learner
     state in the dependency chain. Returns (workers[m], q_view', arr').
     ``table`` is the amortized alias table matching THIS μ̂ snapshot — the
-    router rebuilds it only when the front buffer flips."""
+    router rebuilds it only when the front buffer flips. ``mask`` is the
+    membership mask (worker churn): requests never route to an inactive
+    replica; the table must have been built with the same mask."""
     arr2 = est.observe_arrivals_ema(arr, now, m, window=est.EMA_ARR_WINDOW)
     res = dsp.dispatch(
         policy, key, q_view, mu_hat, mu_hat, pol.default_policy_config(), m,
-        table=table,
+        table=table, mask=mask,
     )
     return res.workers, res.q_after, arr2
 
@@ -177,12 +180,18 @@ def _serve_step_math(
     q_view, learner, arr, mu_hat, lcfg, key, comp_workers, comp_times,
     scalars, m, policy, max_fake, use_fresh_mu,
     table: dsp.AliasTable | None = None, use_alias: bool = False,
+    mask: jax.Array | None = None,
 ):
     """The traced body of ``serve_step`` — shared verbatim with the
     scan-compiled serving loop (``serving/scanloop.py``) so both consume
     bit-identical key streams and f32 math. See ``serve_step`` for the
     contract; keep every array here explicitly dtyped (the scan loop
-    traces this under an x64 context for its f64 event clock)."""
+    traces this under an x64 context for its f64 event clock).
+
+    ``mask`` (bool[n], optional) is the membership mask of the churn
+    scenarios: routing and benchmark draws target only active replicas
+    (inactive workers get exactly-zero probe mass; the fresh-μ̂ alias
+    rebuild is masked). ``mask=None`` is bit-identical to before."""
     now, last_fake, comp_now = scalars
     q1 = absorb_completions(q_view, comp_workers)
     lam0 = est.lam_hat_ema(arr)
@@ -197,20 +206,21 @@ def _serve_step_math(
     key1, k_fake = jax.random.split(key)
     key2, k_route = jax.random.split(key1)
     n = q1.shape[0]
-    fake_js = fake_jobs_from(lcfg, k_fake, lam0, now - last_fake, max_fake, n)
+    fake_js = fake_jobs_from(lcfg, k_fake, lam0, now - last_fake, max_fake, n,
+                             mask=mask)
     arr2 = est.observe_arrivals_ema(arr, now, m, window=est.EMA_ARR_WINDOW)
     if use_fresh_mu:
         mu_route = learner2.mu_hat
         # blocking semantics route on THIS flush's μ̂ — the amortized front
         # table would be stale, so rebuild from the fresh estimates (still
         # one build per completion flush, not per request).
-        tbl = dsp.build_alias_table(mu_route) if use_alias else None
+        tbl = dsp.build_alias_table(mu_route, mask) if use_alias else None
     else:
         mu_route = mu_hat
         tbl = table if use_alias else None
     res = dsp.dispatch(
         policy, k_route, q1, mu_route, mu_route, pol.default_policy_config(),
-        m, table=tbl,
+        m, table=tbl, mask=mask,
     )
     return fake_js, res.workers, res.q_after, learner2, arr2, key2
 
@@ -236,6 +246,7 @@ def serve_step(
     use_fresh_mu: bool = False,
     table: dsp.AliasTable | None = None,  # amortized front-buffer table
     use_alias: bool = False,
+    mask: jax.Array | None = None,  # bool[n] membership mask (churn)
 ):
     """One whole serving turn in ONE jit dispatch: flush the due completion
     batch, draw benchmark requests, route the arrival batch.
@@ -260,7 +271,7 @@ def serve_step(
     """
     return _serve_step_math(
         q_view, learner, arr, mu_hat, lcfg, key, comp_workers, comp_times,
-        scalars, m, policy, max_fake, use_fresh_mu, table, use_alias
+        scalars, m, policy, max_fake, use_fresh_mu, table, use_alias, mask
     )
 
 
@@ -272,9 +283,12 @@ def fake_jobs_from(
     dt: jax.Array,
     max_fake: int,
     n: int,
+    mask: jax.Array | None = None,
 ) -> jax.Array:
     """LEARNER-DISPATCHER tick from raw estimates: Poisson(ν·dt) benchmark
-    jobs at uniform workers; returns workers[max_fake] padded with -1.
+    jobs at uniform workers (uniform over the ACTIVE workers when the
+    membership ``mask`` is given — offline workers can't run benchmarks);
+    returns workers[max_fake] padded with -1.
 
     The count is drawn by inverse-CDF over the max_fake+1 truncated Poisson
     pmf terms and workers by scaled counter-hash uniforms — exactly the
@@ -295,7 +309,10 @@ def fake_jobs_from(
     logp = ks * jnp.log(jnp.maximum(lam, 1e-30)) - lam - logfact
     cdf = jnp.cumsum(jnp.exp(logp))
     k = jnp.sum((cdf <= u1[0]).astype(jnp.int32))
-    js = (u2 * n).astype(jnp.int32)
+    if mask is None:
+        js = (u2 * n).astype(jnp.int32)
+    else:
+        js = dsp._active_choice(mask, u2)
     return jnp.where(jnp.arange(max_fake) < k, js, -1)
 
 

@@ -30,6 +30,28 @@ contributes the Exp(μ_i) variate ``t − busy_start[i]``.
 The scan emits a flat event trace; response-time percentiles, queue
 histograms and learning curves are computed in numpy (``core/metrics.py``).
 
+**Environment mode** (``env=`` — the ``repro.env`` scenario engine): an
+``EnvSchedule`` pytree of piecewise-constant processes generalizes the
+three dynamics axes without touching the null path:
+
+  * **arrivals** λ(t): the chain uniformizes at λmax = max λ(t) and THINS
+    each arrival jump with prob λ(now)/λmax — MMPP flash crowds, diurnal
+    waves and binned trace replays are all piecewise rates;
+  * **capacity** μ(t): segment lookup replaces the phase-indexed
+    ``mu_schedule`` (which is the one-process special case); service
+    thinning against μmax_i = max over segments stays exact;
+  * **membership** (worker churn): an active-mask schedule — dispatch is
+    membership-masked (no probe ever lands on an offline worker), service
+    and benchmark events at offline workers are thinned to self-loops, a
+    membership flip forces a fleet view re-sync (membership changes are
+    cluster-manager broadcasts, unlike queue state), and workers
+    transitioning offline→online cold-start in the learner
+    (``learner.reset_workers``) and receive a fake-job probe burst — the
+    paper's exploration story applied to rejoin.
+
+``env=None`` (the default) traces the exact pre-env program — every RNG
+stream, branch and dtype untouched.
+
 **Multi-frontend mode** (``n_frontends = S > 1``, the repro.fleet
 subsystem): arrivals partition uniformly across S frontends; each frontend
 dispatches against its own STALE view of the queues (snapshot at its last
@@ -111,6 +133,40 @@ class SimConfig:
     # amortized hot path). False forces the per-call inverse-CDF draw,
     # reproducing the PR-2/PR-3 RNG stream exactly (parity baselines).
     use_alias: bool = True
+    # How arrivals partition across the S frontends (the load-balancer in
+    # front of the scheduler fleet): "uniform" — iid uniform frontend per
+    # job (the PR-3 behavior, bit-exact); "weighted" — categorical over
+    # ``SimParams.lb_weights`` (heterogeneous frontend capacity);
+    # "sticky" — deterministic round-robin by job ordinal (the
+    # session-affinity limit: zero balance variance, zero randomness).
+    frontend_lb: str = "uniform"
+
+
+@pytree_dataclass
+class EnvSchedule:
+    """Compiled environment (repro.env): piecewise-constant processes.
+
+    Each axis is (breakpoints[K], values[K, ...]) with ``bp[0] == 0`` and
+    segment i active on ``[bp[i], bp[i+1])`` — looked up per chain round
+    with one small searchsorted. Built by ``repro.env.Scenario.to_sim``;
+    single-segment axes degenerate to the static behavior. When an
+    ``EnvSchedule`` is passed, ``SimParams.lam`` must be max(lam_val)
+    (the uniformization rate) — arrival jumps thin by λ(now)/λmax.
+    """
+
+    lam_bp: jax.Array  # f32[Ka] arrival-rate segment starts
+    lam_val: jax.Array  # f32[Ka] λ per segment
+    mu_bp: jax.Array  # f32[Kc] capacity segment starts
+    mu_val: jax.Array  # f32[Kc, n] worker speeds per segment
+    act_bp: jax.Array  # f32[Km] membership segment starts
+    act_val: jax.Array  # bool[Km, n] active mask per segment
+    burst: jax.Array  # i32 fake-job probe burst per rejoining worker
+
+
+def _env_seg(bp: jax.Array, now: jax.Array) -> jax.Array:
+    """Index of the piecewise segment containing ``now``."""
+    i = jnp.searchsorted(bp, now, side="right").astype(jnp.int32) - 1
+    return jnp.clip(i, 0, bp.shape[0] - 1)
 
 
 @pytree_dataclass
@@ -123,6 +179,7 @@ class SimParams:
     mu_bar: jax.Array  # f32 guaranteed total throughput μ̄
     mu_hat0: jax.Array  # f32[n] initial estimates
     task_logits: jax.Array  # f32[max_tasks] P(job has k+1 tasks) ∝ softmax
+    lb_weights: jax.Array  # f32[S] frontend weights (frontend_lb="weighted")
 
 
 @pytree_dataclass
@@ -147,6 +204,7 @@ def make_params(
     mu_hat0=None,
     task_probs=None,
     max_tasks: int = 1,
+    lb_weights=None,
 ) -> SimParams:
     mu = jnp.asarray(mu, jnp.float32)
     sched = (
@@ -170,6 +228,10 @@ def make_params(
         mu_bar=jnp.float32(mu_bar),
         mu_hat0=jnp.asarray(mu_hat0, jnp.float32),
         task_logits=jnp.log(jnp.clip(probs, 1e-30)),
+        lb_weights=(
+            jnp.ones((1,), jnp.float32) if lb_weights is None
+            else jnp.asarray(lb_weights, jnp.float32)
+        ),
     )
 
 
@@ -186,16 +248,48 @@ def _current_mu(params: SimParams, now: jax.Array) -> jax.Array:
 
 
 @functools.partial(jax.jit, static_argnums=(0,))
-def simulate(cfg: SimConfig, params: SimParams, key: jax.Array):
-    """Run the chain for ``cfg.rounds`` jumps. Returns (final_state, trace)."""
+def simulate(cfg: SimConfig, params: SimParams, key: jax.Array,
+             env: EnvSchedule | None = None):
+    """Run the chain for ``cfg.rounds`` jumps. Returns (final_state, trace).
+
+    ``env`` (optional ``EnvSchedule``) switches the chain into environment
+    mode — piecewise λ(t)/μ(t)/membership with arrival thinning and churn
+    handling (see module docstring). ``env=None`` is the exact original
+    program."""
     n, mt = cfg.n, cfg.max_tasks
+    if cfg.frontend_lb not in ("uniform", "weighted", "sticky"):
+        raise ValueError(
+            f"frontend_lb={cfg.frontend_lb!r}: choose uniform|weighted|sticky"
+        )
+    if (cfg.frontend_lb == "weighted"
+            and params.lb_weights.shape[0] != cfg.n_frontends):
+        # a silent shape mismatch would route every job to frontend 0
+        # (categorical over the wrong-length logits)
+        raise ValueError(
+            f"frontend_lb='weighted' needs lb_weights of length "
+            f"n_frontends={cfg.n_frontends}, got {params.lb_weights.shape[0]} "
+            "(pass lb_weights= to make_params)"
+        )
     pcfg = pol.default_policy_config()
     lcfg = lrn.default_learner_config(
         mu_bar=1.0, c0=cfg.c0, c_window=cfg.c_window,
         window_mode=cfg.window_mode, ring_cap=cfg.ring_cap,
     ).replace(mu_bar=params.mu_bar)
 
-    mu_max = jnp.max(params.mu_schedule, axis=0)  # f32[n]
+    if env is None:
+        mu_max = jnp.max(params.mu_schedule, axis=0)  # f32[n]
+    else:
+        mu_max = jnp.max(env.mu_val, axis=0)  # thinning bound over segments
+
+    def cur_mu(now):
+        if env is None:
+            return _current_mu(params, now)
+        return env.mu_val[_env_seg(env.mu_bp, now)]
+
+    def cur_act(now):
+        if env is None:
+            return None
+        return env.act_val[_env_seg(env.act_bp, now)]
     nu_max = jnp.where(cfg.use_fake_jobs, cfg.c0 * params.mu_bar, 0.0)
     rates = jnp.concatenate([params.lam[None], mu_max, nu_max[None]])
     R = jnp.sum(rates)
@@ -224,15 +318,27 @@ def simulate(cfg: SimConfig, params: SimParams, key: jax.Array):
         k_tasks, k_sched = jax.random.split(key)
         n_tasks = 1 + jax.random.categorical(k_tasks, params.task_logits).astype(jnp.int32)
         arr2 = est.observe_arrival(state.arr, state.now)
-        mu_now = _current_mu(params, state.now)
+        mu_now = cur_mu(state.now)
+        act_now = cur_act(state.now)
 
-        # Which frontend takes this job (arrivals partition uniformly).
-        # Drawn from a folded-in key so the kc/ku/kd streams below stay
-        # bit-identical to the single-frontend path; with S = 1 the draw
-        # is deterministically 0.
-        f = jax.random.randint(
-            jax.random.fold_in(k_sched, 0x5EED), (), 0, S, dtype=jnp.int32
-        )
+        # Which frontend takes this job — the pluggable load balancer in
+        # front of the fleet. "uniform" draws from a folded-in key so the
+        # kc/ku/kd streams below stay bit-identical to the single-frontend
+        # path (with S = 1 the draw is deterministically 0); "weighted"
+        # replaces the draw with a categorical over ``params.lb_weights``;
+        # "sticky" is deterministic round-robin by job ordinal (consumes
+        # no randomness, a strictly-balanced session-affinity limit).
+        if cfg.frontend_lb == "weighted":
+            f = jax.random.categorical(
+                jax.random.fold_in(k_sched, 0x5EED),
+                jnp.log(jnp.clip(params.lb_weights, 1e-30)),
+            ).astype(jnp.int32)
+        elif cfg.frontend_lb == "sticky":
+            f = state.arr.count % jnp.int32(S)  # pre-update count = ordinal
+        else:  # "uniform"
+            f = jax.random.randint(
+                jax.random.fold_in(k_sched, 0x5EED), (), 0, S, dtype=jnp.int32
+            )
         # The frontend dispatches against ITS stale view (snapshot at its
         # last sync + its own placements since) and its frozen μ̂ view —
         # not against true worker state.
@@ -259,7 +365,10 @@ def simulate(cfg: SimConfig, params: SimParams, key: jax.Array):
         active = jnp.arange(mt) < n_tasks
         if cfg.constrained_frac > 0.0:
             constrained = jax.random.uniform(kc, (mt,)) < cfg.constrained_frac
-            j_uni = jax.random.randint(ku, (mt,), 0, n, dtype=jnp.int32)
+            if act_now is None:
+                j_uni = jax.random.randint(ku, (mt,), 0, n, dtype=jnp.int32)
+            else:  # pins land on ACTIVE workers only (churn environments)
+                j_uni = dsp._active_choice(act_now, jax.random.uniform(ku, (mt,)))
             forced = jnp.where(constrained, j_uni, -1)
         else:
             forced = None
@@ -267,7 +376,7 @@ def simulate(cfg: SimConfig, params: SimParams, key: jax.Array):
             cfg.policy, kd, view, mu_view, mu_now, pcfg, mt,
             active=active, forced=forced,
             fold_chunks=(mt if cfg.batch_self_correct else 1),
-            use_kernel=False, table=table,
+            use_kernel=False, table=table, mask=act_now,
         )
         workers = res.workers  # i32[mt], -1 at inactive slots
         wsafe = jnp.where(active, workers, 0)
@@ -300,8 +409,10 @@ def simulate(cfg: SimConfig, params: SimParams, key: jax.Array):
         return new_state, ev
 
     def service_branch(state: SimState, key, widx):
-        mu_now = _current_mu(params, state.now)
+        mu_now = cur_mu(state.now)
         accept = jax.random.uniform(key) < (mu_now[widx] / jnp.clip(mu_max[widx], 1e-30))
+        if env is not None:  # offline workers serve nothing (queue freezes)
+            accept = accept & cur_act(state.now)[widx]
         busy = (state.q_real[widx] + state.q_fake[widx]) > 0
         do_real = accept & (state.q_real[widx] > 0)
         do_fake = accept & (~(state.q_real[widx] > 0)) & (state.q_fake[widx] > 0)
@@ -341,7 +452,15 @@ def simulate(cfg: SimConfig, params: SimParams, key: jax.Array):
         ka, kj = jax.random.split(key)
         nu = lrn.fake_job_rate(lcfg, state.arr.lam_hat)
         accept = jax.random.uniform(ka) < (nu / jnp.clip(nu_max, 1e-30))
-        j = jax.random.randint(kj, (), 0, n, dtype=jnp.int32)
+        if env is None:
+            j = jax.random.randint(kj, (), 0, n, dtype=jnp.int32)
+        else:
+            # uniform over the ACTIVE workers (not thinned): the total
+            # benchmark rate ν is preserved under churn, matching the
+            # serving layers' masked fake_jobs_from — thinning would
+            # scale it by n_active/n and make the chain's μ̂ freshness
+            # systematically pessimistic vs the serving loops
+            j = dsp._active_choice(cur_act(state.now), jax.random.uniform(kj))
         room = state.q_fake[j] < cfg.fake_cap
         fire = accept & room & jnp.bool_(cfg.use_fake_jobs)
         was_idle = (state.q_real[j] + state.q_fake[j]) == 0
@@ -360,11 +479,58 @@ def simulate(cfg: SimConfig, params: SimParams, key: jax.Array):
         )
         return new_state, ev
 
+    def self_loop_ev(state: SimState):
+        """A rejected (thinned) jump: state unchanged, EV_SELF_LOOP row."""
+        ev = dict(
+            code=jnp.int32(EV_SELF_LOOP), worker=jnp.int32(-1),
+            n_tasks=jnp.int32(0),
+            task_workers=jnp.full((mt,), -1, jnp.int32),
+            task_targets=jnp.full((mt,), -1, jnp.int32),
+            frontend=jnp.int32(-1), view_gap=jnp.int32(0),
+            sync_age=jnp.float32(0.0),
+        )
+        return state, ev
+
     def round_fn(state: SimState, xs):
         t, key = xs
         k_dt, k_ev, k_br, k_refresh = jax.random.split(key, 4)
+        act_prev = cur_act(state.now)  # membership BEFORE this jump
         dt = jax.random.exponential(k_dt) / R
         state = state.replace(now=state.now + dt)
+        act_now = cur_act(state.now)
+
+        # Membership transition (env churn): rejoining workers cold-start
+        # in the learner (ring cleared, μ̂ seeded from the survivors) and
+        # get a fake-job probe burst so LEARNER-AGGREGATE re-learns them
+        # within an L-window; their busy clock restarts (queued work was
+        # frozen while offline). A membership flip also FORCES a fleet
+        # sync below — membership events are cluster-manager broadcasts,
+        # so every frontend's frozen view (and masked alias table)
+        # rebuilds immediately rather than at the staleness cadence.
+        memb_changed = jnp.bool_(False)
+        if env is not None:
+            rejoin = act_now & ~act_prev
+            memb_changed = jnp.any(act_now != act_prev)
+
+            def on_memb(s):
+                learner = (
+                    lrn.reset_workers(s.learner, rejoin, s.now, act_now)
+                    if cfg.use_learner else s.learner
+                )
+                if cfg.use_fake_jobs:
+                    q_fake = jnp.where(
+                        rejoin,
+                        jnp.minimum(s.q_fake + env.burst, cfg.fake_cap),
+                        s.q_fake,
+                    )
+                else:
+                    q_fake = s.q_fake
+                busy = jnp.where(rejoin, s.now, s.busy_start)
+                return s.replace(
+                    learner=learner, q_fake=q_fake, busy_start=busy
+                )
+
+            state = jax.lax.cond(memb_changed, on_memb, lambda s: s, state)
 
         # Bounded-staleness fleet sync: every ``fleet_sync_every`` rounds the
         # frontends' views reconcile at true worker state (the pure-jnp
@@ -373,13 +539,13 @@ def simulate(cfg: SimConfig, params: SimParams, key: jax.Array):
         # q_real, keeping this path bit-exact to the single-frontend chain.
         do_sync = (
             (t % cfg.fleet_sync_every) == 0 if cfg.fleet_sync_every > 0 else t == 0
-        )
-        mu_central = scheduler_view_mu(state, _current_mu(params, state.now))
+        ) | memb_changed
+        mu_central = scheduler_view_mu(state, cur_mu(state.now))
         state = state.replace(
             fleet=jax.lax.cond(
                 do_sync,
                 lambda fl: fsync.sync_sim_views(
-                    fl, state.q_real, mu_central, state.now
+                    fl, state.q_real, mu_central, state.now, active=act_now
                 ),
                 lambda fl: fl,
                 state.fleet,
@@ -389,7 +555,19 @@ def simulate(cfg: SimConfig, params: SimParams, key: jax.Array):
         ev_idx = jax.random.categorical(k_ev, logits)  # 0=arrival, 1..n=svc, n+1=fake
 
         def do_arrival(s):
-            return arrival_branch(s, k_br)
+            if env is None:
+                return arrival_branch(s, k_br)
+            # nonhomogeneous arrivals: the chain uniformizes at λmax and
+            # thins each arrival jump with prob λ(now)/λmax (params.lam
+            # IS λmax in env mode) — exact piecewise-Poisson arrivals
+            lam_now = env.lam_val[_env_seg(env.lam_bp, s.now)]
+            acc = (
+                jax.random.uniform(jax.random.fold_in(k_br, 0x7A11))
+                * params.lam < lam_now
+            )
+            return jax.lax.cond(
+                acc, lambda ss: arrival_branch(ss, k_br), self_loop_ev, s
+            )
 
         def do_service(s):
             return service_branch(s, k_br, (ev_idx - 1).astype(jnp.int32))

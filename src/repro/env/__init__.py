@@ -1,0 +1,71 @@
+"""repro.env — the environment engine: composable, scan-compatible
+cluster scenarios.
+
+A scenario is a declarative composition of pure processes of time —
+arrivals λ(t), capacity μ(t), membership (worker churn) — compiled into
+all three execution layers (``core/simulator.simulate`` via piecewise-rate
+thinning, the host serving loop, and the one-program
+``serving/scanloop.run_workload_scan``). See ``env/scenario.py`` for the
+model and ``env/processes.py`` for the process library.
+
+    from repro import env
+    scn = env.make("flash_crowd")
+    out = env.run_scenario(scn, policy="ppot_sq2", use_scan=True)
+
+Catalog: ``env.names()`` — null, reshuffle, flash_crowd, diurnal,
+cotenant_shock, speed_drift, churn, churn_heavy, trace_replay.
+"""
+from repro.env.processes import (
+    PROBE_BURST,
+    ChurnSchedule,
+    Diurnal,
+    HomogeneousPoisson,
+    MMPP,
+    OnOffInterference,
+    OUDrift,
+    PiecewiseRate,
+    RandomChurn,
+    Reshuffle,
+    StaticCapacity,
+    StepSchedule,
+    TraceArrivals,
+    synthesize_tpch_trace,
+)
+from repro.env.scenario import (
+    BASE_RATE,
+    BASE_SPEEDS,
+    SCENARIOS,
+    Scenario,
+    ServingWorkload,
+    make,
+    names,
+    register,
+)
+from repro.env.serving import run_scenario, run_workload
+
+__all__ = [
+    "BASE_RATE",
+    "BASE_SPEEDS",
+    "PROBE_BURST",
+    "SCENARIOS",
+    "ChurnSchedule",
+    "Diurnal",
+    "HomogeneousPoisson",
+    "MMPP",
+    "OnOffInterference",
+    "OUDrift",
+    "PiecewiseRate",
+    "RandomChurn",
+    "Reshuffle",
+    "Scenario",
+    "ServingWorkload",
+    "StaticCapacity",
+    "StepSchedule",
+    "TraceArrivals",
+    "make",
+    "names",
+    "register",
+    "run_scenario",
+    "run_workload",
+    "synthesize_tpch_trace",
+]

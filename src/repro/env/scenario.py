@@ -1,0 +1,442 @@
+"""Scenario — a declarative cluster environment, compiled to all three
+execution layers.
+
+A ``Scenario`` is a named composition of one arrival process, one capacity
+process and (optionally) one membership process over a horizon
+(``env/processes.py``), plus the cluster's baseline speeds and rate. It
+compiles to:
+
+  * ``compile_serving`` → a ``ServingWorkload``: per-turn arrival times,
+    request costs, speed trajectory and membership schedule as dense
+    arrays — consumed BOTH by the host serving loop
+    (``env/serving.run_workload``) and by the one-program scan
+    (``serving/scanloop.run_workload_scan``), which is what makes
+    host-vs-scan float-for-float parity a per-scenario test instead of a
+    special case;
+  * ``to_sim`` → ``(SimConfig, SimParams, EnvSchedule)`` for the chain
+    simulator (``core/simulator.simulate``), where the same processes run
+    as piecewise-rate thinning on the uniformized chain;
+  * ``shift_times`` → the environment's shock instants, feeding the
+    adaptation-time harness (``core/metrics.adaptation_report``).
+
+The registry maps names to factories: ``env.make("flash_crowd")``,
+``env.make("churn_heavy", horizon=900.0)``, … — see ``BUILTIN_SCENARIOS``
+at the bottom for the catalog. The ``null`` scenario compiles to exactly
+the pre-env machinery (``is_null`` short-circuits every layer onto the
+unmodified code path), pinning bit-exactness to PR-4 behavior.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.env import processes as prc
+
+#: Seed offset separating the environment's compile-time randomness (MMPP
+#: regime paths, OU drift, random churn, reshuffles) from the workload's
+#: RandomState stream (arrival gaps + request costs) — the null scenario
+#: must consume the workload stream EXACTLY like run_simulation does.
+ENV_SEED_OFFSET = 0x5CE4A
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingWorkload:
+    """A scenario materialized for the serving loops (host and scan)."""
+
+    times: np.ndarray  # f64[T, k] per-turn arrival times
+    costs: np.ndarray  # f64[T, k] per-turn request costs
+    speeds: np.ndarray  # f64[T, n] replica speeds entering each turn
+    active: np.ndarray | None  # bool[T, n] membership (None → no churn)
+    rejoin: np.ndarray | None  # bool[T, n] offline→online edges per turn
+    burst: np.ndarray | None  # i32[T, Bc] probe-burst targets (-1 padded)
+    shift_times: np.ndarray  # f64[/] capacity+membership shock instants
+    # Trace replay only: requests the trace holds beyond the last full
+    # arrival batch (the serving turn shape is fixed at ``arrival_batch``,
+    # so a partial tail cannot run) — NEVER silently zero for a truncated
+    # replay; consumers surface it (benchmarks/scenario_suite.py).
+    trace_dropped: int = 0
+
+    @property
+    def turns(self) -> int:
+        return self.times.shape[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """A declarative cluster environment (see module docstring)."""
+
+    name: str
+    speeds: tuple  # baseline worker speeds
+    rate: float  # baseline arrival rate λ
+    horizon: float
+    arrivals: object = prc.HomogeneousPoisson()
+    capacity: object = prc.StaticCapacity()
+    membership: object | None = None
+    request_cost: float = 1.0
+    probe_burst: int = prc.PROBE_BURST
+    description: str = ""
+
+    # -- properties ---------------------------------------------------------
+
+    @property
+    def n(self) -> int:
+        return len(self.speeds)
+
+    @property
+    def is_null(self) -> bool:
+        """True iff this scenario is the pre-env behavior exactly:
+        homogeneous Poisson arrivals, static capacity, no churn."""
+        return (
+            getattr(self.arrivals, "is_homogeneous", False)
+            and getattr(self.capacity, "is_static", False)
+            and self.membership is None
+        )
+
+    @property
+    def sim_supported(self) -> bool:
+        """Trace replays drive the serving layers verbatim; the chain
+        simulator sees only their binned empirical rate (still runs, but
+        it is an approximation, not a replay)."""
+        return True
+
+    @property
+    def scan_supported(self) -> bool:
+        return True
+
+    def _env_rng(self, seed: int) -> np.random.RandomState:
+        return np.random.RandomState((seed + ENV_SEED_OFFSET) % (2**31))
+
+    def _compile_env(self, seed: int):
+        """Compile all three processes off ONE env stream in a fixed order
+        (arrivals, capacity, membership) — every consumer must draw in
+        this order or stochastic processes would diverge between callers.
+        Returns (rate, (cap_bp, cap_val), (act_bp, act_val) | None)."""
+        rng = self._env_rng(seed)
+        rate = self.arrivals.compile_rate(self.rate, self.horizon, rng)
+        cap = self.capacity.compile(
+            np.asarray(self.speeds, float), self.horizon, rng
+        )
+        memb = (
+            None if self.membership is None
+            else self.membership.compile(self.n, self.horizon, rng)
+        )
+        return rate, cap, memb
+
+    def _shifts_from(self, cap_bp, memb) -> np.ndarray:
+        """Shock instants from ALREADY-compiled trajectories (t=0
+        baselines excluded) — compile once, derive shifts for free."""
+        shifts = list(np.asarray(cap_bp)[1:])
+        if memb is not None:
+            shifts += list(np.asarray(memb[0])[1:])
+        shifts = np.asarray(sorted(set(float(t) for t in shifts)))
+        return shifts[shifts < self.horizon]
+
+    def shift_times(self, seed: int = 0) -> np.ndarray:
+        """Environment shock instants (capacity + membership breakpoints).
+        Deterministic in ``seed`` (the same env stream the compiles
+        consume)."""
+        _, (cap_bp, _), memb = self._compile_env(seed)
+        return self._shifts_from(cap_bp, memb)
+
+    # -- serving compile ----------------------------------------------------
+
+    def compile_serving(self, seed: int = 0,
+                        arrival_batch: int = 1) -> ServingWorkload:
+        """Materialize the scenario as per-turn serving arrays.
+
+        The workload RandomState consumes, per turn, arrival gaps then
+        request costs — for the null scenario this is EXACTLY
+        ``run_simulation``'s call sequence (the bit-exactness anchor).
+        Environment randomness (regime paths, drift, churn) comes from a
+        separate stream keyed off the same seed, so a scenario + seed is
+        one deterministic workload.
+        """
+        speeds0 = np.asarray(self.speeds, float)
+        n = self.n
+
+        # capacity / membership trajectories (compile-time randomness)
+        rate, (cap_bp, cap_val), memb = self._compile_env(seed)
+        act_bp, act_val = memb if memb is not None else (None, None)
+        shifts = self._shifts_from(cap_bp, memb)
+
+        def cap_at(t):
+            return prc.piecewise_at(cap_bp, cap_val, t)
+
+        def act_at(t):
+            return prc.piecewise_at(act_bp, act_val, t)
+
+        # workload stream: per turn, gaps then costs (run_simulation order)
+        rng = np.random.RandomState(seed)
+        lam_max = rate.max
+        trace = getattr(self.arrivals, "is_trace", False)
+        if trace:
+            tr_t = np.asarray(self.arrivals.times, float)
+            keep = tr_t < self.horizon
+            tr_t = tr_t[keep]
+            tr_c = (
+                None if self.arrivals.costs is None
+                else np.asarray(self.arrivals.costs, float)[keep]
+            )
+
+        times_l, costs_l, speeds_l, act_l = [], [], [], []
+        t, tr_i, dropped = 0.0, 0, 0
+        while t < self.horizon:
+            if getattr(self.arrivals, "is_homogeneous", False):
+                gaps = rng.exponential(1.0 / self.rate, size=arrival_batch)
+                times = t + np.cumsum(gaps)
+            elif trace:
+                if tr_i + arrival_batch > len(tr_t):
+                    # trace exhausted: the run ends with the last FULL
+                    # batch (serving turns have a fixed shape) — the
+                    # partial tail is counted, never silently discarded
+                    dropped = len(tr_t) - tr_i
+                    break
+                times = tr_t[tr_i:tr_i + arrival_batch].copy()
+            else:
+                # Ogata thinning off the compiled piecewise rate: candidate
+                # jumps at λmax, accepted w.p. λ(t)/λmax — exact
+                # nonhomogeneous-Poisson arrivals
+                times = np.empty(arrival_batch)
+                tt = t
+                for i in range(arrival_batch):
+                    while True:
+                        tt += rng.exponential(1.0 / lam_max)
+                        if rng.uniform() * lam_max < rate.at(tt):
+                            break
+                    times[i] = tt
+            t = float(times[-1])
+            if trace and tr_c is not None:
+                costs = self.request_cost * tr_c[tr_i:tr_i + arrival_batch]
+            else:
+                costs = self.request_cost * rng.exponential(
+                    1.0, size=arrival_batch
+                )
+            tr_i += arrival_batch
+            times_l.append(times)
+            costs_l.append(costs)
+            speeds_l.append(cap_at(t))
+            if act_bp is not None:
+                act_l.append(act_at(t))
+
+        if not times_l:
+            z = np.zeros((0, arrival_batch))
+            return ServingWorkload(z, z, np.zeros((0, n)), None, None, None,
+                                   shifts, dropped)
+
+        times = np.stack(times_l)
+        costs = np.stack(costs_l)
+        speeds = np.stack(speeds_l)
+        active = rejoin = burst = None
+        if act_bp is not None:
+            active = np.stack(act_l)
+            prev = np.concatenate([active[:1], active[:-1]], axis=0)
+            rejoin = active & ~prev  # turn 0 has no rejoin edge
+            # probe-burst targets: each rejoined worker repeated
+            # ``probe_burst`` times, -1 padded to the widest turn
+            per_turn = rejoin.sum(axis=1) * self.probe_burst
+            bc = int(per_turn.max())
+            burst = np.full((len(times_l), max(bc, 0)), -1, np.int32)
+            for ti in np.nonzero(per_turn)[0]:
+                ids = np.repeat(np.nonzero(rejoin[ti])[0], self.probe_burst)
+                burst[ti, :len(ids)] = ids
+        return ServingWorkload(times, costs, speeds, active, rejoin, burst,
+                               shifts, dropped)
+
+    # -- simulator compile --------------------------------------------------
+
+    def to_sim(self, policy: str, *, rounds: int = 120_000, seed: int = 0,
+               **cfg_kw):
+        """Compile for the chain simulator: ``(SimConfig, SimParams, env)``.
+
+        The null scenario returns ``env=None`` — ``simulate`` then traces
+        the EXACT pre-env program (the bit-exactness anchor). Otherwise
+        an ``EnvSchedule`` carries the piecewise λ(t)/μ(t)/membership and
+        ``SimParams.lam`` is set to λmax (the uniformization rate).
+        ``cfg_kw`` forwards to ``SimConfig`` (use_learner, fleet axes, …).
+        """
+        import jax.numpy as jnp
+
+        from repro.core import simulator as sim
+
+        speeds0 = np.asarray(self.speeds, float)
+        cfg = sim.SimConfig(n=self.n, policy=policy, rounds=rounds, **cfg_kw)
+        if self.is_null:
+            params = sim.make_params(lam=self.rate, mu=speeds0)
+            return cfg, params, None
+
+        rate, (cap_bp, cap_val), memb = self._compile_env(seed)
+        act_bp, act_val = (
+            memb if memb is not None
+            else (np.zeros(1), np.ones((1, self.n), bool))
+        )
+        params = sim.make_params(
+            lam=rate.max,  # λmax: the uniformization rate (thinned in-chain)
+            mu=speeds0,
+            mu_bar=float(speeds0.sum()),
+        )
+        env = sim.EnvSchedule(
+            lam_bp=jnp.asarray(rate.bp, jnp.float32),
+            lam_val=jnp.asarray(rate.val, jnp.float32),
+            mu_bp=jnp.asarray(cap_bp, jnp.float32),
+            mu_val=jnp.asarray(cap_val, jnp.float32),
+            act_bp=jnp.asarray(act_bp, jnp.float32),
+            act_val=jnp.asarray(act_val, bool),
+            burst=jnp.int32(self.probe_burst),
+        )
+        return cfg, params, env
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+SCENARIOS: dict = {}
+
+
+def register(name: str):
+    """Decorator: register a scenario factory under ``name``. The factory
+    takes keyword overrides and returns a ``Scenario``."""
+
+    def deco(fn):
+        SCENARIOS[name] = fn
+        return fn
+
+    return deco
+
+
+def make(name: str, **overrides) -> Scenario:
+    """Instantiate a registered scenario: ``env.make("flash_crowd")``,
+    ``env.make("churn_heavy", horizon=900.0)``, …"""
+    if name not in SCENARIOS:
+        raise KeyError(
+            f"unknown scenario {name!r}; registered: {sorted(SCENARIOS)}"
+        )
+    return SCENARIOS[name](**overrides)
+
+
+def names() -> list:
+    return sorted(SCENARIOS)
+
+
+# ---------------------------------------------------------------------------
+# Builtin catalog
+# ---------------------------------------------------------------------------
+
+#: The shared baseline cluster of the serving examples
+#: (examples/volatile_cluster.py): two fast, two medium, one slow replica.
+BASE_SPEEDS = (2.0, 2.0, 1.0, 1.0, 0.5)
+BASE_RATE = 3.0
+BASE_HORIZON = 360.0
+
+
+def _base(name, desc, **kw):
+    args = dict(name=name, speeds=BASE_SPEEDS, rate=BASE_RATE,
+                horizon=BASE_HORIZON, description=desc)
+    args.update(kw)
+    return Scenario(**args)
+
+
+@register("null")
+def _null(**kw):
+    return _base(
+        "null",
+        "Homogeneous Poisson, static speeds, no churn — bit-exact to the "
+        "pre-env run_simulation/simulate (the parity anchor).",
+        **kw,
+    )
+
+
+@register("reshuffle")
+def _reshuffle(period: float = 60.0, **kw):
+    return _base(
+        "reshuffle",
+        "Fig-11 volatility: speeds randomly permuted every period; total "
+        "capacity constant (learning transients only).",
+        capacity=prc.Reshuffle(period=period),
+        **kw,
+    )
+
+
+@register("flash_crowd")
+def _flash_crowd(burst_factor: float = 4.0, **kw):
+    return _base(
+        "flash_crowd",
+        "MMPP bursty arrivals: calm epochs at the base rate punctuated by "
+        "short flash crowds at burst_factor x (transient overload).",
+        arrivals=prc.MMPP(factors=(1.0, burst_factor), dwell=(45.0, 9.0)),
+        **kw,
+    )
+
+
+@register("diurnal")
+def _diurnal(**kw):
+    return _base(
+        "diurnal",
+        "Sinusoidal day/night arrival wave (+-60% around the base rate).",
+        arrivals=prc.Diurnal(period=120.0, depth=0.6),
+        **kw,
+    )
+
+
+@register("cotenant_shock")
+def _cotenant(**kw):
+    return _base(
+        "cotenant_shock",
+        "Paper Fig. 2 / examples/volatile_cluster.py: a co-tenant batch "
+        "job halves replicas 0-1 on [120, 240).",
+        capacity=prc.OnOffInterference(
+            affected=(0, 1), factor=0.5, t_on=120.0, t_off=240.0
+        ),
+        **kw,
+    )
+
+
+@register("speed_drift")
+def _drift(**kw):
+    return _base(
+        "speed_drift",
+        "Mean-reverting OU log-speed drift (sigma=0.3, tau=60s): slow "
+        "environmental wander instead of discrete shocks.",
+        capacity=prc.OUDrift(sigma=0.3, tau=60.0, dt=10.0),
+        **kw,
+    )
+
+
+@register("churn")
+def _churn(**kw):
+    return _base(
+        "churn",
+        "One worker leaves and rejoins: replica 1 offline on [120, 240) — "
+        "the minimal membership scenario (examples/churn_cluster.py).",
+        membership=prc.ChurnSchedule(
+            events=((120.0, 1, False), (240.0, 1, True))
+        ),
+        **kw,
+    )
+
+
+@register("churn_heavy")
+def _churn_heavy(**kw):
+    return _base(
+        "churn_heavy",
+        "Random churn: every non-anchor worker alternates Exp(90s) online "
+        "/ Exp(30s) offline epochs; worker 0 never leaves.",
+        membership=prc.RandomChurn(mean_up=90.0, mean_down=30.0, anchor=0),
+        **kw,
+    )
+
+
+@register("trace_replay")
+def _trace_replay(trace_seed: int = 0, **kw):
+    kw.setdefault("horizon", BASE_HORIZON)
+    kw.setdefault("rate", BASE_RATE)
+    return _base(
+        "trace_replay",
+        "TPC-H-style trace replay (fig9 machinery: 1..4-task stage widths "
+        "folded into request costs); the trace owns times AND costs.",
+        arrivals=prc.TraceArrivals.tpch(
+            kw["horizon"], kw["rate"], seed=trace_seed
+        ),
+        **kw,
+    )

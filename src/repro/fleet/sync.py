@@ -55,15 +55,19 @@ def sync_sim_views(
     q_true: jax.Array,  # i32[n] true worker queues (the simulator knows them)
     mu_central: jax.Array,  # f32[n] current central μ̂ (or true μ in oracle mode)
     now: jax.Array,
+    active: jax.Array | None = None,  # bool[n] membership mask (churn envs)
 ) -> FleetSimState:
     """Reconcile every frontend's view at true worker state (one fold, no
     collectives — the simulator's round-based form of the sync layer).
     The frozen alias table is part of the view: ONE build from the newly
     adopted μ̂, broadcast to every frontend, amortized until the next
-    sync."""
+    sync. Under churn the table is MASKED (``active``): offline workers
+    carry exactly zero probe mass in every frontend's frozen view until
+    the sync that readmits them (membership flips force a sync — see
+    ``simulator.round_fn``)."""
     S = fleet.q_snap.shape[0]
     lam_f = fleet_lam_hats(fleet)
-    table = dsp.build_alias_table(mu_central)
+    table = dsp.build_alias_table(mu_central, active)
     return fleet.replace(
         q_snap=jnp.broadcast_to(q_true[None], fleet.q_snap.shape),
         q_delta=jnp.zeros_like(fleet.q_delta),
@@ -80,7 +84,8 @@ def sync_sim_views(
 # ---------------------------------------------------------------------------
 
 
-def sync_frontend_shard(ff: FleetFrontend, now: jax.Array, axis_name: str) -> FleetFrontend:
+def sync_frontend_shard(ff: FleetFrontend, now: jax.Array, axis_name: str,
+                        active: jax.Array | None = None) -> FleetFrontend:
     """One frontend's half of the fleet sync, inside ``shard_map``.
 
     Global queue view = previously agreed snapshot + Σ_f (own view − own
@@ -88,7 +93,10 @@ def sync_frontend_shard(ff: FleetFrontend, now: jax.Array, axis_name: str) -> Fl
     agreement, so the psum reconstructs true outstanding work without any
     frontend observing the workers directly. μ̂ merges by pmean (paper §5);
     λ̂ streams stay per-frontend — only their all_gather'd SUM is adopted
-    as the fleet arrival-rate estimate."""
+    as the fleet arrival-rate estimate. ``active`` (replicated bool[n],
+    optional) is the membership mask of a churn environment: the frozen
+    alias table every shard rebuilds is masked, so no frontend probes an
+    offline worker between syncs."""
     delta = ff.core.q_view - ff.q_snap
     total = ff.q_snap + jax.lax.psum(delta, axis_name)
     total = jnp.maximum(total, 0)
@@ -100,7 +108,7 @@ def sync_frontend_shard(ff: FleetFrontend, now: jax.Array, axis_name: str) -> Fl
     # the frozen alias table rides the sync: every shard rebuilds from the
     # SAME pmean'd μ̂ (identical tables, no extra collective) and samples
     # through it coordination-free until the next sync
-    table = dsp.build_alias_table(mu)
+    table = dsp.build_alias_table(mu, active)
     return ff.replace(
         core=core, q_snap=total, alias_p=table.prob, alias_a=table.alias,
         lam_global=jnp.sum(lam_all), t_sync=jnp.asarray(now, jnp.float32),
@@ -144,20 +152,33 @@ def make_fleet_step(mesh, m: int, policy: str = pol.PPOT_SQ2,
     return jax.jit(mapped)
 
 
-def make_fleet_sync(mesh, axis_name: str = "sched"):
+def make_fleet_sync(mesh, axis_name: str = "sched", masked: bool = False):
     """Build the jitted fleet sync: ``fn(frontends, now) -> frontends'``
     (psum delta-reconciled queue views, pmean μ̂, all_gather'd λ̂ merge).
     Fire it every ``sync_every`` steps — that cadence IS the staleness
-    bound."""
+    bound. ``masked=True`` builds the churn form instead:
+    ``fn(frontends, now, active)`` with a replicated bool[n] membership
+    mask — every shard's frozen alias table rebuilds MASKED, so no
+    frontend probes an offline worker until the next sync."""
 
-    def shard_fn(ff, now):
-        f1 = jax.tree.map(lambda x: x[0], ff)
-        f2 = sync_frontend_shard(f1, now, axis_name)
-        return jax.tree.map(lambda x: x[None], f2)
+    if masked:
+        def shard_fn(ff, now, active):
+            f1 = jax.tree.map(lambda x: x[0], ff)
+            f2 = sync_frontend_shard(f1, now, axis_name, active)
+            return jax.tree.map(lambda x: x[None], f2)
+
+        in_specs = (P(axis_name), P(), P())
+    else:
+        def shard_fn(ff, now):
+            f1 = jax.tree.map(lambda x: x[0], ff)
+            f2 = sync_frontend_shard(f1, now, axis_name)
+            return jax.tree.map(lambda x: x[None], f2)
+
+        in_specs = (P(axis_name), P())
 
     mapped = _shard_map()(
         shard_fn, mesh=mesh,
-        in_specs=(P(axis_name), P()),
+        in_specs=in_specs,
         out_specs=P(axis_name),
     )
     return jax.jit(mapped)

@@ -194,6 +194,9 @@ class RosellaRouter:
         self.arr = est.init_ema_arrival()
         self.learner = lrn.init_learner(n_replicas, self.lcfg, 1.0)
         self.mu_front = self.learner.mu_hat  # materialized routing snapshot
+        # Cluster membership mask (worker churn). None = everyone active,
+        # bit-identical to the pre-churn router; set via set_membership.
+        self.active: jax.Array | None = None
         self.table_front = (
             dsp.build_alias_table(self.mu_front) if self.use_alias else None
         )
@@ -216,14 +219,59 @@ class RosellaRouter:
             self.mu_front = self._mu_pending
             self._mu_pending = None
             if self.use_alias:
-                self.table_front = dsp.build_alias_table(self.mu_front)
+                self.table_front = dsp.build_alias_table(
+                    self.mu_front, self.active
+                )
+
+    def _apply_membership(self, active, now: float, rejoin=None) -> np.ndarray:
+        """Shared membership core (mask adoption + rejoin cold-start,
+        WITHOUT the table/flip step): rejoin inference, the learner reset
+        and the mask assignment live HERE only — ``set_membership`` adds
+        the lone-router flip on top, ``FleetRouter.sync`` runs it per
+        frontend and flips once via the merged table. Returns the
+        rejoined worker ids."""
+        act = np.asarray(active, bool)
+        prev = None if self.active is None else np.asarray(self.active, bool)
+        if rejoin is None:
+            rejoin = (act & ~prev) if prev is not None else np.zeros_like(act)
+        rj = np.asarray(rejoin, bool)
+        if rj.any():
+            self.learner = lrn.reset_workers(
+                self.learner, jnp.asarray(rj), jnp.float32(now),
+                jnp.asarray(act),
+            )
+        self.active = jnp.asarray(act)
+        return np.nonzero(rj)[0]
+
+    def set_membership(self, active, now: float, rejoin=None) -> np.ndarray:
+        """Apply a cluster-membership change (worker churn).
+
+        ``active`` (bool[n]) is the new membership; workers transitioning
+        offline→online (``rejoin`` — inferred from the previous mask when
+        not given) are cold-started in the learner
+        (``learner.reset_workers``: ring cleared, μ̂ seeded with the
+        surviving workers' mean) and returned as an index array so the
+        caller can dispatch a fake-job probe burst at them (the paper's
+        exploration story — μ̂ re-learns from the burst's completions).
+        A membership change is a forced μ̂ front-buffer flip: the masked
+        alias table is rebuilt here and nowhere else between flips, so
+        routing after this call can never select an offline replica.
+        """
+        rj_ids = self._apply_membership(active, now, rejoin)
+        # forced flip: membership events are rare and MUST rebuild the
+        # masked table against the μ̂ the router routes on afterwards
+        self.mu_front = self.learner.mu_hat
+        self._mu_pending = None
+        if self.use_alias:
+            self.table_front = dsp.build_alias_table(self.mu_front, self.active)
+        return rj_ids
 
     def route(self, now: float, k: int = 1) -> np.ndarray:
         """Route a batch of k requests in one dispatch-engine call."""
         self._flip_mu()
         workers, self.q_view, self.arr = rs.route_view(
             self.q_view, self.arr, self.mu_front, self._next_key(),
-            float(now), k, self.policy, self.table_front,
+            float(now), k, self.policy, self.table_front, self.active,
         )
         return np.asarray(workers)
 
@@ -258,7 +306,7 @@ class RosellaRouter:
                 (float(now), self.last_fake_time,
                  float(comp_now) if comp_now is not None else float(now)),
                 k, self.policy, 8, not self.async_mu,
-                self.table_front, self.use_alias,
+                self.table_front, self.use_alias, self.active,
             )
         )
         self.last_fake_time = float(now)
@@ -296,7 +344,7 @@ class RosellaRouter:
     def benchmark_requests(self, now: float) -> np.ndarray:
         js = rs.fake_jobs_from(
             self.lcfg, self._next_key(), est.lam_hat_ema(self.arr),
-            float(now) - self.last_fake_time, 8, self.n,
+            float(now) - self.last_fake_time, 8, self.n, self.active,
         )
         self.last_fake_time = float(now)
         js = np.asarray(js)
@@ -415,10 +463,25 @@ class FleetRouter:
                 self._herd_applied[f] = want
         return fr.serve_turn(now, k, comp_workers, comp_times, comp_now)
 
-    def sync(self, now: float) -> dict:
+    def sync(self, now: float, active=None) -> dict:
         """Reconcile the fleet: rebuild the global queue view from
         per-frontend deltas, share it, merge μ̂, sum the λ̂ streams.
-        Returns staleness telemetry (pre-sync per-frontend view gaps)."""
+        ``active`` (bool[n], optional) applies a cluster-membership mask
+        fleet-wide: rejoining workers cold-start in every frontend's
+        learner and the ONE merged alias table every frontend adopts is
+        masked, so no frontend routes to an offline replica after this
+        sync (the table/flip half of ``set_membership`` is skipped here —
+        the merged build below IS the sync's single flip). Returns
+        staleness telemetry (pre-sync per-frontend view gaps) plus, under
+        a membership change, ``rejoined`` — the worker ids that came back
+        online, which the caller must target with a fake-job probe burst
+        (the exploration kick ``learner.reset_workers`` relies on)."""
+        rejoined = np.empty(0, np.int64)
+        if active is not None:
+            for fr in self.frontends:
+                rejoined = np.union1d(
+                    rejoined, fr._apply_membership(active, now)
+                )
         qs = np.stack(
             [np.asarray(fr.q_view) for fr in self.frontends]
         ).astype(np.int64)
@@ -432,9 +495,11 @@ class FleetRouter:
         mu_merged = lrn.sync_estimates(jnp.asarray(mus))  # paper-§5 merge
         lam_f = np.array([float(est.lam_hat_ema(fr.arr)) for fr in self.frontends])
         # ONE table rebuild per sync, shared by every frontend — the fleet
-        # form of "rebuild only on μ̂ front-buffer flip" (a sync IS the flip)
+        # form of "rebuild only on μ̂ front-buffer flip" (a sync IS the
+        # flip); masked when the fleet carries a membership mask
+        mask0 = self.frontends[0].active
         table_merged = (
-            dsp.build_alias_table(mu_merged)
+            dsp.build_alias_table(mu_merged, mask0)
             if any(fr.use_alias for fr in self.frontends) else None
         )
         for fr in self.frontends:
@@ -446,7 +511,8 @@ class FleetRouter:
         self._snap = global_q
         self.lam_global = float(lam_f.sum())
         self.t_sync = float(now)
-        return {"view_gaps": gaps, "lam_f": lam_f, "global_q": global_q}
+        return {"view_gaps": gaps, "lam_f": lam_f, "global_q": global_q,
+                "rejoined": rejoined}
 
     @property
     def lam_hats(self) -> np.ndarray:

@@ -94,17 +94,31 @@ def _precompute_workload(arrival_rate, horizon, request_cost, speed_schedule,
 
 @functools.lru_cache(maxsize=8)
 def _build_scan(n, k, comp_cap, pend_cap, policy, max_fake, use_alias,
-                fake_cost):
+                fake_cost, churn=False, burst_cap=0, burst_cost=0.0):
     """Compile-once factory for the whole-run scan program (cached on the
     static shape/config tuple; the scan length T is carried by the xs
     shapes, so a new horizon recompiles — one compile per workload shape;
-    the learner config rides as a jit pytree arg, not a baked closure)."""
+    the learner config rides as a jit pytree arg, not a baked closure).
+
+    ``churn=True`` is the environment engine's membership axis: the xs
+    gain per-turn ``(active[n], rejoin[n], burst_w[burst_cap])`` columns —
+    the membership mask joins the traced state (every routing/benchmark
+    draw is masked), rejoining workers cold-start the learner IN-CARRY
+    (``learner.reset_workers``, the same fold the host router applies in
+    ``set_membership``), and the probe burst submits alongside the fake
+    jobs — no host callbacks anywhere in the run. ``churn=False`` compiles
+    the exact pre-churn program."""
 
     def body(lcfg, carry, xs):
         (q_view, learner, arr, key, last_fake, free_at,
          p_done, p_start, p_rep, p_seq, p_valid, seq_ctr,
          over_flush, over_pend) = carry
-        times64, costs64, speeds64 = xs
+        if churn:
+            times64, costs64, speeds64, active_t, rejoin_t, burst_t = xs
+        else:
+            times64, costs64, speeds64 = xs
+            active_t = rejoin_t = None
+            burst_t = jnp.zeros((0,), jnp.int32)
         t64 = times64[-1]
         t32 = t64.astype(jnp.float32)
 
@@ -126,8 +140,20 @@ def _build_scan(n, k, comp_cap, pend_cap, policy, max_fake, use_alias,
         p_valid = p_valid & ~flushed
         over_flush = over_flush + jnp.maximum(n_due - comp_cap, 0).astype(jnp.int32)
 
+        # -- membership transition (churn only): rejoining workers
+        #    cold-start the learner BEFORE this turn's completion fold —
+        #    the same ordering as the host router's set_membership call
+        if churn:
+            learner = jax.lax.cond(
+                jnp.any(rejoin_t),
+                lambda l: lrn.reset_workers(l, rejoin_t, t32, active_t),
+                lambda l: l,
+                learner,
+            )
+
         # -- μ̂ trace sample: the front buffer entering this turn (the value
-        #    run_simulation appends — learner μ̂ as of the last flush)
+        #    run_simulation appends — learner μ̂ as of the last flush,
+        #    post-membership-reset on a churn turn)
         mu_tr = learner.mu_hat
 
         # -- the serving turn: same traced math as scheduler.serve_step in
@@ -135,17 +161,29 @@ def _build_scan(n, k, comp_cap, pend_cap, policy, max_fake, use_alias,
         fake_js, workers, q_view, learner, arr, key = rs._serve_step_math(
             q_view, learner, arr, learner.mu_hat, lcfg, key,
             comp_w, comp_t, (t32, last_fake, comp_now32),
-            k, policy, max_fake, True, None, use_alias,
+            k, policy, max_fake, True, None, use_alias, active_t,
         )
         last_fake = t32
 
-        # -- replica-pool chain, fakes then reals (the host's two
-        #    submit_batch calls), as the exact sequential recurrence
-        act = jnp.concatenate([fake_js >= 0, jnp.ones((k,), bool)])
-        sub_w = jnp.concatenate([jnp.maximum(fake_js, 0), workers])
-        sub_arr = jnp.concatenate([jnp.full((max_fake,), t64), times64])
+        # -- replica-pool chain, fakes then probe bursts then reals (the
+        #    host's submit_batch calls in order), as the exact sequential
+        #    recurrence
+        act = jnp.concatenate(
+            [fake_js >= 0, burst_t >= 0, jnp.ones((k,), bool)]
+        )
+        sub_w = jnp.concatenate(
+            [jnp.maximum(fake_js, 0), jnp.maximum(burst_t, 0), workers]
+        )
+        sub_arr = jnp.concatenate(
+            [jnp.full((max_fake + burst_cap,), t64), times64]
+        )
+        # probe bursts run at burst_cost (representative full-request cost
+        # — their service times must be CALIBRATED with real traffic,
+        # since they dominate a rejoined worker's fresh sample ring; the
+        # cheap fake_cost there would bias its μ̂ ~4× high)
         sub_cost = jnp.concatenate(
-            [jnp.full((max_fake,), fake_cost), costs64]
+            [jnp.full((max_fake,), fake_cost),
+             jnp.full((burst_cap,), burst_cost), costs64]
         )
 
         def pstep(fa, x):
@@ -158,7 +196,7 @@ def _build_scan(n, k, comp_cap, pend_cap, policy, max_fake, use_alias,
         free_at, (sub_start, sub_done) = jax.lax.scan(
             pstep, free_at, (sub_w, sub_arr, sub_cost, act)
         )
-        resp = sub_done[max_fake:] - times64  # f64[k]
+        resp = sub_done[max_fake + burst_cap:] - times64  # f64[k]
 
         # -- append the new in-flight work: compact survivors to the front
         #    (insertion order), then write fakes-then-reals behind them
@@ -223,8 +261,61 @@ def run_simulation_scan(
         return np.empty(0), np.zeros((0, router.n)), {
             "turns": 0, "flush_overflow": 0, "pend_overflow": 0}
     times_np, costs_np, speeds_np = wl
+    return run_workload_scan(
+        router, pool, times_np, costs_np, speeds_np,
+        fake_cost=request_cost * 0.25, pend_cap=pend_cap,
+    )
+
+
+def run_workload_scan(
+    router: rt.RosellaRouter,
+    pool: rt.SimulatedPool,
+    times_np: np.ndarray,  # f64[T, k] per-turn arrival times
+    costs_np: np.ndarray,  # f64[T, k] per-turn request costs
+    speeds_np: np.ndarray,  # f64[T, n] replica speeds entering each turn
+    *,
+    active_np: np.ndarray | None = None,  # bool[T, n] membership per turn
+    rejoin_np: np.ndarray | None = None,  # bool[T, n] offline→online edges
+    burst_np: np.ndarray | None = None,  # i32[T, Bc] probe-burst targets (-1 pad)
+    fake_cost: float = 0.25,
+    burst_cost: float | None = None,  # default: 4×fake_cost = the full
+    # request cost — rejoin probes must be cost-calibrated with real
+    # traffic or the rejoined worker's μ̂ rebuilds ~4× high
+    pend_cap: int = PEND_CAP,
+):
+    """Scan-compile a PRE-MATERIALIZED workload — the environment engine's
+    entry point (``repro.env``): any scenario that can lay out its arrival
+    times, request costs, capacity trajectory and membership schedule as
+    per-turn arrays runs as ONE compiled program. ``run_simulation_scan``
+    is this function fed by the homogeneous-Poisson precompute; scenario
+    workloads (MMPP flash crowds, diurnal waves, trace replays, OU speed
+    drift, worker churn) come from ``Scenario.compile_serving``.
+
+    With the membership columns present, the churn variant of the scan
+    body runs: the active mask joins the traced state, rejoin edges
+    cold-start the learner in-carry, and per-turn probe bursts
+    (``burst_np`` worker ids, -1 padded) submit at ``burst_cost`` — the
+    FULL request cost by default, NOT ``fake_cost``, so the rejoined
+    worker's rebuilt sample ring is cost-calibrated with real traffic —
+    matching ``env.serving.run_workload`` (the host loop)
+    float-for-float. Without them, the compiled program is byte-identical
+    to the pre-env scan."""
     T, k = times_np.shape
     n = router.n
+    if active_np is None and router.active is not None:
+        # the router already carries a (static) membership mask — honor it
+        # like the host loop does on every serve_turn, or the scan would
+        # silently route to offline replicas set_membership promised to
+        # exclude (no rejoin edges: the mask is constant over the run)
+        active_np = np.broadcast_to(
+            np.asarray(router.active, bool), (T, n)
+        ).copy()
+    churn = active_np is not None
+    burst_cap = 0
+    if churn and burst_np is not None:
+        burst_cap = int(burst_np.shape[1])
+    if burst_cost is None:
+        burst_cost = 4.0 * fake_cost
 
     from jax.experimental import enable_x64
 
@@ -234,6 +325,20 @@ def run_simulation_scan(
             jnp.asarray(costs_np, jnp.float64),
             jnp.asarray(speeds_np, jnp.float64),
         )
+        if churn:
+            rej = (
+                rejoin_np if rejoin_np is not None
+                else np.zeros((T, n), bool)
+            )
+            bw = (
+                burst_np if burst_np is not None
+                else np.zeros((T, 0), np.int32)
+            )
+            xs = xs + (
+                jnp.asarray(active_np, bool),
+                jnp.asarray(rej, bool),
+                jnp.asarray(bw, jnp.int32),
+            )
         carry0 = (
             jnp.asarray(router.q_view),
             router.learner,
@@ -255,7 +360,8 @@ def run_simulation_scan(
             # SERVE_COMP_CAP shape keeps the learner fold identical to the
             # host loop's serve_step padding at the default capacities
             n, k, min(rt.SERVE_COMP_CAP, pend_cap), pend_cap,
-            router.policy, 8, router.use_alias, request_cost * 0.25,
+            router.policy, 8, router.use_alias, fake_cost,
+            churn, burst_cap, float(burst_cost),
         )
         carry, (resp, mu_trace) = run(router.lcfg, carry0, xs)
         resp = np.asarray(resp).reshape(-1)
@@ -277,8 +383,12 @@ def run_simulation_scan(
         router.mu_front = router.learner.mu_hat
         router._mu_pending = None
         pool.free_at = np.asarray(carry[5])
+    if churn:
+        router.active = jnp.asarray(active_np[-1], bool)
     if router.use_alias:
         import repro.core.dispatch as dsp
 
-        router.table_front = dsp.build_alias_table(router.mu_front)
+        router.table_front = dsp.build_alias_table(
+            router.mu_front, router.active
+        )
     return resp, mu_trace, info
