@@ -16,7 +16,8 @@ python -m pytest -x -q -m "not slow" \
     tests/test_dispatch.py tests/test_policies.py tests/test_kernels.py \
     tests/test_learner.py tests/test_theory.py tests/test_fleet.py \
     tests/test_router_and_straggler.py tests/test_properties.py \
-    tests/test_alias.py tests/test_scanloop.py tests/test_env.py
+    tests/test_alias.py tests/test_scanloop.py tests/test_env.py \
+    tests/test_fleet_scan.py
 
 # ~10 s engine smoke: all policies, reduced shapes
 timeout 120 python benchmarks/sched_throughput.py --smoke
@@ -53,6 +54,31 @@ EOF
 # refresh those by running the benchmarks without --smoke)
 timeout 600 python benchmarks/serve_bench.py --smoke || true
 timeout 1200 python benchmarks/fleet_scale.py --smoke || true
+
+# non-gating fleet-scan perf smoke: the one-program fleet's fixed smoke
+# point (S=4 stacked scan, k=256) from the fresh --smoke run above vs the
+# smoke_reference recorded in the committed BENCH_fleet.json — warn beyond
+# a 20% drop (advisory on this throttled container)
+python - <<'EOF' || true
+import json
+try:
+    fresh = json.load(open("BENCH_fleet_smoke.json"))
+    got = fresh["scan_fleet"]["smoke_point"]["dec_per_s"]
+    ref = json.load(open("BENCH_fleet.json")).get("smoke_reference")
+    if ref and ref.get("dec_per_s"):
+        want = ref["dec_per_s"]
+        ratio = got / want
+        line = (f"fleet-scan-smoke: S=4 stacked {got/1e3:.0f}k dec/s vs "
+                f"committed smoke_reference {want/1e3:.0f}k ({ratio:.2f}x)")
+        if ratio < 0.8:
+            line += "  ** WARNING: >20% below the committed reference **"
+        print(line)
+    else:
+        print(f"fleet-scan-smoke: S=4 stacked {got/1e3:.0f}k dec/s "
+              "(no smoke_reference in BENCH_fleet.json)")
+except Exception as e:  # advisory only — never fail CI on the smoke
+    print(f"fleet-scan-smoke: skipped ({e})")
+EOF
 
 # non-gating scenario smoke: reduced-shape environment-scenario runs
 # (gitignored BENCH_scenarios_smoke.json), compared against the

@@ -275,6 +275,55 @@ def serve_step(
     )
 
 
+def serve_step_fleet(
+    q_views: jax.Array,  # i32[S, n] per-frontend stale queue views
+    learners: lrn.LearnerState,  # stacked per-frontend learners ([S, ...])
+    arrs: est.EmaArrivalState,  # stacked per-frontend λ̂ EMAs ([S])
+    mu_fronts: jax.Array,  # f32[S, n] per-frontend μ̂ routing snapshots
+    lcfg: lrn.LearnerConfig,
+    keys: jax.Array,  # u32[S, 2] per-frontend PRNG keys
+    comp_workers: jax.Array,  # i32[S, P] per-frontend due completions
+    comp_times: jax.Array,  # f32[S, P]
+    scalars,  # (now, last_fakes[S], comp_nows[S])
+    m: int,  # per-frontend batch size
+    policy: str,
+    max_fake: int = 8,
+    use_fresh_mu: bool = False,
+    tables: dsp.AliasTable | None = None,  # frozen tables, leaves [S, n]
+    use_alias: bool = False,
+    mask: jax.Array | None = None,  # bool[n] shared membership mask
+):
+    """S serving turns at once: ``_serve_step_math`` vmapped over the
+    frontend axis. Each frontend flushes ITS completions, draws ITS
+    benchmark jobs and routes ITS arrival chunk against its own stale
+    view/μ̂/key — the membership mask and the clock are fleet-shared.
+    vmap of the step math is bit-identical per row to S unbatched calls
+    (pinned by tests/test_fleet_scan.py), which is what lets the
+    one-program fleet scan meet its host-parity obligations.
+
+    Returns ``(fake_js[S, max_fake], workers[S, m], q_views', learners',
+    arrs', keys')``.
+    """
+    now, last_fakes, comp_nows = scalars
+
+    def one(q, l, a, mu, k, cw, ct, lf, cn, tb):
+        return _serve_step_math(
+            q, l, a, mu, lcfg, k, cw, ct, (now, lf, cn),
+            m, policy, max_fake, use_fresh_mu, tb, use_alias, mask,
+        )
+
+    if tables is None:
+        return jax.vmap(
+            lambda q, l, a, mu, k, cw, ct, lf, cn:
+            one(q, l, a, mu, k, cw, ct, lf, cn, None)
+        )(q_views, learners, arrs, mu_fronts, keys, comp_workers,
+          comp_times, last_fakes, comp_nows)
+    return jax.vmap(one)(
+        q_views, learners, arrs, mu_fronts, keys, comp_workers,
+        comp_times, last_fakes, comp_nows, tables,
+    )
+
+
 @functools.partial(jax.jit, static_argnums=(4, 5))
 def fake_jobs_from(
     lcfg: lrn.LearnerConfig,

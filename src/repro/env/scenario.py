@@ -61,6 +61,29 @@ class ServingWorkload:
     def turns(self) -> int:
         return self.times.shape[0]
 
+    def partition(self, n_frontends: int):
+        """Materialize the per-FRONTEND view of this workload for the
+        one-program fleet (``scanloop.run_fleet_workload_scan``): frontend
+        f owns the contiguous chunk ``[:, f*k_f:(f+1)*k_f]`` of each turn
+        (the host ``run_fleet_simulation`` split at its equal-chunk
+        shapes). Returns ``(times_f, costs_f, frontend_of)`` with
+        ``times_f``/``costs_f`` shaped ``f64[T, S, k_f]`` and
+        ``frontend_of`` the i32[k] request→frontend map shared by every
+        turn. Raises when the batch does not split evenly — the fleet scan
+        needs one fixed per-frontend shape."""
+        S = int(n_frontends)
+        T, k = self.times.shape
+        if S < 1 or k % S != 0:
+            raise ValueError(
+                f"arrival_batch={k} must divide evenly over "
+                f"S={S} frontends"
+            )
+        k_f = k // S
+        times_f = self.times.reshape(T, S, k_f)
+        costs_f = self.costs.reshape(T, S, k_f)
+        frontend_of = np.repeat(np.arange(S, dtype=np.int32), k_f)
+        return times_f, costs_f, frontend_of
+
 
 @dataclasses.dataclass(frozen=True)
 class Scenario:

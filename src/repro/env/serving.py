@@ -135,6 +135,10 @@ def run_scenario(
     c_window: float = 10.0,
     router: rt.RosellaRouter | None = None,
     pool: rt.SimulatedPool | None = None,
+    n_frontends: int = 1,
+    sync_every: int = 1,
+    herd_correction=False,
+    frozen_mu: bool = False,
 ):
     """One scenario end to end on the serving layer.
 
@@ -145,8 +149,53 @@ def run_scenario(
     and the router/pool (final states). ``async_mu=False`` is the
     deterministic default so scenario runs are reproducible artifacts;
     pass ``sequential_pool=True`` for the exact-parity pool chain.
+
+    ``n_frontends > 1`` composes the scenario with the frontend FLEET on
+    the one-program scan (``scanloop.run_fleet_workload_scan``): S
+    frontends with stale views, sync cadence ``sync_every`` (in turns),
+    per-frontend ``herd_correction`` gains and optionally the frozen-μ̂
+    amortized views (``frozen_mu``). Requires ``use_scan=True`` (the fleet
+    × env composition is a scan-path program; the host fleet loop has no
+    env hooks) and S | arrival_batch.
     """
     speeds0 = np.asarray(scn.speeds, float)
+    if n_frontends > 1:
+        if not use_scan:
+            raise ValueError(
+                "n_frontends > 1 requires use_scan=True: the fleet × env "
+                "composition runs on the one-program scan path"
+            )
+        if router is not None and not isinstance(router, rt.FleetRouter):
+            raise ValueError("n_frontends > 1 needs a FleetRouter")
+        if router is None:
+            router = rt.FleetRouter(
+                n_frontends, scn.n, mu_bar=float(speeds0.sum()),
+                policy=policy, seed=seed, async_mu=async_mu,
+                use_alias=use_alias, c_window=c_window,
+                herd_correction=herd_correction,
+            )
+        if pool is None:
+            pool_cls = (
+                rt.SequentialPool if sequential_pool else rt.SimulatedPool
+            )
+            pool = pool_cls(speeds0)
+        wl = scn.compile_serving(seed=seed, arrival_batch=arrival_batch)
+        wl.partition(n_frontends)  # validate the S | k split up front
+        fake_cost = scn.request_cost * 0.25
+        resp, mu_trace, info = scanloop.run_fleet_workload_scan(
+            router, pool, wl.times, wl.costs, wl.speeds,
+            active_np=wl.active, rejoin_np=wl.rejoin, burst_np=wl.burst,
+            fake_cost=fake_cost, sync_every=sync_every,
+            frozen_mu=frozen_mu,
+        )
+        return {
+            "responses": resp,
+            "mu_trace": mu_trace,
+            "info": info,
+            "workload": wl,
+            "router": router,
+            "pool": pool,
+        }
     if router is None:
         router = rt.RosellaRouter(
             scn.n, mu_bar=float(speeds0.sum()), policy=policy, seed=seed,

@@ -37,6 +37,7 @@ import jax.numpy as jnp
 
 from repro.core import dispatch as dsp
 from repro.core import estimator as est
+from repro.core import learner as lrn
 from repro.core import scheduler as rs
 from repro.utils.struct import pytree_dataclass
 
@@ -114,6 +115,44 @@ def observe_frontend_arrival(
 def fleet_lam_hats(fleet: FleetSimState) -> jax.Array:
     """Per-frontend λ̂ estimates, f32[S]."""
     return est.lam_hat_ema(fleet.arr)
+
+
+# ---------------------------------------------------------------------------
+# Serving form: the one-program fleet scan's carry (scanloop fleet mode)
+# ---------------------------------------------------------------------------
+
+
+@pytree_dataclass
+class FleetServeCarry:
+    """The SERVING fleet's whole state as one scan carry — S full routers
+    (each frontend's stale queue view, learner sample rings, λ̂ EMA stream,
+    PRNG key, double-buffered μ̂ front + pending flag, frozen alias table,
+    herd-correction bookkeeping) plus the fleet-shared sync agreement
+    (``q_snap``/``t_sync``/``lam_global``). ``serving/scanloop`` threads
+    this through ``lax.scan`` alongside the env/pool carry so an
+    S-frontend churn/interference episode compiles to ONE program; the
+    leading axis of every per-frontend leaf is the frontend axis the
+    sharded path splits over the mesh (``fleet/sync.py`` stages)."""
+
+    q_view: jax.Array  # i32[S, n] per-frontend stale views (snap + own work)
+    learner: lrn.LearnerState  # per-frontend learners (leaves [S, ...])
+    arr: est.EmaArrivalState  # per-frontend λ̂ EMA streams (leaves [S])
+    key: jax.Array  # u32[S, 2] per-frontend PRNG keys
+    mu_front: jax.Array  # f32[S, n] per-frontend μ̂ routing snapshots
+    mu_pend: jax.Array  # bool[S] refreshed-μ̂ pending (the host router's
+    # ``_mu_pending is not None`` — in deterministic async_mu=False mode
+    # the pending VALUE is always the frontend's own learner μ̂, so a flag
+    # in the carry reproduces the double buffer exactly)
+    tables: dsp.AliasTable | None  # frozen per-frontend alias tables
+    # (leaves f32/i32[S, n]) — the FleetSimState amortization: rebuilt only
+    # at sync rounds / membership flips. None in fresh-μ̂ (host-parity)
+    # mode, where routing rebuilds in-step like serve_step's use_fresh_mu.
+    herd_scale: jax.Array  # f32[S] per-frontend herd-correction strength
+    herd_applied: jax.Array  # i32[S, n] corrections folded into q_view
+    last_fake: jax.Array  # f32[S] per-frontend LEARNER-DISPATCHER clocks
+    q_snap: jax.Array  # i32[n] the agreed global view at the last sync
+    t_sync: jax.Array  # f32 time of the last sync round
+    lam_global: jax.Array  # f32 fleet arrival-rate estimate (Σ_f λ̂_f)
 
 
 # ---------------------------------------------------------------------------

@@ -84,6 +84,29 @@ def sync_sim_views(
 # ---------------------------------------------------------------------------
 
 
+def _sync_collective_core(q_local, q_snap, mu_local, lam_local, axis_name):
+    """The sync round's three collectives, over a shard's LOCAL frontend
+    rows (``[Sl, ...]`` where Sl = S / mesh size; Sl = 1 when every
+    frontend owns a device). Shared by ``sync_frontend_shard`` (the mesh
+    fleet) and ``make_fleet_scan_sync`` (the one-program fleet scan), so
+    both paths reconcile with the SAME psum/psum-mean/all_gather pattern:
+
+      * global queues  = snapshot + psum of per-frontend deltas,
+      * merged μ̂      = psum of local μ̂ sums / psum of local counts
+        (≡ pmean over frontends, any shard split),
+      * λ̂ streams     = all_gather'd into frontend order ``[S]``.
+
+    Returns ``(total_q i32[n], mu_merged f32[n], lam_all f32[S])``."""
+    # explicit dtype: the fleet scan traces this under an x64 context,
+    # where default integer sums widen to i64
+    delta = (q_local - q_snap[None, :]).sum(axis=0, dtype=q_snap.dtype)
+    total = jnp.maximum(q_snap + jax.lax.psum(delta, axis_name), 0)
+    cnt = jax.lax.psum(jnp.float32(q_local.shape[0]), axis_name)
+    mu_merged = jax.lax.psum(mu_local.sum(axis=0), axis_name) / cnt
+    lam_all = jax.lax.all_gather(lam_local, axis_name).reshape(-1)
+    return total, mu_merged, lam_all
+
+
 def sync_frontend_shard(ff: FleetFrontend, now: jax.Array, axis_name: str,
                         active: jax.Array | None = None) -> FleetFrontend:
     """One frontend's half of the fleet sync, inside ``shard_map``.
@@ -97,11 +120,10 @@ def sync_frontend_shard(ff: FleetFrontend, now: jax.Array, axis_name: str,
     optional) is the membership mask of a churn environment: the frozen
     alias table every shard rebuilds is masked, so no frontend probes an
     offline worker between syncs."""
-    delta = ff.core.q_view - ff.q_snap
-    total = ff.q_snap + jax.lax.psum(delta, axis_name)
-    total = jnp.maximum(total, 0)
-    mu = jax.lax.pmean(ff.core.learner.mu_hat, axis_name)
-    lam_all = jax.lax.all_gather(est.lam_hat_ema(ff.core.arr), axis_name)  # [S]
+    total, mu, lam_all = _sync_collective_core(
+        ff.core.q_view[None], ff.q_snap, ff.core.learner.mu_hat[None],
+        est.lam_hat_ema(ff.core.arr)[None], axis_name,
+    )  # lam_all: [S]
     core = ff.core.replace(
         q_view=total, learner=ff.core.learner.replace(mu_hat=mu)
     )
@@ -182,3 +204,80 @@ def make_fleet_sync(mesh, axis_name: str = "sched", masked: bool = False):
         out_specs=P(axis_name),
     )
     return jax.jit(mapped)
+
+
+# ---------------------------------------------------------------------------
+# One-program fleet scan stages (serving/scanloop fleet mode over a mesh)
+# ---------------------------------------------------------------------------
+
+
+def make_fleet_serve_stage(mesh, m: int, policy: str, *, max_fake: int = 8,
+                           use_fresh_mu: bool = True, use_alias: bool = True,
+                           churn: bool = False, axis_name: str = "sched"):
+    """The fleet scan's SERVE stage as a ``shard_map`` over the frontend
+    axis — the coordination-free half of the loop: each shard runs
+    ``scheduler.serve_step_fleet`` on its LOCAL frontend rows (vmap, so
+    any mesh size dividing S works), NO collectives. Pair with
+    ``make_fleet_scan_sync`` — sync rounds are then the only collectives
+    in the compiled loop. Returns an UNJITTED fn (it is traced inside the
+    scan body): ``fn(q, learner, arr, mu_front, keys, comp_w, comp_t,
+    last_fake, comp_now, now, lcfg, table_p, table_a, mask) -> (fake_js,
+    workers, q', learner', arr', keys')``. ``table_p``/``table_a`` and
+    ``mask`` are always passed (dummies when unused — shard_map wants a
+    fixed arity); the static flags decide whether they are read."""
+
+    def shard_fn(q, l, a, mu, keys, cw, ct, lf, cn, now, lcfg, tbp, tba,
+                 mask):
+        tb = (
+            dsp.AliasTable(prob=tbp, alias=tba)
+            if (use_alias and not use_fresh_mu) else None
+        )
+        return rs.serve_step_fleet(
+            q, l, a, mu, lcfg, keys, cw, ct, (now, lf, cn),
+            m, policy, max_fake, use_fresh_mu, tb, use_alias,
+            mask if churn else None,
+        )
+
+    per_f, shared = P(axis_name), P()
+    return _shard_map()(
+        shard_fn, mesh=mesh,
+        in_specs=(per_f, per_f, per_f, per_f, per_f, per_f, per_f, per_f,
+                  per_f, shared, shared, per_f, per_f, shared),
+        out_specs=(per_f, per_f, per_f, per_f, per_f, per_f),
+    )
+
+
+def make_fleet_scan_sync(mesh, axis_name: str = "sched"):
+    """The fleet scan's SYNC stage as a ``shard_map``: reconcile the
+    per-frontend stale views through ``_sync_collective_core`` — the SAME
+    psum/pmean/all_gather pattern as ``sync_frontend_shard`` — plus the
+    herd-correction unwind (corrections are a routing bias, not state) and
+    the staleness-gap telemetry. Unjitted; traced inside the scan body
+    under the sync-round ``lax.cond``, so the collectives run ONLY on sync
+    turns. ``fn(q_view, herd_applied, q_snap, mu_hat, lam_hat) ->
+    (q_view'[S,n] (global, broadcast), mu_merged'[S,n], gaps i32[S],
+    global_q i32[n], lam_sum f32)``."""
+
+    def shard_fn(q_view, herd_applied, q_snap, mu_hat, lam_hat):
+        qs = q_view - herd_applied
+        total, mu_merged, _ = _sync_collective_core(
+            qs, q_snap, mu_hat, lam_hat, axis_name,
+        )
+        gaps = jnp.abs(qs - total[None, :]).sum(
+            axis=1, dtype=jnp.int32
+        )
+        # psum (not sum-of-all_gather): statically replicated, so the
+        # P() out_spec passes shard_map's replication check
+        lam_sum = jax.lax.psum(lam_hat.sum(dtype=jnp.float32), axis_name)
+        return (
+            jnp.broadcast_to(total[None], q_view.shape),
+            jnp.broadcast_to(mu_merged[None], mu_hat.shape),
+            gaps, total, lam_sum,
+        )
+
+    per_f, shared = P(axis_name), P()
+    return _shard_map()(
+        shard_fn, mesh=mesh,
+        in_specs=(per_f, per_f, shared, per_f, per_f),
+        out_specs=(per_f, per_f, per_f, shared, shared),
+    )

@@ -7,7 +7,12 @@ from repro.serving.router import (
     run_simulation,
     run_simulation_reference,
 )
-from repro.serving.scanloop import run_simulation_scan
+from repro.serving.scanloop import (
+    run_fleet_simulation_scan,
+    run_fleet_workload_scan,
+    run_simulation_scan,
+    run_workload_scan,
+)
 
 __all__ = [
     "FleetRouter",
@@ -15,7 +20,10 @@ __all__ = [
     "SequentialPool",
     "SimulatedPool",
     "run_fleet_simulation",
+    "run_fleet_simulation_scan",
+    "run_fleet_workload_scan",
     "run_simulation",
     "run_simulation_reference",
     "run_simulation_scan",
+    "run_workload_scan",
 ]

@@ -429,7 +429,23 @@ class FleetRouter:
                  herd_correction: bool = False, use_alias: bool = True):
         self.S = n_frontends
         self.n = n_replicas
-        self.herd_correction = herd_correction
+        # herd_correction generalizes to a PER-FRONTEND scalar strength:
+        # bool → 1.0/0.0 fleet-wide (back-compat, bitwise: a ×1.0 is
+        # exact), a float applies fleet-wide, a length-S sequence sets
+        # each frontend's own correction gain — the knob the fleet scan
+        # carries per frontend (FleetServeCarry.herd_scale), so the
+        # p50/p99 trade can be explored per frontend instead of all-on/
+        # all-off.
+        hs = np.asarray(herd_correction, np.float32)
+        if hs.ndim == 0:
+            hs = np.full((n_frontends,), float(hs), np.float32)
+        if hs.shape != (n_frontends,):
+            raise ValueError(
+                f"herd_correction: expected scalar or length-{n_frontends}"
+                f" sequence, got shape {hs.shape}"
+            )
+        self.herd_scale = hs
+        self.herd_correction = bool(hs.any())
         # frontend 0 inherits the base seed verbatim so the S=1 fleet is
         # stream-identical to a single RosellaRouter (use_alias included:
         # False forces every frontend onto the inverse-CDF stream)
@@ -449,14 +465,17 @@ class FleetRouter:
         """Frontend ``f``'s serving turn (completion flush + benchmark draw
         + batch route) against its own stale view."""
         fr = self.frontends[f]
-        if self.herd_correction and self.S > 1:
-            # keep q_view inflated by the CURRENT expected peer placements:
-            # apply only the increment over what is already folded in (the
-            # whole correction is discarded at the next sync reconcile)
+        if self.herd_scale[f] and self.S > 1:
+            # keep q_view inflated by the CURRENT expected peer placements
+            # (scaled by this frontend's correction gain): apply only the
+            # increment over what is already folded in (the whole
+            # correction is discarded at the next sync reconcile)
             lam_f = float(est.lam_hat_ema(fr.arr))
-            want = np.round(np.asarray(cfl.expected_peer_placements(
-                lam_f, now - self.t_sync, fr.mu_front, self.S
-            ))).astype(np.int64)
+            want = np.round(self.herd_scale[f] * np.asarray(
+                cfl.expected_peer_placements(
+                    lam_f, now - self.t_sync, fr.mu_front, self.S
+                )
+            )).astype(np.int64)
             delta = want - self._herd_applied[f]
             if delta.any():
                 fr.q_view = fr.q_view + jnp.asarray(delta, jnp.int32)

@@ -201,11 +201,11 @@ def _build_scan(n, k, comp_cap, pend_cap, policy, max_fake, use_alias,
         # -- append the new in-flight work: compact survivors to the front
         #    (insertion order), then write fakes-then-reals behind them
         pkey = jnp.where(p_valid, p_seq, jnp.iinfo(jnp.int32).max)
-        perm = jnp.argsort(pkey)
+        perm = jnp.argsort(pkey).astype(jnp.int32)
         p_done, p_start, p_rep, p_seq, p_valid = (
             p_done[perm], p_start[perm], p_rep[perm], p_seq[perm], p_valid[perm]
         )
-        nv = jnp.sum(p_valid)
+        nv = jnp.sum(p_valid, dtype=jnp.int32)
         pos = jnp.cumsum(act.astype(jnp.int32)) - 1
         slot = jnp.where(act, nv + pos, pend_cap)  # inactive fakes drop
         p_done = p_done.at[slot].set(sub_done, mode="drop")
@@ -221,7 +221,12 @@ def _build_scan(n, k, comp_cap, pend_cap, policy, max_fake, use_alias,
                  over_flush, over_pend)
         return carry, (resp, mu_tr)
 
-    @jax.jit
+    # carry buffers are DONATED: the output carry reuses the input's
+    # storage, so a chunked driver streams a long horizon through repeated
+    # invocations with no host round-trip and no per-chunk reallocation —
+    # the previous chunk's carry is consumed in place (its buffers read
+    # back .is_deleted(); callers must not touch a donated carry again)
+    @functools.partial(jax.jit, donate_argnums=(1,))
     def run(lcfg, carry0, xs):
         return jax.lax.scan(functools.partial(body, lcfg), carry0, xs)
 
@@ -282,6 +287,12 @@ def run_workload_scan(
     # request cost — rejoin probes must be cost-calibrated with real
     # traffic or the rejoined worker's μ̂ rebuilds ~4× high
     pend_cap: int = PEND_CAP,
+    chunk_turns: int | None = None,  # stream the horizon through scans of
+    # ≤ this many turns: the DONATED carry flows device-to-device across
+    # chunk boundaries (no host round-trip), so arbitrarily long horizons
+    # run at a bounded xs footprint. Bit-identical to one unchunked scan
+    # (a scan over T is the composition of scans over its chunks). The
+    # tail chunk compiles its own program when T % chunk_turns != 0.
 ):
     """Scan-compile a PRE-MATERIALIZED workload — the environment engine's
     entry point (``repro.env``): any scenario that can lay out its arrival
@@ -320,10 +331,10 @@ def run_workload_scan(
     from jax.experimental import enable_x64
 
     with enable_x64():
-        xs = (
-            jnp.asarray(times_np, jnp.float64),
-            jnp.asarray(costs_np, jnp.float64),
-            jnp.asarray(speeds_np, jnp.float64),
+        xs_np = (
+            np.asarray(times_np, np.float64),
+            np.asarray(costs_np, np.float64),
+            np.asarray(speeds_np, np.float64),
         )
         if churn:
             rej = (
@@ -334,10 +345,10 @@ def run_workload_scan(
                 burst_np if burst_np is not None
                 else np.zeros((T, 0), np.int32)
             )
-            xs = xs + (
-                jnp.asarray(active_np, bool),
-                jnp.asarray(rej, bool),
-                jnp.asarray(bw, jnp.int32),
+            xs_np = xs_np + (
+                np.asarray(active_np, bool),
+                np.asarray(rej, bool),
+                np.asarray(bw, np.int32),
             )
         carry0 = (
             jnp.asarray(router.q_view),
@@ -363,9 +374,22 @@ def run_workload_scan(
             router.policy, 8, router.use_alias, fake_cost,
             churn, burst_cap, float(burst_cost),
         )
-        carry, (resp, mu_trace) = run(router.lcfg, carry0, xs)
-        resp = np.asarray(resp).reshape(-1)
-        mu_trace = np.asarray(mu_trace)
+        step = T if chunk_turns is None else max(int(chunk_turns), 1)
+        carry = carry0
+        resp_l, mu_l = [], []
+        for s in range(0, T, step):
+            xs = tuple(
+                jnp.asarray(x[s:s + step]) for x in xs_np
+            )
+            carry, (resp_c, mu_c) = run(router.lcfg, carry, xs)
+            resp_l.append(resp_c)
+            mu_l.append(mu_c)
+        if resp_l:
+            resp = np.concatenate([np.asarray(r) for r in resp_l]).reshape(-1)
+            mu_trace = np.concatenate([np.asarray(m) for m in mu_l])
+        else:
+            resp = np.empty(0)
+            mu_trace = np.zeros((0, n), np.float32)
         info = {
             "turns": T,
             "flush_overflow": int(carry[-2]),
@@ -392,3 +416,591 @@ def run_workload_scan(
             router.mu_front, router.active
         )
     return resp, mu_trace, info
+
+
+# ---------------------------------------------------------------------------
+# One-program fleet: S frontends × environment × serving loop in ONE scan
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=8)
+def _build_fleet_scan(n, S, k_f, comp_cap, pend_cap, policy, max_fake,
+                      use_alias, fake_cost, sync_every, frozen_mu,
+                      churn=False, burst_cap=0, burst_cost=0.0, mesh=None):
+    """Compile-once factory for the FLEET scan program: S full frontends
+    (stale views, learners, λ̂ streams, double-buffered μ̂, herd
+    bookkeeping — a ``FleetServeCarry``) ride the carry alongside the env
+    columns and the shared replica pool, with a sync-round fold every
+    ``sync_every`` turns under a ``lax.cond`` — so an S-frontend churn/
+    interference episode is ONE compiled program, and at S=1 the traced
+    math collapses to ``_build_scan``'s bit-for-bit.
+
+    Per turn, in the host fleet loop's order (``run_fleet_simulation`` /
+    ``env.serving.run_workload``): membership transition (per-frontend
+    learner cold-start + forced μ̂ flip) → sync round (delta-reconciled
+    global view, μ̂ merge, λ̂ sum, herd unwind — masked under churn) →
+    per-frontend completion flush from the shared pending set → herd
+    correction + μ̂ front-buffer flips → S serving turns in one vmapped
+    engine call (``scheduler.serve_step_fleet``) → the shared pool chain
+    (every frontend's fakes, probe bursts, then all reals in global
+    arrival order) → pending-set append.
+
+    ``frozen_mu=False`` (default) is the host-parity mode: each frontend
+    routes on its own post-fold learner μ̂ exactly like a deterministic
+    ``async_mu=False`` ``RosellaRouter``. ``frozen_mu=True`` is the
+    FleetSimState regime: routing reads the carried ``mu_front`` rows and
+    draws through the carried per-frontend alias tables, which rebuild
+    ONLY at sync rounds and membership flips — the O(1)-amortized fleet
+    hot path.
+
+    ``mesh`` (optional, hashable) shards the frontend axis: the serve
+    stage runs inside ``shard_map`` with NO collectives and the sync fold
+    runs the ``fleet/sync`` psum/pmean/all_gather collectives — sync
+    rounds are the only scheduler collectives in the loop (the shared
+    pool/pending bookkeeping is the ENVIRONMENT's data motion: requests
+    reaching workers and completions returning — physical in any
+    deployment, and left to the partitioner)."""
+    from repro.core import dispatch as dsp
+    from repro.core import estimator as est
+    from repro.fleet import conflict as cfl
+    from repro.fleet import sync as fsync
+    from repro.fleet.state import FleetServeCarry  # noqa: F401 (carry type)
+
+    use_fresh = not frozen_mu
+    k = S * k_f
+    if mesh is not None:
+        serve_stage = fsync.make_fleet_serve_stage(
+            mesh, k_f, policy, max_fake=max_fake, use_fresh_mu=use_fresh,
+            use_alias=use_alias, churn=churn,
+        )
+        sync_stage = fsync.make_fleet_scan_sync(mesh)
+
+    def body(lcfg, carry, xs):
+        (fl, free_at, p_done, p_start, p_rep, p_seq, p_fr, p_valid,
+         seq_ctr, turn, over_flush, over_pend) = carry
+        if churn:
+            (times64, costs64, speeds64, active_t, rejoin_t, changed_t,
+             burst_t) = xs
+        else:
+            times64, costs64, speeds64 = xs
+            active_t = rejoin_t = changed_t = None
+            burst_t = jnp.zeros((0,), jnp.int32)
+        t64 = times64[-1]
+        t32 = t64.astype(jnp.float32)
+
+        learner = fl.learner
+        mu_front = fl.mu_front
+        mu_pend = fl.mu_pend
+        tables = fl.tables
+
+        # -- membership transition: EVERY frontend cold-starts the
+        #    rejoined workers (host: sync()/set_membership per frontend),
+        #    and a change turn forces the per-frontend μ̂ flip + masked
+        #    table rebuild — after this, no frontend can route offline
+        if churn:
+            learner = jax.lax.cond(
+                jnp.any(rejoin_t),
+                lambda l: jax.vmap(
+                    lambda lf: lrn.reset_workers(lf, rejoin_t, t32, active_t)
+                )(l),
+                lambda l: l,
+                learner,
+            )
+            mu_front = jnp.where(changed_t, learner.mu_hat, mu_front)
+            mu_pend = jnp.where(changed_t, False, mu_pend)
+            if frozen_mu and use_alias:
+                tables = jax.lax.cond(
+                    changed_t,
+                    lambda mu_tb: jax.vmap(
+                        lambda mrow: dsp.build_alias_table(mrow, active_t)
+                    )(mu_tb[0]),
+                    lambda mu_tb: mu_tb[1],
+                    (mu_front, tables),
+                )
+
+        # -- sync round every sync_every turns (turn 0 included, like the
+        #    host loop): herd corrections unwind, per-frontend deltas sum
+        #    onto the agreed snapshot, μ̂ merges, λ̂ streams sum. At S=1
+        #    the fold is a numeric no-op on q (views are exact), so the
+        #    single-scan bit-equality survives any cadence.
+        lam_f = est.lam_hat_ema(fl.arr)  # f32[S], pre-serve (host order)
+
+        def sync_fn(op):
+            q_view, herd_applied, q_snap, lrn_, mu_f, mu_p, tbl = op
+            if mesh is not None:
+                q2, mu2, gaps, global_q, lam_sum = sync_stage(
+                    q_view, herd_applied, q_snap, lrn_.mu_hat, lam_f,
+                )
+                mu_merged = mu2[0]
+            else:
+                qs = q_view - herd_applied
+                deltas = qs - q_snap[None, :]
+                # explicit i32 accumulators: this fold traces under the
+                # x64 context, where default integer sums widen to i64
+                global_q = jnp.maximum(
+                    q_snap + deltas.sum(axis=0, dtype=jnp.int32), 0
+                )
+                gaps = jnp.abs(qs - global_q[None, :]).sum(
+                    axis=1, dtype=jnp.int32
+                )
+                mu_merged = lrn.sync_estimates(lrn_.mu_hat)
+                q2 = jnp.broadcast_to(global_q[None], q_view.shape)
+                mu2 = jnp.broadcast_to(mu_merged[None], mu_f.shape)
+                lam_sum = jnp.sum(lam_f)
+            if frozen_mu and use_alias:
+                tb = dsp.build_alias_table(mu_merged, active_t)
+                tbl = dsp.AliasTable(
+                    prob=jnp.broadcast_to(tb.prob[None], (S, n)),
+                    alias=jnp.broadcast_to(tb.alias[None], (S, n)),
+                )
+            return (q2, jnp.zeros_like(herd_applied), global_q, mu2,
+                    jnp.zeros_like(mu_p), tbl, t32,
+                    lam_sum.astype(jnp.float32), gaps.astype(jnp.int32))
+
+        def no_sync_fn(op):
+            q_view, herd_applied, q_snap, lrn_, mu_f, mu_p, tbl = op
+            return (q_view, herd_applied, q_snap, mu_f, mu_p, tbl,
+                    fl.t_sync, fl.lam_global,
+                    jnp.zeros((S,), jnp.int32))
+
+        did_sync = (turn % sync_every) == 0
+        (q_view, herd_applied, q_snap, mu_front, mu_pend, tables, t_sync,
+         lam_global, gaps) = jax.lax.cond(
+            did_sync, sync_fn, no_sync_fn,
+            (fl.q_view, fl.herd_applied, fl.q_snap, learner, mu_front,
+             mu_pend, tables),
+        )
+
+        # -- per-frontend completion flush from the SHARED pending set:
+        #    completions return to the frontend that placed them; within a
+        #    frontend, oldest done first, stable by insertion — the single
+        #    scan's exact flush math vmapped over the p_fr partition
+        due = p_valid & (p_done <= t64)
+        fmask = due[None, :] & (
+            p_fr[None, :] == jnp.arange(S, dtype=jnp.int32)[:, None]
+        )
+
+        def flushf(fm):
+            n_due = jnp.sum(fm)
+            keydone = jnp.where(fm, p_done, jnp.inf)
+            # i32 scatter/gather indices: the x64 context makes lexsort
+            # return i64, which the SPMD partitioner (mesh path) rejects
+            # when it mixes with its own i32 shard offsets
+            order = jnp.lexsort((p_seq, keydone)).astype(jnp.int32)
+            sel = order[:comp_cap]
+            rank_ok = jnp.arange(comp_cap) < n_due
+            comp_w = jnp.where(rank_ok, p_rep[sel], -1).astype(jnp.int32)
+            comp_t = jnp.where(
+                rank_ok, (p_done[sel] - p_start[sel]).astype(jnp.float32),
+                0.0,
+            ).astype(jnp.float32)
+            comp_now64 = jnp.max(jnp.where(rank_ok, p_done[sel], -jnp.inf))
+            comp_now32 = jnp.where(n_due > 0, comp_now64, t64).astype(
+                jnp.float32
+            )
+            flushed = jnp.zeros_like(p_valid).at[sel].set(rank_ok)
+            return comp_w, comp_t, comp_now32, flushed, n_due
+
+        comp_w, comp_t, comp_now32, flushed_f, n_due_f = jax.vmap(flushf)(
+            fmask
+        )
+        p_valid = p_valid & ~jnp.any(flushed_f, axis=0)
+        over_flush = over_flush + jnp.sum(
+            jnp.maximum(n_due_f - comp_cap, 0)
+        ).astype(jnp.int32)
+
+        # -- herd correction (pre-flip mu_front, like the host): inflate
+        #    each view by the expected peer placements since its last sync,
+        #    incrementally over what is already folded in. Zero at S=1 (the
+        #    (S−1) factor) and wherever herd_scale is 0 — exact no-ops.
+        want = jnp.round(
+            fl.herd_scale[:, None] * jax.vmap(
+                lambda lf, mu: cfl.expected_peer_placements(
+                    lf, t32 - t_sync, mu, S
+                )
+            )(lam_f, mu_front)
+        ).astype(jnp.int32)
+        q_view = q_view + (want - herd_applied)
+        herd_applied = want
+
+        # -- μ̂ front-buffer flip per frontend (deterministic _flip_mu: a
+        #    pending refresh is always this frontend's own learner μ̂)
+        mu_front = jnp.where(mu_pend[:, None], learner.mu_hat, mu_front)
+
+        # -- S serving turns in one vmapped engine call (or one shard_map
+        #    with NO collectives on the sharded path)
+        if mesh is not None:
+            dummy = jnp.zeros((S, n), jnp.float32)
+            tbp, tba = (
+                (tables.prob, tables.alias) if tables is not None
+                else (dummy, dummy.astype(jnp.int32))
+            )
+            msk = (
+                active_t if churn
+                else jnp.ones((n,), bool)
+            )
+            fake_js, workers, q_view, learner, arr, key = serve_stage(
+                q_view, learner, fl.arr, mu_front, fl.key, comp_w, comp_t,
+                fl.last_fake, comp_now32, t32, lcfg, tbp, tba, msk,
+            )
+        else:
+            fake_js, workers, q_view, learner, arr, key = (
+                rs.serve_step_fleet(
+                    q_view, learner, fl.arr, mu_front, lcfg, fl.key,
+                    comp_w, comp_t, (t32, fl.last_fake, comp_now32),
+                    k_f, policy, max_fake, use_fresh, tables, use_alias,
+                    active_t,
+                )
+            )
+        last_fake = jnp.full((S,), t32)
+        mu_pend = n_due_f > 0  # a flush arms the next flip (host serve_turn)
+        mu_tr = mu_front[0]  # the trace row run_fleet_simulation samples
+
+        # -- shared replica-pool chain: every frontend's fakes (frontend
+        #    order), probe bursts, then ALL reals in global arrival order —
+        #    the host loop's submit_batch sequence, one exact recurrence
+        burst_fr = (
+            jnp.arange(burst_cap, dtype=jnp.int32) % S if burst_cap
+            else jnp.zeros((0,), jnp.int32)
+        )
+        act = jnp.concatenate(
+            [(fake_js >= 0).reshape(-1), burst_t >= 0, jnp.ones((k,), bool)]
+        )
+        sub_w = jnp.concatenate(
+            [jnp.maximum(fake_js, 0).reshape(-1), jnp.maximum(burst_t, 0),
+             workers.reshape(-1)]
+        )
+        sub_arr = jnp.concatenate(
+            [jnp.full((S * max_fake + burst_cap,), t64), times64]
+        )
+        sub_cost = jnp.concatenate(
+            [jnp.full((S * max_fake,), fake_cost),
+             jnp.full((burst_cap,), burst_cost), costs64]
+        )
+        sub_fr = jnp.concatenate(
+            [jnp.repeat(jnp.arange(S, dtype=jnp.int32), max_fake),
+             burst_fr,
+             jnp.repeat(jnp.arange(S, dtype=jnp.int32), k_f)]
+        )
+
+        # fori_loop with i32 bounds, not lax.scan: under the x64 context
+        # scan's induction counter is i64, and the SPMD partitioner (mesh
+        # path) rejects the i64-indexed ys-stacking it emits. Same
+        # sequential recurrence, bit-identical results.
+        L = sub_w.shape[0]
+
+        def pstep(i, st):
+            fa, ss, sd = st
+            w = sub_w[i]
+            start = jnp.maximum(sub_arr[i], fa[w])
+            done = start + sub_cost[i] / speeds64[w]
+            fa = jnp.where(act[i], fa.at[w].set(done), fa)
+            return fa, ss.at[i].set(start), sd.at[i].set(done)
+
+        free_at, sub_start, sub_done = jax.lax.fori_loop(
+            jnp.int32(0), jnp.int32(L), pstep,
+            (free_at, jnp.zeros((L,), jnp.float64),
+             jnp.zeros((L,), jnp.float64)),
+        )
+        resp = sub_done[S * max_fake + burst_cap:] - times64  # f64[k]
+
+        # -- pending-set append (single scan's compaction + the p_fr tag)
+        pkey = jnp.where(p_valid, p_seq, jnp.iinfo(jnp.int32).max)
+        perm = jnp.argsort(pkey).astype(jnp.int32)
+        p_done, p_start, p_rep, p_seq, p_fr, p_valid = (
+            p_done[perm], p_start[perm], p_rep[perm], p_seq[perm],
+            p_fr[perm], p_valid[perm]
+        )
+        nv = jnp.sum(p_valid, dtype=jnp.int32)
+        pos = jnp.cumsum(act.astype(jnp.int32)) - 1
+        slot = jnp.where(act, nv + pos, pend_cap)
+        p_done = p_done.at[slot].set(sub_done, mode="drop")
+        p_start = p_start.at[slot].set(sub_start, mode="drop")
+        p_rep = p_rep.at[slot].set(sub_w.astype(jnp.int32), mode="drop")
+        p_seq = p_seq.at[slot].set(seq_ctr + pos, mode="drop")
+        p_fr = p_fr.at[slot].set(sub_fr, mode="drop")
+        p_valid = p_valid.at[slot].set(True, mode="drop")
+        over_pend = over_pend + jnp.sum(act & (slot >= pend_cap)).astype(
+            jnp.int32
+        )
+        seq_ctr = seq_ctr + jnp.sum(act).astype(jnp.int32)
+
+        fl = fl.replace(
+            q_view=q_view, learner=learner, arr=arr, key=key,
+            mu_front=mu_front, mu_pend=mu_pend, tables=tables,
+            herd_applied=herd_applied, last_fake=last_fake,
+            q_snap=q_snap, t_sync=t_sync, lam_global=lam_global,
+        )
+        carry = (fl, free_at, p_done, p_start, p_rep, p_seq, p_fr, p_valid,
+                 seq_ctr, turn + 1, over_flush, over_pend)
+        return carry, (resp, mu_tr, workers, did_sync, gaps)
+
+    @functools.partial(jax.jit, donate_argnums=(1,))
+    def run(lcfg, carry0, xs):
+        return jax.lax.scan(functools.partial(body, lcfg), carry0, xs)
+
+    return run
+
+
+def run_fleet_workload_scan(
+    router: "rt.FleetRouter",
+    pool: rt.SimulatedPool,
+    times_np: np.ndarray,  # f64[T, k] per-turn arrival times (global order)
+    costs_np: np.ndarray,  # f64[T, k]
+    speeds_np: np.ndarray,  # f64[T, n]
+    *,
+    active_np: np.ndarray | None = None,  # bool[T, n] membership per turn
+    rejoin_np: np.ndarray | None = None,  # bool[T, n] offline→online edges
+    burst_np: np.ndarray | None = None,  # i32[T, Bc] probe-burst targets
+    fake_cost: float = 0.25,
+    burst_cost: float | None = None,
+    pend_cap: int = PEND_CAP,
+    sync_every: int = 1,
+    frozen_mu: bool = False,
+    chunk_turns: int | None = None,
+    mesh=None,
+):
+    """The one-program FLEET over a pre-materialized workload: S frontends
+    × environment × serving loop as a single ``lax.scan`` (chunked when
+    ``chunk_turns`` streams a long horizon — the donated carry crosses
+    chunk boundaries device-side).
+
+    The arrival batch k must divide evenly over the S frontends (frontend
+    f owns the contiguous chunk ``times[:, f*k_f:(f+1)*k_f]`` — the host
+    ``run_fleet_simulation`` chunking at its equal-split shapes).
+
+    Parity contract (tests/test_fleet_scan.py): at S=1 the program is
+    bit-equal to ``run_workload_scan``; at S>1 with ``sync_every=1``,
+    ``frozen_mu=False`` and a ``SequentialPool``/``async_mu=False`` host
+    fleet, responses, μ̂ trace and final states match float-for-float.
+    ``frozen_mu=True`` instead routes on the carried per-frontend μ̂ views
+    and alias tables (rebuilt only at sync rounds/membership flips — the
+    FleetSimState amortization); ``mesh`` shards the frontend axis
+    (``fleet/sync`` stages: sync rounds are the only scheduler
+    collectives).
+
+    Returns ``(response_times, mu_trace, info)`` with
+    ``run_fleet_simulation``'s info keys (placement log, sync gaps, λ̂s)
+    plus the scan overflow counters."""
+    from repro.core import dispatch as dsp
+    from repro.core import estimator as est
+
+    T, k = times_np.shape
+    n = router.n
+    S = router.S
+    if k % S != 0:
+        raise ValueError(
+            f"arrival_batch={k} must divide evenly over S={S} frontends "
+            "on the scan path (the host loop's divmod chunks are only "
+            "equal-split when S | k)"
+        )
+    k_f = k // S
+    frs = router.frontends
+    use_alias = frs[0].use_alias
+    if active_np is None and frs[0].active is not None:
+        active_np = np.broadcast_to(
+            np.asarray(frs[0].active, bool), (T, n)
+        ).copy()
+    churn = active_np is not None
+    burst_cap = 0
+    if churn and burst_np is not None:
+        burst_cap = int(burst_np.shape[1])
+    if burst_cost is None:
+        burst_cost = 4.0 * fake_cost
+    sync_every = max(int(sync_every), 1)
+
+    from jax.experimental import enable_x64
+
+    with enable_x64():
+        xs_np = (
+            np.asarray(times_np, np.float64),
+            np.asarray(costs_np, np.float64),
+            np.asarray(speeds_np, np.float64),
+        )
+        if churn:
+            rej = (
+                rejoin_np if rejoin_np is not None
+                else np.zeros((T, n), bool)
+            )
+            bw = (
+                burst_np if burst_np is not None
+                else np.zeros((T, 0), np.int32)
+            )
+            changed = np.zeros((T,), bool)
+            if T:
+                changed[0] = True
+                changed[1:] = np.any(
+                    active_np[1:] != active_np[:-1], axis=1
+                )
+            xs_np = xs_np + (
+                np.asarray(active_np, bool),
+                np.asarray(rej, bool),
+                changed,
+                np.asarray(bw, np.int32),
+            )
+
+        from repro.fleet.state import FleetServeCarry
+
+        stackt = lambda trees: jax.tree.map(  # noqa: E731
+            lambda *ls: jnp.stack(ls), *trees
+        )
+        tables = None
+        if frozen_mu and use_alias:
+            tables = dsp.AliasTable(
+                prob=jnp.stack([jnp.asarray(fr.table_front.prob)
+                                for fr in frs]),
+                alias=jnp.stack([jnp.asarray(fr.table_front.alias)
+                                 for fr in frs]),
+            )
+        fl0 = FleetServeCarry(
+            q_view=jnp.stack([jnp.asarray(fr.q_view) for fr in frs]),
+            learner=stackt([fr.learner for fr in frs]),
+            arr=stackt([fr.arr for fr in frs]),
+            key=jnp.stack([jnp.asarray(fr.key) for fr in frs]),
+            mu_front=jnp.stack([jnp.asarray(fr.mu_front) for fr in frs]),
+            mu_pend=jnp.array(
+                [fr._mu_pending is not None for fr in frs]
+            ),
+            tables=tables,
+            herd_scale=jnp.asarray(
+                np.asarray(router.herd_scale, np.float32)
+            ),
+            herd_applied=jnp.asarray(router._herd_applied, jnp.int32),
+            last_fake=jnp.array(
+                [fr.last_fake_time for fr in frs], jnp.float32
+            ),
+            q_snap=jnp.asarray(router._snap, jnp.int32),
+            t_sync=jnp.float32(router.t_sync),
+            lam_global=jnp.float32(router.lam_global),
+        )
+        carry0 = (
+            fl0,
+            jnp.asarray(pool.free_at, jnp.float64),
+            jnp.full((pend_cap,), jnp.inf, jnp.float64),  # p_done
+            jnp.zeros((pend_cap,), jnp.float64),  # p_start
+            jnp.zeros((pend_cap,), jnp.int32),  # p_rep
+            jnp.zeros((pend_cap,), jnp.int32),  # p_seq
+            jnp.zeros((pend_cap,), jnp.int32),  # p_fr
+            jnp.zeros((pend_cap,), bool),  # p_valid
+            jnp.int32(0),  # seq_ctr
+            jnp.int32(0),  # turn
+            jnp.int32(0),  # over_flush
+            jnp.int32(0),  # over_pend
+        )
+        run = _build_fleet_scan(
+            n, S, k_f, min(rt.SERVE_COMP_CAP, pend_cap), pend_cap,
+            frs[0].policy, 8, use_alias, fake_cost, sync_every, frozen_mu,
+            churn, burst_cap, float(burst_cost), mesh,
+        )
+        step = T if chunk_turns is None else max(int(chunk_turns), 1)
+        carry = carry0
+        ys_l = []
+        for s in range(0, T, step):
+            xs = tuple(jnp.asarray(x[s:s + step]) for x in xs_np)
+            carry, ys = run(frs[0].lcfg, carry, xs)
+            ys_l.append(ys)
+        if ys_l:
+            resp = np.concatenate(
+                [np.asarray(y[0]) for y in ys_l]
+            ).reshape(-1)
+            mu_trace = np.concatenate([np.asarray(y[1]) for y in ys_l])
+            workers_log = np.concatenate([np.asarray(y[2]) for y in ys_l])
+            synced = np.concatenate([np.asarray(y[3]) for y in ys_l])
+            gaps = np.concatenate([np.asarray(y[4]) for y in ys_l])
+        else:
+            resp = np.empty(0)
+            mu_trace = np.zeros((0, n), np.float32)
+            workers_log = np.zeros((0, S, k_f), np.int32)
+            synced = np.zeros((0,), bool)
+            gaps = np.zeros((0, S), np.int32)
+
+        fl = carry[0]
+        mu_pend_np = np.asarray(fl.mu_pend)
+        for f, fr in enumerate(frs):
+            fr.q_view = jnp.asarray(np.asarray(fl.q_view[f]))
+            fr.learner = jax.tree.map(
+                lambda x: jnp.asarray(np.asarray(x[f])), fl.learner
+            )
+            fr.arr = jax.tree.map(
+                lambda x: jnp.asarray(np.asarray(x[f])), fl.arr
+            )
+            fr.key = jnp.asarray(np.asarray(fl.key[f]))
+            fr.last_fake_time = float(np.asarray(fl.last_fake)[f])
+            fr.mu_front = jnp.asarray(np.asarray(fl.mu_front[f]))
+            fr._mu_pending = (
+                fr.learner.mu_hat if bool(mu_pend_np[f]) else None
+            )
+            if churn:
+                fr.active = jnp.asarray(active_np[-1], bool)
+            if fr.use_alias:
+                fr.table_front = dsp.build_alias_table(
+                    fr.mu_front, fr.active
+                )
+        router._snap = np.asarray(fl.q_snap).astype(np.int64)
+        router._herd_applied = np.asarray(fl.herd_applied).astype(np.int64)
+        router.t_sync = float(np.asarray(fl.t_sync))
+        router.lam_global = float(np.asarray(fl.lam_global))
+        pool.free_at = np.asarray(carry[1])
+
+        info = {
+            "turns": T,
+            "flush_overflow": int(carry[-2]),
+            "pend_overflow": int(carry[-1]),
+            "frontends": np.tile(
+                np.repeat(np.arange(S, dtype=np.int64), k_f), T
+            ),
+            "workers": workers_log.reshape(-1).astype(np.int64),
+            "epochs": np.repeat(np.arange(T, dtype=np.int64) // sync_every,
+                                k),
+            "sync_gaps": (
+                gaps[synced].astype(np.int64) if S > 1
+                else np.zeros((0, S))
+            ),
+            "lam_hats": np.array(
+                [float(est.lam_hat_ema(fr.arr)) for fr in frs]
+            ),
+        }
+    return resp, mu_trace, info
+
+
+def run_fleet_simulation_scan(
+    router: "rt.FleetRouter",
+    pool: rt.SimulatedPool,
+    *,
+    arrival_rate: float,
+    horizon: float,
+    request_cost: float = 1.0,
+    speed_schedule: "list[tuple[float, np.ndarray]] | None" = None,
+    seed: int = 0,
+    arrival_batch: int = 1,
+    sync_every: int = 1,
+    pend_cap: int = PEND_CAP,
+    frozen_mu: bool = False,
+    chunk_turns: int | None = None,
+    mesh=None,
+):
+    """Drop-in for ``run_fleet_simulation`` with the whole S-frontend loop
+    scan-compiled (same RandomState workload precompute, so host and scan
+    fleets see identical arrivals). ``arrival_batch`` must be a multiple
+    of S. Returns ``(response_times, mu_trace, info)``."""
+    wl = _precompute_workload(
+        arrival_rate, horizon, request_cost, speed_schedule, seed,
+        arrival_batch, pool.speeds,
+    )
+    if wl is None:
+        S = router.S
+        return np.empty(0), np.zeros((0, router.n)), {
+            "turns": 0, "flush_overflow": 0, "pend_overflow": 0,
+            "frontends": np.empty(0, np.int64),
+            "workers": np.empty(0, np.int64),
+            "epochs": np.empty(0, np.int64),
+            "sync_gaps": np.zeros((0, S)),
+            "lam_hats": np.zeros(S),
+        }
+    times_np, costs_np, speeds_np = wl
+    return run_fleet_workload_scan(
+        router, pool, times_np, costs_np, speeds_np,
+        fake_cost=request_cost * 0.25, pend_cap=pend_cap,
+        sync_every=sync_every, frozen_mu=frozen_mu,
+        chunk_turns=chunk_turns, mesh=mesh,
+    )

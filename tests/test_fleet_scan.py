@@ -1,0 +1,314 @@
+"""One-program fleet scan (serving/scanloop.run_fleet_workload_scan): the
+composition matrix — S=1 bit-equality vs the single scan, S∈{2,4}
+float-for-float parity vs the host fleet loop, churn scenarios with
+membership-masked per-frontend views — plus carry donation across chunks,
+per-frontend herd gains, and the sharded (shard_map) execution path."""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro import env
+from repro.env.serving import run_scenario
+from repro.serving import (
+    FleetRouter,
+    RosellaRouter,
+    SequentialPool,
+    run_fleet_simulation,
+    run_fleet_simulation_scan,
+    run_simulation_scan,
+)
+from repro.serving import scanloop
+
+SPEEDS = np.array([0.25, 0.5, 1.0, 2.0])
+KW = dict(arrival_rate=3.0, horizon=80.0, seed=1, arrival_batch=8)
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _fleet(S, **kws):
+    r = FleetRouter(S, 4, mu_bar=SPEEDS.sum(), seed=0, async_mu=False, **kws)
+    return r, SequentialPool(SPEEDS)
+
+
+def _host_and_scan(S, sync_every, **kws):
+    rh, ph = _fleet(S, **kws)
+    resp_h, mu_h, _ = run_fleet_simulation(rh, ph, sync_every=sync_every,
+                                           **KW)
+    rs, ps = _fleet(S, **kws)
+    resp_s, mu_s, info = run_fleet_simulation_scan(
+        rs, ps, sync_every=sync_every, **KW
+    )
+    return (resp_h, mu_h, rh, ph), (resp_s, mu_s, rs, ps), info
+
+
+def test_fleet_scan_s1_bit_equality_vs_single_scan():
+    """At S=1 the fleet program's extra machinery (sync fold, herd terms,
+    frontend partition) is traced but numerically inert, so the whole run
+    is BIT-equal to run_simulation_scan: responses, μ̂ trace, replica
+    clocks, the PRNG key itself."""
+    ra = RosellaRouter(4, mu_bar=SPEEDS.sum(), seed=0, async_mu=False)
+    pa = SequentialPool(SPEEDS)
+    resp_a, mu_a, _ = run_simulation_scan(ra, pa, **KW)
+    rb, pb = _fleet(1)
+    resp_b, mu_b, info = run_fleet_simulation_scan(rb, pb, **KW)
+    assert info["flush_overflow"] == 0 and info["pend_overflow"] == 0
+    np.testing.assert_array_equal(resp_a, resp_b)
+    np.testing.assert_array_equal(mu_a, mu_b)
+    np.testing.assert_array_equal(np.asarray(pa.free_at),
+                                  np.asarray(pb.free_at))
+    fr = rb.frontends[0]
+    np.testing.assert_array_equal(np.asarray(ra.q_view),
+                                  np.asarray(fr.q_view))
+    np.testing.assert_array_equal(np.asarray(ra.learner.mu_hat),
+                                  np.asarray(fr.learner.mu_hat))
+    np.testing.assert_array_equal(np.asarray(ra.key), np.asarray(fr.key))
+
+
+def test_fleet_scan_s1_churn_bit_equality():
+    """The env composition at S=1: a churn scenario (membership masking,
+    learner cold-starts, rejoin probe bursts) through the fleet program is
+    bit-equal to the same workload through the single scan."""
+    scn = env.make("churn")
+    o1 = run_scenario(scn, use_scan=True, sequential_pool=True,
+                      arrival_batch=8, seed=0)
+    of = run_scenario(scn, use_scan=True, sequential_pool=True,
+                      arrival_batch=8, seed=0, n_frontends=1)
+    np.testing.assert_array_equal(o1["responses"], of["responses"])
+    np.testing.assert_array_equal(o1["mu_trace"], of["mu_trace"])
+
+
+@pytest.mark.parametrize("S,sync_every", [(2, 1), (4, 1), (2, 4)])
+def test_fleet_scan_host_parity(S, sync_every):
+    """S frontends in one scan reproduce the host fleet loop
+    (run_fleet_simulation, SequentialPool, deterministic async_mu=False)
+    float-for-float — at the every-turn sync cadence AND with stale views
+    (sync_every=4): responses, μ̂ trace, replica clocks, every frontend's
+    learner and queue view, the agreed snapshot."""
+    (resp_h, mu_h, rh, ph), (resp_s, mu_s, rs, ps), info = _host_and_scan(
+        S, sync_every
+    )
+    assert info["flush_overflow"] == 0 and info["pend_overflow"] == 0
+    np.testing.assert_array_equal(resp_h, resp_s)
+    np.testing.assert_array_equal(mu_h, mu_s)
+    np.testing.assert_array_equal(np.asarray(ph.free_at),
+                                  np.asarray(ps.free_at))
+    np.testing.assert_array_equal(rh._snap, rs._snap)
+    for fh, fs in zip(rh.frontends, rs.frontends):
+        np.testing.assert_array_equal(np.asarray(fh.q_view),
+                                      np.asarray(fs.q_view))
+        np.testing.assert_array_equal(np.asarray(fh.learner.mu_hat),
+                                      np.asarray(fs.learner.mu_hat))
+
+
+@pytest.mark.parametrize("name", ["churn", "churn_heavy"])
+def test_fleet_scan_churn_masked_views(name):
+    """Churn scenarios on the fleet path at S=4: every real placement
+    lands on a worker that is active THAT turn (the membership mask joins
+    each frontend's traced routing state), nothing overflows, and all
+    responses are finite."""
+    scn = env.make(name)
+    out = run_scenario(scn, use_scan=True, sequential_pool=True,
+                       arrival_batch=8, seed=0, n_frontends=4)
+    info, wl = out["info"], out["workload"]
+    assert info["flush_overflow"] == 0 and info["pend_overflow"] == 0
+    assert np.isfinite(out["responses"]).all()
+    placed = info["workers"].reshape(wl.turns, -1)
+    for t in range(wl.turns):
+        assert wl.active[t][placed[t]].all(), (name, t)
+
+
+def test_fleet_scan_frozen_mu_churn():
+    """The amortized frozen-μ̂ fleet (tables rebuilt only at sync rounds
+    and membership changes) survives heavy churn at a stale cadence:
+    routing never touches an inactive worker, responses stay finite."""
+    scn = env.make("churn_heavy")
+    out = run_scenario(scn, use_scan=True, sequential_pool=True,
+                       arrival_batch=8, seed=0, n_frontends=4,
+                       frozen_mu=True, sync_every=4)
+    info, wl = out["info"], out["workload"]
+    assert info["pend_overflow"] == 0
+    assert np.isfinite(out["responses"]).all()
+    placed = info["workers"].reshape(wl.turns, -1)
+    for t in range(wl.turns):
+        assert wl.active[t][placed[t]].all()
+
+
+def test_fleet_scan_chunked_bit_equal_and_carry_donated(monkeypatch):
+    """Chunked long-horizon driving is bit-equal to one shot, and every
+    chunk's input carry is DONATED to the compiled program (buffers
+    deleted, no host round-trip between chunks)."""
+    real_build = scanloop._build_fleet_scan
+    seen = []
+
+    def spy(*a, **k):
+        run = real_build(*a, **k)
+
+        def wrapped(lcfg, carry, xs):
+            seen.append(carry)
+            return run(lcfg, carry, xs)
+
+        return wrapped
+
+    r1, p1 = _fleet(2)
+    resp_a, mu_a, _ = run_fleet_simulation_scan(r1, p1, sync_every=1, **KW)
+    monkeypatch.setattr(scanloop, "_build_fleet_scan", spy)
+    r2, p2 = _fleet(2)
+    resp_b, mu_b, _ = run_fleet_simulation_scan(
+        r2, p2, sync_every=1, chunk_turns=7, **KW
+    )
+    np.testing.assert_array_equal(resp_a, resp_b)
+    np.testing.assert_array_equal(mu_a, mu_b)
+    assert len(seen) > 1  # the horizon actually spanned several chunks
+    leaves = [
+        leaf for carry in seen for leaf in jax.tree.leaves(carry)
+        if isinstance(leaf, jax.Array)
+    ]
+    assert leaves and all(leaf.is_deleted() for leaf in leaves)
+
+
+def test_fleet_scan_herd_scale_per_frontend():
+    """herd_correction generalizes to a per-frontend gain vector:
+    True ≡ all-ones (bitwise, the ×1.0 product is exact), a zeroed entry
+    turns that frontend's correction off (routing changes), and the
+    uniform-gain fleet still matches the host loop float-for-float."""
+    rt_, pt = _fleet(2, herd_correction=True)
+    resp_t, mu_t, _ = run_fleet_simulation_scan(rt_, pt, sync_every=4, **KW)
+    rv, pv = _fleet(2, herd_correction=[1.0, 1.0])
+    resp_v, _, _ = run_fleet_simulation_scan(rv, pv, sync_every=4, **KW)
+    np.testing.assert_array_equal(resp_t, resp_v)
+
+    rz, pz = _fleet(2, herd_correction=[1.0, 0.0])
+    resp_z, _, _ = run_fleet_simulation_scan(rz, pz, sync_every=4, **KW)
+    assert not np.array_equal(resp_t, resp_z)
+
+    rh, ph = _fleet(2, herd_correction=True)
+    resp_h, mu_h, _ = run_fleet_simulation(rh, ph, sync_every=4, **KW)
+    np.testing.assert_array_equal(resp_t, resp_h)
+    np.testing.assert_array_equal(mu_t, mu_h)
+
+    with pytest.raises(ValueError):
+        FleetRouter(2, 4, mu_bar=SPEEDS.sum(),
+                    herd_correction=[1.0, 1.0, 1.0])
+
+
+def test_fleet_scan_sharded_mesh_single_device():
+    """The shard_map execution path (serve stage + sync collectives) on a
+    1-device mesh is bit-equal to the stacked path: psum over one shard is
+    the identity, so the collectives change nothing but the partitioning."""
+    from jax.sharding import Mesh
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("sched",))
+    rm, pm = _fleet(4)
+    resp_m, mu_m, im = run_fleet_simulation_scan(
+        rm, pm, sync_every=1, mesh=mesh, **KW
+    )
+    rn, pn = _fleet(4)
+    resp_n, mu_n, _ = run_fleet_simulation_scan(rn, pn, sync_every=1, **KW)
+    assert im["pend_overflow"] == 0
+    np.testing.assert_array_equal(resp_m, resp_n)
+    np.testing.assert_array_equal(mu_m, mu_n)
+
+
+@pytest.mark.slow
+def test_fleet_scan_sharded_hostmesh_multi_device():
+    """S=4 frontends sharded over 4 forced host devices (and 2, exercising
+    the local-rows-vmap split) reproduce the stacked single-device run —
+    sync rounds are the ONLY collectives in the loop, and they reconcile
+    to the same agreed state."""
+    code = textwrap.dedent("""
+        import numpy as np, jax
+        from jax.sharding import Mesh
+        from repro.serving import (FleetRouter, SequentialPool,
+                                   run_fleet_simulation_scan)
+        SPEEDS = np.array([0.25, 0.5, 1.0, 2.0])
+        kw = dict(arrival_rate=3.0, horizon=60.0, seed=1, arrival_batch=8)
+        def fleet(S):
+            r = FleetRouter(S, 4, mu_bar=SPEEDS.sum(), seed=0,
+                            async_mu=False)
+            return r, SequentialPool(SPEEDS)
+        assert len(jax.devices()) == 4
+        rn, pn = fleet(4)
+        resp_n, mu_n, _ = run_fleet_simulation_scan(rn, pn, sync_every=1,
+                                                    **kw)
+        for D in (4, 2):
+            mesh = Mesh(np.array(jax.devices()[:D]), ("sched",))
+            rm, pm = fleet(4)
+            resp_m, mu_m, _ = run_fleet_simulation_scan(
+                rm, pm, sync_every=1, mesh=mesh, **kw)
+            assert np.allclose(resp_m, resp_n), D
+            assert np.allclose(mu_m, mu_n), D
+        print("OK")
+    """)
+    env_ = dict(os.environ)
+    env_["XLA_FLAGS"] = (
+        env_.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=4"
+    ).strip()
+    env_["PYTHONPATH"] = str(REPO / "src") + os.pathsep + env_.get(
+        "PYTHONPATH", ""
+    )
+    out = subprocess.run([sys.executable, "-c", code], env=env_,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout
+
+
+def test_fleet_scan_rejects_unsplittable_batch():
+    """S must divide the arrival batch — both the workload partition and
+    the fleet runner refuse a ragged frontend split up front."""
+    scn = env.make("null")
+    wl = scn.compile_serving(seed=0, arrival_batch=8)
+    with pytest.raises(ValueError):
+        wl.partition(3)
+    r, p = _fleet(3)
+    with pytest.raises(ValueError):
+        run_fleet_simulation_scan(r, p, arrival_rate=3.0, horizon=20.0,
+                                  seed=0, arrival_batch=8)
+
+
+def test_fleet_scan_empty_horizon():
+    r, p = _fleet(2)
+    resp, mu, info = run_fleet_simulation_scan(
+        r, p, arrival_rate=3.0, horizon=0.0, seed=0, arrival_batch=4
+    )
+    assert len(resp) == 0 and info["turns"] == 0
+
+
+def test_fleet_bench_collision_rate_pinned():
+    """Regression pin on the committed BENCH_fleet.json S=4 staleness
+    sweep: collisions are zero at sync_every=1, grow monotonically with
+    staleness, and the sync_every=4 operating point stays in the band the
+    herd-correction analysis was calibrated against."""
+    bench = json.load(open(REPO / "BENCH_fleet.json"))
+    sweep = bench["pr3_baseline"]["staleness_sweep"]
+    assert sweep["S"] == 4
+    rates = [
+        sweep["sweep"][k]["collision_rate"]
+        for k in sorted(sweep["sweep"],
+                        key=lambda k: sweep["sweep"][k]["sync_every_rounds"])
+    ]
+    assert rates[0] == 0.0
+    assert all(a <= b for a, b in zip(rates, rates[1:]))
+    c4 = sweep["sweep"]["sync4"]["collision_rate"]
+    assert 0.01 < c4 < 0.15, c4
+
+
+def test_fleet_bench_scan_fleet_record():
+    """The committed scan_fleet record carries the one-program fleet's
+    scaling claim (modeled aggregate ≥3× S=1→S=8 at the same total
+    arrival rate), the CI smoke reference, and the preserved PR-3
+    baseline."""
+    bench = json.load(open(REPO / "BENCH_fleet.json"))
+    scan = bench["scan_fleet"]
+    assert set(scan["by_S"]) == {"1", "2", "4", "8"}
+    assert scan["scaling_S8_vs_S1_modeled"] >= 3.0
+    assert scan["meets_3x_bar"]
+    assert bench["smoke_reference"]["dec_per_s"] > 0
+    assert bench["pr3_baseline"]["s1_parity"]["bit_equal"]
