@@ -17,7 +17,7 @@ python -m pytest -x -q -m "not slow" \
     tests/test_learner.py tests/test_theory.py tests/test_fleet.py \
     tests/test_router_and_straggler.py tests/test_properties.py \
     tests/test_alias.py tests/test_scanloop.py tests/test_env.py \
-    tests/test_fleet_scan.py
+    tests/test_fleet_scan.py tests/test_faults.py
 
 # ~10 s engine smoke: all policies, reduced shapes
 timeout 120 python benchmarks/sched_throughput.py --smoke
@@ -111,6 +111,40 @@ try:
         print("scenario-smoke: no smoke_reference in BENCH_scenarios.json")
 except Exception as e:  # advisory only — never fail CI on the smoke
     print(f"scenario-smoke: skipped ({e})")
+EOF
+
+# non-gating fault smoke: reduced-shape fault-scenario × recovery grid
+# (gitignored BENCH_faults_smoke.json), compared against the
+# smoke_reference section of the committed BENCH_faults.json — warn
+# beyond a 20% bench-throughput drop (advisory on this container)
+timeout 600 python benchmarks/fault_suite.py --smoke || true
+python - <<'EOF' || true
+import json
+try:
+    fresh = json.load(open("BENCH_faults_smoke.json"))["scenarios"]
+    ref = json.load(open("BENCH_faults.json")).get("smoke_reference", {})
+    worst = None
+    for name, entry in fresh.items():
+        for pname, cells in entry["policies"].items():
+            for cname, rec in cells.items():
+                want = (ref.get(name, {}).get(pname, {}).get(cname, {})
+                        .get("bench_throughput_rps"))
+                got = rec.get("bench_throughput_rps")
+                if want and got:
+                    r = got / want
+                    if worst is None or r < worst[0]:
+                        worst = (r, f"{name}/{pname}/{cname}", got, want)
+    if worst:
+        r, cell, got, want = worst
+        line = (f"fault-smoke: worst {cell} {got:.0f} req/s vs "
+                f"committed {want:.0f} ({r:.2f}x)")
+        if r < 0.8:
+            line += "  ** WARNING: >20% below the committed reference **"
+        print(line)
+    else:
+        print("fault-smoke: no smoke_reference in BENCH_faults.json")
+except Exception as e:  # advisory only — never fail CI on the smoke
+    print(f"fault-smoke: skipped ({e})")
 EOF
 
 # informational: full not-slow suite (known model-layer failures tolerated)

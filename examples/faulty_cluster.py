@@ -1,0 +1,76 @@
+"""Failure semantics end to end: crashes kill in-flight work, timeouts
+catch the victims, retries re-place them under the CURRENT policy view.
+
+The ``crash_storm`` scenario fails every non-anchor worker at random
+(~Exp(110 s) up, ~Exp(35 s) down): each crash empties the worker's
+in-flight copies. Without a recovery layer those tasks are simply LOST —
+the conservation ledger records every one. With ``RecoveryConfig``
+armed, each launched copy carries a deadline (a multiple of its expected
+service under the live μ̂); a killed or overdue copy re-enters the
+dispatch stream with exponential backoff, re-placed wherever the
+CURRENT membership + μ̂ say is best — and slow survivors are additionally
+backed up by speculative re-execution (``dist/straggler`` planner).
+
+The printout walks one run each way and shows the ledger closing:
+every task completed or lost, every copy completed or killed — then the
+robustness report (goodput vs throughput, retry amplification, p999).
+
+Run:  PYTHONPATH=src python examples/faulty_cluster.py
+"""
+import numpy as np
+
+from repro import env
+from repro.core import metrics as M
+from repro.serving import RecoveryConfig
+
+
+def show(tag, out, horizon):
+    led = out["info"]["ledger"]
+    rep = M.fault_report(out["responses"], led, horizon=horizon)
+    print(f"\n-- {tag}")
+    print(f"  tasks arrived {led['n_tasks']}: completed "
+          f"{led['completed_tasks']}, lost {led['lost_tasks']} "
+          f"(loss rate {rep['loss_rate']:.3%})")
+    print(f"  real copies launched {led['copies_real_launched']} "
+          f"(= tasks + {led['n_retries']} retries + {led['n_spec']} "
+          f"speculative), completed {led['copies_real_completed']}, "
+          f"killed {led['copies_real_killed']}")
+    print(f"  timeouts {led['n_timeouts']}, dirty completions "
+          f"{led['n_dirty_completions']} (drained, never fed to the "
+          f"learner; max clean service {led['max_clean_service']:.2f}s)")
+    ok, residuals = M.check_conservation(led)
+    print(f"  conservation: {'BALANCED' if ok else residuals}")
+    print(f"  goodput {rep['goodput']:.2f} tasks/s vs throughput "
+          f"{rep['throughput']:.2f} copies/s "
+          f"(amplification {rep['retry_amplification']:.3f}x)")
+    print(f"  latency p50={rep['p50']:.2f}  p99={rep['p99']:.2f}  "
+          f"p999={rep['p999']:.2f}")
+    return led
+
+
+def main():
+    scn = env.make("crash_storm")
+    print(f"cluster speeds {np.asarray(scn.speeds)}, horizon "
+          f"{scn.horizon:.0f}s — every non-anchor worker crashes "
+          f"~Exp(110s) and recovers ~Exp(35s) later")
+
+    bare = env.run_scenario(scn, seed=0, use_scan=True,
+                            sequential_pool=True)
+    led_b = show("faults only (no recovery): kills become losses",
+                 bare, scn.horizon)
+
+    rc = RecoveryConfig(timeout_mult=8.0, retry_budget=2, retry_cap=4,
+                        spec_cap=2, spec_ratio=3.0)
+    armed = env.run_scenario(scn, seed=0, use_scan=True,
+                             sequential_pool=True, recovery=rc)
+    led_a = show("timeout + retry + speculation: kills get re-dispatched",
+                 armed, scn.horizon)
+
+    rescued = led_b["lost_tasks"] - led_a["lost_tasks"]
+    print(f"\nrecovery rescued {rescued}/{led_b['lost_tasks']} of the "
+          f"lost tasks (a copy killed in the final turns can stay lost — "
+          f"no turn remains to re-place it)")
+
+
+if __name__ == "__main__":
+    main()

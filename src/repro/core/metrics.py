@@ -26,6 +26,7 @@ class TraceMetrics:
     mu_hat_trace: np.ndarray | None  # f32[T, n] (if traced)
     times: np.ndarray  # f64[T] event times
     lam_hat: np.ndarray  # f32[T]
+    killed_jobs: int = 0  # jobs with ≥1 task killed by a worker crash
 
 
 def analyze(trace, n: int, warmup_frac: float = 0.0) -> TraceMetrics:
@@ -35,10 +36,30 @@ def analyze(trace, n: int, warmup_frac: float = 0.0) -> TraceMetrics:
     T = code.shape[0]
 
     # --- per-worker real-completion timestamps, in order -------------------
+    # Crash kills consume completion ordinals without emitting EV_REAL_DONE
+    # rows (simulator bumps s_real by the killed count), so the per-worker
+    # timeline interleaves completion timestamps with NaN blocks — one NaN
+    # per killed ordinal, in chain-round order. A job whose task maps to a
+    # NaN ordinal was killed, not censored.
+    killed = np.asarray(trace["killed"]) if "killed" in trace else None
+    has_kills = killed is not None and killed.size and killed.any()
     comp_times: list[np.ndarray] = []
     for w in range(n):
         mask = (code == sim.EV_REAL_DONE) & (worker == w)
-        comp_times.append(now[mask])
+        if not has_kills:
+            comp_times.append(now[mask])
+            continue
+        comp_rows = np.nonzero(mask)[0]
+        kill_rows = np.nonzero(killed[:, w] > 0)[0]
+        rows = np.concatenate([comp_rows, kill_rows])
+        vals = np.concatenate(
+            [now[comp_rows], np.full(len(kill_rows), np.nan)]
+        )
+        cnts = np.concatenate(
+            [np.ones(len(comp_rows), np.int64), killed[kill_rows, w]]
+        )
+        order = np.argsort(rows, kind="stable")
+        comp_times.append(np.repeat(vals[order], cnts[order]))
 
     # --- job response times -------------------------------------------------
     arr_mask = code == sim.EV_ARRIVAL
@@ -47,25 +68,31 @@ def analyze(trace, n: int, warmup_frac: float = 0.0) -> TraceMetrics:
     tw = np.asarray(trace["task_workers"])[arr_rows]  # [J, mt]
     tg = np.asarray(trace["task_targets"])[arr_rows]  # [J, mt]
 
-    responses, censored = [], 0
+    responses, censored, killed_jobs = [], 0, 0
     t_warm = warmup_frac * now[-1]
     kept_arrivals = []
     for ji in range(arr_rows.shape[0]):
         if t_arr[ji] < t_warm:
             continue
         kept_arrivals.append(t_arr[ji])
-        done, tmax = True, t_arr[ji]
+        done, was_killed, tmax = True, False, t_arr[ji]
         for k in range(tw.shape[1]):
             w, tgt = int(tw[ji, k]), int(tg[ji, k])
             if w < 0:
                 continue
             ct = comp_times[w]
             if tgt - 1 < ct.shape[0]:
-                tmax = max(tmax, float(ct[tgt - 1]))
+                v = float(ct[tgt - 1])
+                if np.isnan(v):
+                    was_killed = True
+                    break
+                tmax = max(tmax, v)
             else:
                 done = False
                 break
-        if done:
+        if was_killed:
+            killed_jobs += 1
+        elif done:
             responses.append(tmax - t_arr[ji])
         else:
             censored += 1
@@ -93,6 +120,7 @@ def analyze(trace, n: int, warmup_frac: float = 0.0) -> TraceMetrics:
         mu_hat_trace=mu_hat,
         times=now,
         lam_hat=np.asarray(trace["lam_hat"]),
+        killed_jobs=killed_jobs,
     )
 
 
@@ -341,6 +369,77 @@ def adaptation_report(
         "mean": float(vals.mean()) if vals.size else float("nan"),
         "max": float(vals.max()) if vals.size else float("nan"),
     }
+
+
+def check_conservation(ledger: dict) -> tuple[bool, dict]:
+    """The task-conservation invariant over a fault-run ledger
+    (``info["ledger"]`` from the serving loops): every arrived task is
+    completed or lost, every launched real COPY (original + retries +
+    speculative) is completed or killed, and every fake/burst probe is
+    completed or killed. Returns (ok, residuals) — residuals are the
+    per-identity imbalances, all zero when the ledger conserves."""
+    res = {
+        "tasks": ledger["n_tasks"]
+        - ledger["completed_tasks"] - ledger["lost_tasks"],
+        "real_copies": ledger["copies_real_launched"]
+        - ledger["copies_real_completed"] - ledger["copies_real_killed"],
+        "fakes": ledger["fake_launched"]
+        - ledger["fake_completed"] - ledger["fake_killed"],
+    }
+    return all(v == 0 for v in res.values()), res
+
+
+def fault_report(responses, ledger: dict, *, horizon: float | None = None) -> dict:
+    """Robustness metrics for a fault run — the failure-side companion of
+    ``adaptation_report``. ``responses`` is the task-indexed response
+    array of the fault-aware serving loops (NaN = lost task); ``ledger``
+    is their ``info["ledger"]`` conservation ledger.
+
+    Reports goodput (distinct tasks completed per unit time) vs
+    throughput (real copies completed per unit time — retries and
+    speculation inflate this above goodput), the retry amplification
+    factor (real copies launched per arrived task; 1.0 = no recovery
+    overhead), loss rate, and latency percentiles including p999 over
+    the completed tasks."""
+    r = np.asarray(responses, np.float64)
+    done = r[np.isfinite(r)]
+    n_tasks = int(ledger["n_tasks"])
+    completed = int(ledger["completed_tasks"])
+    lost = int(ledger["lost_tasks"])
+    ok, residuals = check_conservation(ledger)
+    out: dict = {
+        "n_tasks": n_tasks,
+        "completed": completed,
+        "lost": lost,
+        "loss_rate": lost / max(n_tasks, 1),
+        "timeouts": int(ledger.get("n_timeouts", 0)),
+        "retries": int(ledger.get("n_retries", 0)),
+        "speculative": int(ledger.get("n_spec", 0)),
+        "killed_copies": int(ledger.get("copies_real_killed", 0)),
+        "dirty_completions": int(ledger.get("n_dirty_completions", 0)),
+        "retry_amplification": (
+            int(ledger["copies_real_launched"]) / max(n_tasks, 1)
+        ),
+        "dup_completions": (
+            int(ledger["copies_real_completed"]) - completed
+        ),
+        "conserved": ok,
+        "conservation_residuals": residuals,
+    }
+    if done.size:
+        out.update(
+            mean=float(done.mean()),
+            p50=float(np.percentile(done, 50)),
+            p99=float(np.percentile(done, 99)),
+            p999=float(np.percentile(done, 99.9)),
+        )
+    else:
+        out.update(mean=float("nan"), p50=float("nan"),
+                   p99=float("nan"), p999=float("nan"))
+    if horizon:
+        out["goodput"] = completed / horizon
+        out["throughput"] = int(ledger["copies_real_completed"]) / horizon
+    return out
 
 
 def queue_length_histogram(trace, worker: int, warmup_frac: float = 0.5):

@@ -181,6 +181,7 @@ def _serve_step_math(
     scalars, m, policy, max_fake, use_fresh_mu,
     table: dsp.AliasTable | None = None, use_alias: bool = False,
     mask: jax.Array | None = None,
+    m_route: int | None = None, slots: jax.Array | None = None,
 ):
     """The traced body of ``serve_step`` — shared verbatim with the
     scan-compiled serving loop (``serving/scanloop.py``) so both consume
@@ -191,7 +192,15 @@ def _serve_step_math(
     ``mask`` (bool[n], optional) is the membership mask of the churn
     scenarios: routing and benchmark draws target only active replicas
     (inactive workers get exactly-zero probe mass; the fresh-μ̂ alias
-    rebuild is masked). ``mask=None`` is bit-identical to before."""
+    rebuild is masked). ``mask=None`` is bit-identical to before.
+
+    ``m_route``/``slots`` (recovery layer): route ``m_route ≥ m`` slots
+    in the one dispatch call — the first ``m`` are the arrival batch, the
+    tail is the turn's retry re-dispatch quota, gated per-slot by the
+    ``slots`` bool[m_route] mask (inactive slots place nothing and return
+    worker −1). The arrival estimator still observes exactly ``m``
+    arrivals (retries are re-executions, not new arrivals).
+    ``m_route=None`` is bit-identical to before."""
     now, last_fake, comp_now = scalars
     q1 = absorb_completions(q_view, comp_workers)
     lam0 = est.lam_hat_ema(arr)
@@ -220,7 +229,8 @@ def _serve_step_math(
         tbl = table if use_alias else None
     res = dsp.dispatch(
         policy, k_route, q1, mu_route, mu_route, pol.default_policy_config(),
-        m, table=tbl, mask=mask,
+        m if m_route is None else m_route,
+        active=slots, table=tbl, mask=mask,
     )
     return fake_js, res.workers, res.q_after, learner2, arr2, key2
 
@@ -272,6 +282,41 @@ def serve_step(
     return _serve_step_math(
         q_view, learner, arr, mu_hat, lcfg, key, comp_workers, comp_times,
         scalars, m, policy, max_fake, use_fresh_mu, table, use_alias, mask
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnums=(9, 10, 11, 12, 14, 16), donate_argnums=(0,)
+)
+def serve_step_recovery(
+    q_view: jax.Array,  # i32[n] — donated
+    learner: lrn.LearnerState,
+    arr: est.EmaArrivalState,
+    mu_hat: jax.Array,
+    lcfg: lrn.LearnerConfig,
+    key: jax.Array,
+    comp_workers: jax.Array,  # i32[P] CLEAN due completions (pad with -1)
+    comp_times: jax.Array,  # f32[P]
+    scalars,  # (now, last_fake_time, comp_now)
+    m: int,
+    policy: str = pol.PPOT_SQ2,
+    max_fake: int = 8,
+    use_fresh_mu: bool = False,
+    table: dsp.AliasTable | None = None,
+    use_alias: bool = False,
+    mask: jax.Array | None = None,
+    m_route: int | None = None,
+    slots: jax.Array | None = None,  # bool[m_route] slot gate (retry tail)
+):
+    """``serve_step`` with the recovery layer's widened dispatch: one call
+    routes the ``m`` arrivals AND up to ``m_route − m`` retry re-dispatch
+    slots (``slots`` gates the tail; see ``_serve_step_math``). With
+    ``m_route=None``/``slots=None`` this is ``serve_step`` exactly —
+    zero-fault recovery configs compile to the identical program."""
+    return _serve_step_math(
+        q_view, learner, arr, mu_hat, lcfg, key, comp_workers, comp_times,
+        scalars, m, policy, max_fake, use_fresh_mu, table, use_alias, mask,
+        m_route, slots,
     )
 
 

@@ -41,13 +41,23 @@ three dynamics axes without touching the null path:
     ``mu_schedule`` (which is the one-process special case); service
     thinning against μmax_i = max over segments stays exact;
   * **membership** (worker churn): an active-mask schedule — dispatch is
-    membership-masked (no probe ever lands on an offline worker), service
-    and benchmark events at offline workers are thinned to self-loops, a
-    membership flip forces a fleet view re-sync (membership changes are
-    cluster-manager broadcasts, unlike queue state), and workers
-    transitioning offline→online cold-start in the learner
-    (``learner.reset_workers``) and receive a fake-job probe burst — the
-    paper's exploration story applied to rejoin.
+    membership-masked (no probe ever lands on an offline worker),
+    benchmark probes draw over active workers only, a membership flip
+    forces a fleet view re-sync (membership changes are cluster-manager
+    broadcasts, unlike queue state), and workers transitioning
+    offline→online cold-start in the learner (``learner.reset_workers``)
+    and receive a fake-job probe burst — the paper's exploration story
+    applied to rejoin. Graceful departure is a DRAIN: the worker keeps
+    serving what it already holds (matching the serving layers' pool);
+  * **faults** (crash / blackout, the violent end of membership): a
+    blackout stalls its worker — service events thin to self-loops for
+    the window, queues freeze, nothing is lost; a crash EMPTIES the
+    worker's queues at its instant (killed tasks consume their completion
+    ordinals, traced in the ``killed`` column so ``metrics.analyze``
+    reports them as killed jobs, not censored ones). Both contribute
+    offline windows to the active mask, so recovery rides the rejoin
+    machinery. The counter-based chain has no task identity, hence no
+    retry here — timeout/retry/speculation live on the serving layers.
 
 ``env=None`` (the default) traces the exact pre-env program — every RNG
 stream, branch and dtype untouched.
@@ -161,6 +171,16 @@ class EnvSchedule:
     act_bp: jax.Array  # f32[Km] membership segment starts
     act_val: jax.Array  # bool[Km, n] active mask per segment
     burst: jax.Array  # i32 fake-job probe burst per rejoining worker
+    # Fault tracks (repro.env faults axis; None → fault-free program).
+    # Blackouts: a stalled-mask schedule — service events at stalled
+    # workers thin to self-loops (queues freeze; nothing is lost).
+    stall_bp: jax.Array | None = None  # f32[Ks] stall segment starts
+    stall_val: jax.Array | None = None  # bool[Ks, n] stalled mask
+    # Crashes: sorted fault instants — at each, the worker's queues empty
+    # (in-flight tasks killed; their completion ordinals are consumed so
+    # the analyzer can mark the jobs as killed, not censored).
+    crash_t: jax.Array | None = None  # f32[C] crash instants (ascending)
+    crash_w: jax.Array | None = None  # i32[C] crashed worker per instant
 
 
 def _env_seg(bp: jax.Array, now: jax.Array) -> jax.Array:
@@ -187,11 +207,12 @@ class SimState:
     now: jax.Array
     q_real: jax.Array  # i32[n]
     q_fake: jax.Array  # i32[n]
-    s_real: jax.Array  # i32[n] cumulative real completions
+    s_real: jax.Array  # i32[n] cumulative real completions (+ killed tasks)
     busy_start: jax.Array  # f32[n]
     arr: est.ArrivalEstimatorState
     learner: lrn.LearnerState
     fleet: flt.FleetSimState  # per-frontend stale views + λ̂ streams
+    crash_i: jax.Array  # i32 next unprocessed entry of env.crash_t
 
 
 def make_params(
@@ -290,6 +311,11 @@ def simulate(cfg: SimConfig, params: SimParams, key: jax.Array,
         if env is None:
             return None
         return env.act_val[_env_seg(env.act_bp, now)]
+
+    def cur_stall(now):
+        if env is None or env.stall_bp is None:
+            return None
+        return env.stall_val[_env_seg(env.stall_bp, now)]
     nu_max = jnp.where(cfg.use_fake_jobs, cfg.c0 * params.mu_bar, 0.0)
     rates = jnp.concatenate([params.lam[None], mu_max, nu_max[None]])
     R = jnp.sum(rates)
@@ -304,6 +330,7 @@ def simulate(cfg: SimConfig, params: SimParams, key: jax.Array,
         arr=est.init_arrival_estimator(cfg.arrival_window, lam_init=float("nan")),
         learner=lrn.init_learner(n, lcfg, mu_init=1.0).replace(mu_hat=params.mu_hat0),
         fleet=flt.init_fleet_sim(cfg.n_frontends, n, params.mu_hat0),
+        crash_i=jnp.int32(0),
     )
     # NaN lam_hat init → fake rate clips to c0·μ̄ until first estimate.
     state0 = state0.replace(arr=state0.arr.replace(lam_hat=jnp.float32(0.0)))
@@ -411,8 +438,16 @@ def simulate(cfg: SimConfig, params: SimParams, key: jax.Array,
     def service_branch(state: SimState, key, widx):
         mu_now = cur_mu(state.now)
         accept = jax.random.uniform(key) < (mu_now[widx] / jnp.clip(mu_max[widx], 1e-30))
-        if env is not None:  # offline workers serve nothing (queue freezes)
-            accept = accept & cur_act(state.now)[widx]
+        # Failure semantics (documented in README): graceful churn is a
+        # DRAIN — a departed worker stops receiving placements (dispatch
+        # mask) but keeps serving what it already holds, matching the
+        # serving layers' pool, which always finishes accepted work.
+        # Blackouts are a STALL — service events at stalled workers thin
+        # to self-loops, freezing their queues for the window. Crashes
+        # empty the queues outright (round_fn), so no service fires there.
+        st = cur_stall(state.now)
+        if st is not None:
+            accept = accept & ~st[widx]
         busy = (state.q_real[widx] + state.q_fake[widx]) > 0
         do_real = accept & (state.q_real[widx] > 0)
         do_fake = accept & (~(state.q_real[widx] > 0)) & (state.q_fake[widx] > 0)
@@ -495,6 +530,7 @@ def simulate(cfg: SimConfig, params: SimParams, key: jax.Array,
         t, key = xs
         k_dt, k_ev, k_br, k_refresh = jax.random.split(key, 4)
         act_prev = cur_act(state.now)  # membership BEFORE this jump
+        stall_prev = cur_stall(state.now)  # stalled mask BEFORE this jump
         dt = jax.random.exponential(k_dt) / R
         state = state.replace(now=state.now + dt)
         act_now = cur_act(state.now)
@@ -525,12 +561,57 @@ def simulate(cfg: SimConfig, params: SimParams, key: jax.Array,
                     )
                 else:
                     q_fake = s.q_fake
-                busy = jnp.where(rejoin, s.now, s.busy_start)
+                # Busy-clock restart at rejoin, but ONLY where the clock is
+                # actually stale: an idle worker's next head-of-queue job
+                # is the probe burst placed here, and a blackout-stalled
+                # worker's head job resumes now (its sample then measures
+                # post-stall service, not the outage). A gracefully
+                # DRAINING worker that rejoins mid-service keeps its clock
+                # — resetting it would corrupt the in-flight sample.
+                was_idle = (s.q_real + s.q_fake) == 0
+                stale = was_idle if stall_prev is None else (
+                    was_idle | stall_prev
+                )
+                busy = jnp.where(rejoin & stale, s.now, s.busy_start)
                 return s.replace(
                     learner=learner, q_fake=q_fake, busy_start=busy
                 )
 
             state = jax.lax.cond(memb_changed, on_memb, lambda s: s, state)
+
+        # Crash processing (env fault track): at each crash instant the
+        # worker's queues empty — killed real tasks consume their
+        # completion ordinals through s_real (the analyzer maps those
+        # ordinals to killed jobs, not censored ones) and the busy clock
+        # resets. One crash per chain round; coincident crashes resolve
+        # over consecutive rounds (dt ≪ any fault spacing at R ≫ λ).
+        if env is not None and env.crash_t is not None:
+            C = env.crash_t.shape[0]
+            jsafe = jnp.minimum(state.crash_i, C - 1)
+            fire = (state.crash_i < C) & (state.now >= env.crash_t[jsafe])
+
+            def on_crash(s):
+                w = env.crash_w[jsafe]
+                kreal = s.q_real[w]
+                kfake = s.q_fake[w]
+                s2 = s.replace(
+                    q_real=s.q_real.at[w].set(0),
+                    q_fake=s.q_fake.at[w].set(0),
+                    s_real=s.s_real.at[w].add(kreal),
+                    busy_start=s.busy_start.at[w].set(s.now),
+                    crash_i=s.crash_i + 1,
+                )
+                killed = jnp.zeros((n,), jnp.int32).at[w].set(kreal)
+                return s2, killed, kfake
+
+            state, killed_row, killed_fake = jax.lax.cond(
+                fire, on_crash,
+                lambda s: (s, jnp.zeros((n,), jnp.int32), jnp.int32(0)),
+                state,
+            )
+        else:
+            killed_row = jnp.zeros((0,), jnp.int32)
+            killed_fake = jnp.int32(0)
 
         # Bounded-staleness fleet sync: every ``fleet_sync_every`` rounds the
         # frontends' views reconcile at true worker state (the pure-jnp
@@ -588,6 +669,8 @@ def simulate(cfg: SimConfig, params: SimParams, key: jax.Array,
             )
 
         out = dict(ev, now=state.now, lam_hat=state.arr.lam_hat)
+        out["killed"] = killed_row
+        out["killed_fake"] = killed_fake
         out["q_real"] = state.q_real if cfg.trace_queues else jnp.zeros((0,), jnp.int32)
         out["mu_hat"] = (
             state.learner.mu_hat if cfg.trace_mu else jnp.zeros((0,), jnp.float32)

@@ -53,6 +53,51 @@ class StragglerPlanner:
         self.mu_hat = np.mean(self._samples, axis=0)
 
 
+def speculative_workers_np(mu_hat: np.ndarray, m: int) -> np.ndarray:
+    """Where to run ``m`` speculative task copies — the planner's greedy
+    makespan fill (``plan``) without the participation floor: slot j goes
+    to the worker whose finish time (alloc+1)/μ̂ grows least, so copies
+    spread across the fastest estimated workers instead of herding onto
+    the single argmax. Workers with μ̂ ≤ 0 (offline / masked) are never
+    chosen. Returns i32[m] worker ids (numpy reference twin of
+    ``speculative_workers``)."""
+    mu = np.asarray(mu_hat, np.float32)
+    safe = np.where(mu > 0, np.maximum(mu, 1e-30), 1e-30)
+    cost = np.where(mu > 0, 1.0 / safe, np.inf).astype(np.float32)
+    alloc = np.zeros(len(mu), np.int32)
+    out = np.zeros(m, np.int32)
+    for i in range(m):
+        j = int(np.argmin((alloc + 1).astype(np.float32) * cost))
+        alloc[j] += 1
+        out[i] = j
+    return out
+
+
+def speculative_workers(mu_hat, m: int):
+    """jnp twin of ``speculative_workers_np`` (same greedy fill, same
+    first-index tie-breaking via argmin) — callable under jit/scan; the
+    serving recovery layer plans its speculative re-execution through
+    this so the host loop and the compiled scan place copies
+    identically."""
+    import jax.numpy as jnp
+    from jax import lax
+
+    mu = jnp.asarray(mu_hat, jnp.float32)
+    safe = jnp.where(mu > 0, jnp.maximum(mu, 1e-30), 1e-30)
+    cost = jnp.where(mu > 0, 1.0 / safe, jnp.inf).astype(jnp.float32)
+
+    def step(i, st):
+        alloc, out = st
+        j = jnp.argmin((alloc + 1).astype(jnp.float32) * cost).astype(jnp.int32)
+        return alloc.at[j].add(1), out.at[i].set(j)
+
+    _, out = lax.fori_loop(
+        0, m, step,
+        (jnp.zeros(mu.shape, jnp.int32), jnp.zeros((m,), jnp.int32)),
+    )
+    return out
+
+
 def simulate_fleet(
     speeds, total_microbatches: int, steps: int = 50, seed: int = 0,
     noise: float = 0.05,

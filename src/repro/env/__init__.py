@@ -13,18 +13,23 @@ model and ``env/processes.py`` for the process library.
     out = env.run_scenario(scn, policy="ppot_sq2", use_scan=True)
 
 Catalog: ``env.names()`` — null, reshuffle, flash_crowd, diurnal,
-cotenant_shock, speed_drift, churn, churn_heavy, trace_replay.
+cotenant_shock, speed_drift, churn, churn_heavy, trace_replay,
+crash_storm, blackout, grey_failure.
 """
 from repro.env.processes import (
+    FAULT_BLACKOUT,
+    FAULT_CRASH,
     PROBE_BURST,
     ChurnSchedule,
     Diurnal,
+    FaultSchedule,
     HomogeneousPoisson,
     MMPP,
     OnOffInterference,
     OUDrift,
     PiecewiseRate,
     RandomChurn,
+    RandomFaults,
     Reshuffle,
     StaticCapacity,
     StepSchedule,
@@ -46,16 +51,20 @@ from repro.env.serving import run_scenario, run_workload
 __all__ = [
     "BASE_RATE",
     "BASE_SPEEDS",
+    "FAULT_BLACKOUT",
+    "FAULT_CRASH",
     "PROBE_BURST",
     "SCENARIOS",
     "ChurnSchedule",
     "Diurnal",
+    "FaultSchedule",
     "HomogeneousPoisson",
     "MMPP",
     "OnOffInterference",
     "OUDrift",
     "PiecewiseRate",
     "RandomChurn",
+    "RandomFaults",
     "Reshuffle",
     "Scenario",
     "ServingWorkload",

@@ -387,3 +387,112 @@ class RandomChurn:
         if not events:
             return np.zeros(1), np.ones((1, n), bool)
         return _events_to_masks(n, events)
+
+
+# ---------------------------------------------------------------------------
+# Fault processes (crash / blackout)
+# ---------------------------------------------------------------------------
+#
+# Faults are the VIOLENT end of the membership axis. Graceful churn
+# (ChurnSchedule / RandomChurn) is a drain: a departing worker stops
+# receiving NEW placements but finishes what it holds. A **crash**
+# (FAULT_CRASH) kills everything in flight on the worker at the fault
+# instant and takes it offline until recovery. A **blackout**
+# (FAULT_BLACKOUT) freezes the worker for its duration — in-flight tasks
+# stall and complete ``duration`` late, nothing is lost. Both kinds also
+# contribute an offline window [t0, t1) to the membership mask, so the
+# existing rejoin machinery (probe burst + learner cold-start) covers
+# fault recovery for free. "Degraded" / grey-failure mode needs no new
+# process: it is a capacity collapse (``OnOffInterference`` with a factor
+# near zero) where the worker stays a member but barely serves — the
+# recovery layer's timeouts are what rescue tasks stuck on it.
+
+FAULT_CRASH = 0
+FAULT_BLACKOUT = 1
+
+_FAULT_KINDS = {"crash": FAULT_CRASH, "blackout": FAULT_BLACKOUT}
+
+
+def _pack_fault_events(events):
+    """Sort raw (t0, t1, worker, kind) tuples into the compiled arrays
+    every consumer shares: ``(t0 f64[E], t1 f64[E], w i32[E], kind i32[E])``
+    ordered by fault instant (ties by worker, for determinism)."""
+    ev = sorted(events, key=lambda e: (e[0], e[2]))
+    t0 = np.asarray([e[0] for e in ev], float)
+    t1 = np.asarray([e[1] for e in ev], float)
+    w = np.asarray([e[2] for e in ev], np.int32)
+    kind = np.asarray([e[3] for e in ev], np.int32)
+    return t0, t1, w, kind
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSchedule:
+    """Explicit faults: ``events`` = ((t, worker, duration, kind), ...)
+    with kind in {"crash", "blackout"} — worker ``worker`` faults at time
+    ``t`` and recovers at ``t + duration``."""
+
+    events: tuple
+
+    def compile(self, n, horizon, rng):
+        del rng
+        out = []
+        for t, w, dur, kind in self.events:
+            if kind not in _FAULT_KINDS:
+                raise ValueError(f"unknown fault kind {kind!r}")
+            if not 0 <= int(w) < n:
+                raise ValueError(f"fault worker {w} out of range [0, {n})")
+            if float(t) < horizon:
+                out.append((float(t), float(t) + float(dur), int(w),
+                            _FAULT_KINDS[kind]))
+        return _pack_fault_events(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class RandomFaults:
+    """Stochastic faults: each non-anchor worker draws time-to-failure
+    ~ Exp(mttf) and downtime ~ Exp(mean_down), repeating after recovery
+    (per-worker fault windows never overlap). ``anchor`` never faults, so
+    the cluster always keeps at least one live worker."""
+
+    mttf: float = 120.0
+    mean_down: float = 30.0
+    kind: str = "crash"
+    anchor: int = 0
+
+    def compile(self, n, horizon, rng):
+        if self.kind not in _FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+        kd = _FAULT_KINDS[self.kind]
+        events = []
+        for w in range(n):
+            if w == self.anchor:
+                continue
+            t = float(rng.exponential(self.mttf))
+            while t < horizon:
+                down = float(rng.exponential(self.mean_down))
+                events.append((t, t + down, w, kd))
+                t = t + down + float(rng.exponential(self.mttf))
+        return _pack_fault_events(events)
+
+
+def fault_outage_masks(n: int, fault_ev) -> tuple[np.ndarray, np.ndarray]:
+    """Compiled fault events → stepwise active masks (the outage windows):
+    worker w is inactive on every [t0, t1) it faults in."""
+    t0, t1, w, _kind = fault_ev
+    events = []
+    for i in range(len(t0)):
+        events.append((float(t0[i]), int(w[i]), False))
+        events.append((float(t1[i]), int(w[i]), True))
+    if not events:
+        return np.zeros(1), np.ones((1, n), bool)
+    return _events_to_masks(n, events)
+
+
+def and_masks(a: tuple[np.ndarray, np.ndarray],
+              b: tuple[np.ndarray, np.ndarray]):
+    """AND two stepwise mask processes (membership ∧ fault outages):
+    union of breakpoints, elementwise conjunction of the masks."""
+    bp = np.union1d(np.asarray(a[0], float), np.asarray(b[0], float))
+    va = piecewise_at(np.asarray(a[0], float), np.asarray(a[1]), bp)
+    vb = piecewise_at(np.asarray(b[0], float), np.asarray(b[1]), bp)
+    return bp, va & vb

@@ -56,6 +56,16 @@ class ServingWorkload:
     # so a partial tail cannot run) — NEVER silently zero for a truncated
     # replay; consumers surface it (benchmarks/scenario_suite.py).
     trace_dropped: int = 0
+    # Fault tracks (None on fault-free scenarios). A fault event lands on
+    # the first turn whose end time reaches its instant; when two faults
+    # at the same worker map to the same turn, the later one wins.
+    kill_at: np.ndarray | None = None  # f64[T, n] crash instants (+inf none)
+    stall_at: np.ndarray | None = None  # f64[T, n] blackout instants (+inf)
+    stall_dur: np.ndarray | None = None  # f64[T, n] blackout durations
+
+    @property
+    def has_faults(self) -> bool:
+        return self.kill_at is not None or self.stall_at is not None
 
     @property
     def turns(self) -> int:
@@ -96,6 +106,7 @@ class Scenario:
     arrivals: object = prc.HomogeneousPoisson()
     capacity: object = prc.StaticCapacity()
     membership: object | None = None
+    faults: object | None = None  # FaultSchedule / RandomFaults
     request_cost: float = 1.0
     probe_burst: int = prc.PROBE_BURST
     description: str = ""
@@ -114,6 +125,7 @@ class Scenario:
             getattr(self.arrivals, "is_homogeneous", False)
             and getattr(self.capacity, "is_static", False)
             and self.membership is None
+            and self.faults is None
         )
 
     @property
@@ -131,10 +143,13 @@ class Scenario:
         return np.random.RandomState((seed + ENV_SEED_OFFSET) % (2**31))
 
     def _compile_env(self, seed: int):
-        """Compile all three processes off ONE env stream in a fixed order
-        (arrivals, capacity, membership) — every consumer must draw in
-        this order or stochastic processes would diverge between callers.
-        Returns (rate, (cap_bp, cap_val), (act_bp, act_val) | None)."""
+        """Compile all four processes off ONE env stream in a fixed order
+        (arrivals, capacity, membership, faults) — every consumer must
+        draw in this order or stochastic processes would diverge between
+        callers (faults drawn LAST so pre-fault scenarios keep their
+        exact pre-PR streams). Returns
+        (rate, (cap_bp, cap_val), (act_bp, act_val) | None, faults | None)
+        where faults = (t0[E], t1[E], w[E], kind[E])."""
         rng = self._env_rng(seed)
         rate = self.arrivals.compile_rate(self.rate, self.horizon, rng)
         cap = self.capacity.compile(
@@ -144,23 +159,31 @@ class Scenario:
             None if self.membership is None
             else self.membership.compile(self.n, self.horizon, rng)
         )
-        return rate, cap, memb
+        flt = (
+            None if self.faults is None
+            else self.faults.compile(self.n, self.horizon, rng)
+        )
+        if flt is not None and not len(flt[0]):
+            flt = None
+        return rate, cap, memb, flt
 
-    def _shifts_from(self, cap_bp, memb) -> np.ndarray:
+    def _shifts_from(self, cap_bp, memb, flt=None) -> np.ndarray:
         """Shock instants from ALREADY-compiled trajectories (t=0
         baselines excluded) — compile once, derive shifts for free."""
         shifts = list(np.asarray(cap_bp)[1:])
         if memb is not None:
             shifts += list(np.asarray(memb[0])[1:])
+        if flt is not None:
+            shifts += list(np.asarray(flt[0])) + list(np.asarray(flt[1]))
         shifts = np.asarray(sorted(set(float(t) for t in shifts)))
         return shifts[shifts < self.horizon]
 
     def shift_times(self, seed: int = 0) -> np.ndarray:
-        """Environment shock instants (capacity + membership breakpoints).
-        Deterministic in ``seed`` (the same env stream the compiles
-        consume)."""
-        _, (cap_bp, _), memb = self._compile_env(seed)
-        return self._shifts_from(cap_bp, memb)
+        """Environment shock instants (capacity + membership + fault
+        breakpoints). Deterministic in ``seed`` (the same env stream the
+        compiles consume)."""
+        _, (cap_bp, _), memb, flt = self._compile_env(seed)
+        return self._shifts_from(cap_bp, memb, flt)
 
     # -- serving compile ----------------------------------------------------
 
@@ -178,10 +201,17 @@ class Scenario:
         speeds0 = np.asarray(self.speeds, float)
         n = self.n
 
-        # capacity / membership trajectories (compile-time randomness)
-        rate, (cap_bp, cap_val), memb = self._compile_env(seed)
+        # capacity / membership / fault trajectories (compile-time
+        # randomness). Fault outage windows [t0, t1) merge into the
+        # membership masks, so crashed/blacked-out workers stop receiving
+        # placements and their recoveries ride the existing rejoin
+        # machinery (probe burst + learner cold-start).
+        rate, (cap_bp, cap_val), memb, flt = self._compile_env(seed)
+        if flt is not None:
+            fmask = prc.fault_outage_masks(n, flt)
+            memb = fmask if memb is None else prc.and_masks(memb, fmask)
         act_bp, act_val = memb if memb is not None else (None, None)
-        shifts = self._shifts_from(cap_bp, memb)
+        shifts = self._shifts_from(cap_bp, memb, flt)
 
         def cap_at(t):
             return prc.piecewise_at(cap_bp, cap_val, t)
@@ -263,8 +293,30 @@ class Scenario:
             for ti in np.nonzero(per_turn)[0]:
                 ids = np.repeat(np.nonzero(rejoin[ti])[0], self.probe_burst)
                 burst[ti, :len(ids)] = ids
+        kill_at = stall_at = stall_dur = None
+        if flt is not None:
+            # fault events land on the first turn whose end time reaches
+            # the fault instant (that turn's fault pass sees every entry
+            # the fault could touch); events past the last turn end fall
+            # outside the simulated window
+            T = len(times_l)
+            t_end = times[:, -1]
+            ft0, ft1, fw, fkind = flt
+            kill_at = np.full((T, n), np.inf)
+            stall_at = np.full((T, n), np.inf)
+            stall_dur = np.zeros((T, n))
+            for i in range(len(ft0)):
+                ti = int(np.searchsorted(t_end, ft0[i], side="left"))
+                if ti >= T:
+                    continue
+                if fkind[i] == prc.FAULT_CRASH:
+                    kill_at[ti, fw[i]] = ft0[i]
+                else:
+                    stall_at[ti, fw[i]] = ft0[i]
+                    stall_dur[ti, fw[i]] = ft1[i] - ft0[i]
         return ServingWorkload(times, costs, speeds, active, rejoin, burst,
-                               shifts, dropped)
+                               shifts, dropped, kill_at=kill_at,
+                               stall_at=stall_at, stall_dur=stall_dur)
 
     # -- simulator compile --------------------------------------------------
 
@@ -288,7 +340,26 @@ class Scenario:
             params = sim.make_params(lam=self.rate, mu=speeds0)
             return cfg, params, None
 
-        rate, (cap_bp, cap_val), memb = self._compile_env(seed)
+        rate, (cap_bp, cap_val), memb, flt = self._compile_env(seed)
+        stall_bp = stall_val = crash_t = crash_w = None
+        if flt is not None:
+            # outage windows mask placements (merged membership), the
+            # blackout windows additionally freeze service (stall track)
+            # and each crash instant empties its worker's queues in-chain
+            fmask = prc.fault_outage_masks(self.n, flt)
+            memb = fmask if memb is None else prc.and_masks(memb, fmask)
+            ft0, ft1, fw, fkind = flt
+            bl = fkind == prc.FAULT_BLACKOUT
+            if bl.any():
+                sbp, sup = prc.fault_outage_masks(
+                    self.n, (ft0[bl], ft1[bl], fw[bl], fkind[bl])
+                )
+                stall_bp = jnp.asarray(sbp, jnp.float32)
+                stall_val = jnp.asarray(~sup, bool)  # stalled = in-window
+            cr = fkind == prc.FAULT_CRASH
+            if cr.any():
+                crash_t = jnp.asarray(ft0[cr], jnp.float32)
+                crash_w = jnp.asarray(fw[cr], jnp.int32)
         act_bp, act_val = (
             memb if memb is not None
             else (np.zeros(1), np.ones((1, self.n), bool))
@@ -306,6 +377,10 @@ class Scenario:
             act_bp=jnp.asarray(act_bp, jnp.float32),
             act_val=jnp.asarray(act_val, bool),
             burst=jnp.int32(self.probe_burst),
+            stall_bp=stall_bp,
+            stall_val=stall_val,
+            crash_t=crash_t,
+            crash_w=crash_w,
         )
         return cfg, params, env
 
@@ -446,6 +521,48 @@ def _churn_heavy(**kw):
         "Random churn: every non-anchor worker alternates Exp(90s) online "
         "/ Exp(30s) offline epochs; worker 0 never leaves.",
         membership=prc.RandomChurn(mean_up=90.0, mean_down=30.0, anchor=0),
+        **kw,
+    )
+
+
+@register("crash_storm")
+def _crash_storm(mttf: float = 110.0, mean_down: float = 35.0, **kw):
+    return _base(
+        "crash_storm",
+        "Random crashes: every non-anchor worker fails ~Exp(mttf=110s), "
+        "killing its in-flight tasks, and recovers ~Exp(35s) later with a "
+        "cold learner; worker 0 never crashes.",
+        faults=prc.RandomFaults(
+            mttf=mttf, mean_down=mean_down, kind="crash", anchor=0
+        ),
+        **kw,
+    )
+
+
+@register("blackout")
+def _blackout(**kw):
+    return _base(
+        "blackout",
+        "Two scheduled blackouts: worker 0 (fast) freezes on [120, 165), "
+        "worker 2 on [200, 245) — in-flight tasks stall the full window "
+        "and complete late; nothing is lost.",
+        faults=prc.FaultSchedule(
+            events=((120.0, 0, 45.0, "blackout"), (200.0, 2, 45.0, "blackout"))
+        ),
+        **kw,
+    )
+
+
+@register("grey_failure")
+def _grey_failure(factor: float = 0.05, **kw):
+    return _base(
+        "grey_failure",
+        "Degraded mode (grey failure): replicas 0-1 collapse to 5% speed "
+        "on [120, 240) but STAY members — tasks placed there crawl, and "
+        "only the recovery layer's timeouts rescue them.",
+        capacity=prc.OnOffInterference(
+            affected=(0, 1), factor=factor, t_on=120.0, t_off=240.0
+        ),
         **kw,
     )
 

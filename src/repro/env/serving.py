@@ -27,6 +27,7 @@ import numpy as np
 
 from repro.core import policies as pol
 from repro.env.scenario import Scenario, ServingWorkload
+from repro.serving import recovery as rcv
 from repro.serving import router as rt
 from repro.serving import scanloop
 
@@ -38,6 +39,7 @@ def run_workload(
     *,
     fake_cost: float,
     burst_cost: float | None = None,
+    recovery: rcv.RecoveryConfig | None = None,
 ):
     """Drive the host serving loop over a compiled workload.
 
@@ -51,6 +53,14 @@ def run_workload(
     contract (``info`` carries the turn count; overflow accounting is a
     scan-only concern, reported as zeros here for symmetry).
     """
+    if wl.has_faults or recovery is not None:
+        # the failure-semantics loop subsumes this one (fault-free +
+        # inert recovery reduces to it bit-exactly); keep the fast plain
+        # path for the overwhelmingly common fault-free case
+        return rcv.run_workload_recovery(
+            router, pool, wl, fake_cost=fake_cost, burst_cost=burst_cost,
+            recovery=recovery,
+        )
     if burst_cost is None:
         burst_cost = 4.0 * fake_cost
     T = wl.turns
@@ -139,6 +149,7 @@ def run_scenario(
     sync_every: int = 1,
     herd_correction=False,
     frozen_mu: bool = False,
+    recovery: rcv.RecoveryConfig | None = None,
 ):
     """One scenario end to end on the serving layer.
 
@@ -160,6 +171,12 @@ def run_scenario(
     """
     speeds0 = np.asarray(scn.speeds, float)
     if n_frontends > 1:
+        if recovery is not None:
+            raise ValueError(
+                "recovery (timeout/retry/speculation) is single-frontend "
+                "only for now: the fleet scan carries fault loss "
+                "accounting but no re-dispatch machinery"
+            )
         if not use_scan:
             raise ValueError(
                 "n_frontends > 1 requires use_scan=True: the fleet × env "
@@ -186,7 +203,8 @@ def run_scenario(
             router, pool, wl.times, wl.costs, wl.speeds,
             active_np=wl.active, rejoin_np=wl.rejoin, burst_np=wl.burst,
             fake_cost=fake_cost, sync_every=sync_every,
-            frozen_mu=frozen_mu,
+            frozen_mu=frozen_mu, kill_np=wl.kill_at, stall_np=wl.stall_at,
+            stall_dur_np=wl.stall_dur,
         )
         return {
             "responses": resp,
@@ -210,11 +228,12 @@ def run_scenario(
         resp, mu_trace, info = scanloop.run_workload_scan(
             router, pool, wl.times, wl.costs, wl.speeds,
             active_np=wl.active, rejoin_np=wl.rejoin, burst_np=wl.burst,
-            fake_cost=fake_cost,
+            fake_cost=fake_cost, kill_np=wl.kill_at, stall_np=wl.stall_at,
+            stall_dur_np=wl.stall_dur, recovery=recovery,
         )
     else:
         resp, mu_trace, info = run_workload(
-            router, pool, wl, fake_cost=fake_cost
+            router, pool, wl, fake_cost=fake_cost, recovery=recovery
         )
     return {
         "responses": resp,

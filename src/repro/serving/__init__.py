@@ -1,3 +1,8 @@
+from repro.serving.recovery import (
+    INERT_RECOVERY,
+    RecoveryConfig,
+    run_workload_recovery,
+)
 from repro.serving.router import (
     FleetRouter,
     RosellaRouter,
@@ -16,6 +21,8 @@ from repro.serving.scanloop import (
 
 __all__ = [
     "FleetRouter",
+    "INERT_RECOVERY",
+    "RecoveryConfig",
     "RosellaRouter",
     "SequentialPool",
     "SimulatedPool",
@@ -25,5 +32,6 @@ __all__ = [
     "run_simulation",
     "run_simulation_reference",
     "run_simulation_scan",
+    "run_workload_recovery",
     "run_workload_scan",
 ]

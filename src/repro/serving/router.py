@@ -315,6 +315,67 @@ class RosellaRouter:
         fake_js = np.asarray(fake_js)
         return fake_js[fake_js >= 0], np.asarray(workers)
 
+    def serve_turn_recovery(self, now: float, k: int, comp_workers=None,
+                            comp_times=None, comp_now: float | None = None,
+                            retry_cap: int = 0, retry_slots=None
+                            ) -> tuple[np.ndarray, np.ndarray]:
+        """``serve_turn`` widened by the recovery layer's retry quota: ONE
+        dispatch call routes the ``k`` arrivals plus up to ``retry_cap``
+        retry re-dispatch slots (gated per-slot by ``retry_slots``
+        bool[retry_cap]; inactive slots return worker −1). The λ̂
+        estimator still observes exactly ``k`` arrivals. With
+        ``retry_cap=0`` use ``serve_turn`` — same compiled program.
+        Returns (fake_workers, workers[k + retry_cap])."""
+        self._flip_mu()
+        nw = 0 if comp_workers is None else len(comp_workers)
+        if nw > SERVE_COMP_CAP:
+            cut = nw - SERVE_COMP_CAP
+            self.complete_arrays(
+                comp_workers[:cut], comp_times[:cut],
+                comp_now if comp_now is not None else now,
+            )
+            comp_workers, comp_times = comp_workers[cut:], comp_times[cut:]
+            nw = SERVE_COMP_CAP
+        w = np.full((SERVE_COMP_CAP,), -1, np.int32)
+        ts = np.zeros((SERVE_COMP_CAP,), np.float32)
+        if nw:
+            w[:nw] = comp_workers
+            ts[:nw] = comp_times
+        slots = np.ones(k + retry_cap, bool)
+        slots[k:] = (np.asarray(retry_slots, bool)
+                     if retry_slots is not None else False)
+        fake_js, workers, self.q_view, self.learner, self.arr, self.key = (
+            rs.serve_step_recovery(
+                self.q_view, self.learner, self.arr, self.mu_front, self.lcfg,
+                self.key, jnp.asarray(w), jnp.asarray(ts),
+                (float(now), self.last_fake_time,
+                 float(comp_now) if comp_now is not None else float(now)),
+                k, self.policy, 8, not self.async_mu,
+                self.table_front, self.use_alias, self.active,
+                k + retry_cap, jnp.asarray(slots),
+            )
+        )
+        self.last_fake_time = float(now)
+        if nw:
+            self._mu_pending = self.learner.mu_hat
+        fake_js = np.asarray(fake_js)
+        return fake_js[fake_js >= 0], np.asarray(workers)
+
+    def drain_queue(self, counts):
+        """Recovery-layer queue-view drain: copies that left a replica
+        WITHOUT a clean completion (crash-killed, or dirty completions
+        excluded from the learner) still vacate their queue slots — the
+        same saturating subtract the clean flush applies inside
+        ``serve_step``."""
+        self.q_view = jnp.maximum(
+            self.q_view - jnp.asarray(counts, jnp.int32), 0)
+
+    def add_queue(self, counts):
+        """Recovery-layer queue-view load: speculative copies are placed
+        OUTSIDE the dispatch engine (straggler-planner fill), so their
+        queue occupancy is folded in here."""
+        self.q_view = self.q_view + jnp.asarray(counts, jnp.int32)
+
     def complete(self, completions: "list[Completion]"):
         if not completions:
             return

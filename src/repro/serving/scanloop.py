@@ -233,6 +233,340 @@ def _build_scan(n, k, comp_cap, pend_cap, policy, max_fake, use_alias,
     return run
 
 
+@functools.lru_cache(maxsize=8)
+def _build_scan_faulty(n, k, comp_cap, pend_cap, policy, max_fake, use_alias,
+                       fake_cost, churn, burst_cap, burst_cost, rc):
+    """The failure-semantics variant of ``_build_scan``: the xs gain
+    per-turn fault columns ``(kill_t[n], stall_t[n], stall_d[n])`` (+inf =
+    no event) and the carry gains the copy-lifecycle columns of
+    ``serving/recovery.run_workload_recovery`` — original task id/arrival/
+    cost, deadline, attempt, duplicate/learn/timed-out/retry flags — plus
+    the response min-fold array, the conservation counters, and the
+    max-clean-service watermark. ``rc`` (a hashable ``RecoveryConfig``)
+    is part of the compile key: retry/timeout/speculation stages are
+    STATICALLY elided when their knobs are off, so an inert config
+    compiles the plain per-turn math plus masked no-op fault arithmetic —
+    float-identical to ``_build_scan`` (pinned by tests/test_faults.py).
+
+    The per-turn order is the host loop's, step for step (see
+    ``run_workload_recovery``); every float expression is written in the
+    same operand order so host and scan agree float-for-float."""
+    from repro.dist import straggler as strg
+    from repro.serving import recovery as rcv
+
+    retry_cap = int(rc.retry_cap)
+    spec_cap = int(rc.spec_cap)
+    retry_on = retry_cap > 0
+    timeout_on = bool(np.isfinite(rc.timeout_mult))
+    mult = float(rc.timeout_mult)
+    lut = rcv.backoff_lut(rc)  # numpy f64 on BOTH layers (no XLA pow)
+    budget = int(rc.retry_budget)
+    mu_floor = float(rc.mu_floor)
+    spec_ratio = float(rc.spec_ratio)
+
+    def body(lcfg, carry, xs):
+        (q_view, learner, arr, key, last_fake, free_at,
+         p_done, p_start, p_rep, p_seq, p_valid, seq_ctr,
+         over_flush, over_pend,
+         p_task, p_arrv, p_cost, p_dead, p_att, p_dup, p_learn, p_to,
+         p_retry, resp, ctr, max_clean, turn) = carry
+        if churn:
+            (times64, costs64, speeds64, active_t, rejoin_t, burst_t,
+             kill_t, stall_t, stall_d) = xs
+        else:
+            times64, costs64, speeds64, kill_t, stall_t, stall_d = xs
+            active_t = rejoin_t = None
+            burst_t = jnp.zeros((0,), jnp.int32)
+        t64 = times64[-1]
+        t32 = t64.astype(jnp.float32)
+        is_real = p_task >= 0
+        n_pad = resp.shape[0] - 1  # pad slot of the response min-fold
+        drain = jnp.zeros((n,), jnp.int32)
+
+        # -- (2) blackout stall: in-flight copies past the stall instant
+        #    take the outage on their clock and go dirty; the replica's
+        #    FIFO chain (free_at) shifts with them
+        aff = p_valid & jnp.isfinite(p_done) & (p_done > stall_t[p_rep])
+        p_done = jnp.where(aff, p_done + stall_d[p_rep], p_done)
+        p_learn = p_learn & ~aff
+        ctr = ctr.at[rcv.CTR["stalled"]].add(jnp.sum(aff & is_real))
+        free_at = jnp.where(free_at > stall_t, free_at + stall_d, free_at)
+
+        # -- (3) crash kill: copies finishing after the crash are dropped;
+        #    retryable real copies park as ghosts (done=+inf)
+        killed = p_valid & jnp.isfinite(p_done) & (p_done > kill_t[p_rep])
+        drain = drain.at[p_rep].add(killed.astype(jnp.int32))
+        if retry_on:
+            ghost = killed & is_real & ~p_dup & (p_att < budget)
+        else:
+            ghost = jnp.zeros_like(killed)
+        ctr = ctr.at[rcv.CTR["kill_real"]].add(jnp.sum(killed & is_real))
+        ctr = ctr.at[rcv.CTR["kill_fake"]].add(jnp.sum(killed & ~is_real))
+        p_learn = p_learn & ~killed
+        p_done = jnp.where(ghost, jnp.inf, p_done)
+        p_retry = p_retry | ghost
+        p_valid = p_valid & ~(killed & ~ghost)
+        free_at = jnp.where(free_at > kill_t, kill_t, free_at)
+
+        # -- (4) timeout: past-deadline copies go dirty; retryable ones
+        #    queue a re-dispatch (statically elided when timeouts are off)
+        if timeout_on:
+            newly = (p_valid & is_real & jnp.isfinite(p_done)
+                     & (t64 > p_dead) & ~p_to)
+            p_to = p_to | newly
+            p_learn = p_learn & ~newly
+            if retry_on:
+                p_retry = p_retry | (newly & ~p_dup & (p_att < budget))
+            ctr = ctr.at[rcv.CTR["timeout"]].add(jnp.sum(newly))
+
+        # -- (5) flush due completions: CLEAN → learner fold (oldest done
+        #    first, stable by insertion), dirty → queue drain only; every
+        #    real completion min-folds its task's response
+        due = p_valid & (p_done <= t64)
+        clean = due & p_learn
+        n_clean = jnp.sum(clean)
+        keydone = jnp.where(clean, p_done, jnp.inf)
+        order = jnp.lexsort((p_seq, keydone))
+        sel = order[:comp_cap]
+        rank_ok = jnp.arange(comp_cap) < n_clean
+        comp_w = jnp.where(rank_ok, p_rep[sel], -1).astype(jnp.int32)
+        comp_t = jnp.where(
+            rank_ok, (p_done[sel] - p_start[sel]).astype(jnp.float32), 0.0
+        ).astype(jnp.float32)
+        comp_now64 = jnp.max(jnp.where(rank_ok, p_done[sel], -jnp.inf))
+        comp_now32 = jnp.where(n_clean > 0, comp_now64, t64).astype(
+            jnp.float32)
+        over_flush = over_flush + jnp.maximum(
+            n_clean - comp_cap, 0).astype(jnp.int32)
+        max_clean = jnp.maximum(max_clean, jnp.max(
+            jnp.where(clean, p_done - p_start, -jnp.inf)))
+        dirty = due & ~p_learn
+        drain = drain.at[p_rep].add(dirty.astype(jnp.int32))
+        ctr = ctr.at[rcv.CTR["comp_dirty"]].add(jnp.sum(dirty & is_real))
+        dr = due & is_real
+        resp = resp.at[jnp.where(dr, p_task, n_pad)].min(
+            jnp.where(dr, p_done - p_arrv, jnp.inf))
+        ctr = ctr.at[rcv.CTR["comp_real"]].add(jnp.sum(dr))
+        ctr = ctr.at[rcv.CTR["comp_fake"]].add(jnp.sum(due & ~is_real))
+        p_valid = p_valid & ~due
+
+        # -- (6) queue-view drain for killed/dirty copies, BEFORE the serve
+        q_view = jnp.maximum(q_view - drain, 0)
+
+        # -- (7) membership transition (outage windows ride the merged
+        #    mask), then the μ̂ trace sample — the plain body's ordering
+        if churn:
+            learner = jax.lax.cond(
+                jnp.any(rejoin_t),
+                lambda l: lrn.reset_workers(l, rejoin_t, t32, active_t),
+                lambda l: l,
+                learner,
+            )
+        mu_tr = learner.mu_hat
+
+        # -- (8) stale-ghost sweep + (9) retry selection (earliest
+        #    deadline first; candidacy is the PRIMARY sort key — with
+        #    timeouts off every deadline ties at +inf)
+        if retry_on:
+            tclip = jnp.clip(p_task, 0, n_pad)
+            ghosts = p_valid & p_retry & ~jnp.isfinite(p_done)
+            p_valid = p_valid & ~(ghosts & jnp.isfinite(resp[tclip]))
+            cand = p_valid & p_retry & ~jnp.isfinite(resp[tclip])
+            keyd = jnp.where(cand, p_dead, jnp.inf)
+            orderR = jnp.lexsort((p_seq, keyd, ~cand))
+            chosen = orderR[:retry_cap]
+            okR = jnp.arange(retry_cap) < jnp.sum(cand)
+            r_task = jnp.where(okR, p_task[chosen], 0)
+            r_arrv = jnp.where(okR, p_arrv[chosen], t64)
+            r_cost = jnp.where(okR, p_cost[chosen], 1.0)
+            r_att = jnp.where(okR, p_att[chosen] + 1, 0)
+            ctr = ctr.at[rcv.CTR["retry"]].add(jnp.sum(okR))
+            ghost_sel = okR & ~jnp.isfinite(p_done[chosen])
+            selm = jnp.zeros_like(p_valid).at[chosen].set(okR)
+            alivem = jnp.zeros_like(p_valid).at[chosen].set(okR & ~ghost_sel)
+            ghostm = jnp.zeros_like(p_valid).at[chosen].set(ghost_sel)
+            p_retry = p_retry & ~selm
+            p_dup = p_dup | alivem
+            p_valid = p_valid & ~ghostm
+        else:
+            okR = jnp.zeros((0,), bool)
+            r_task = jnp.zeros((0,), jnp.int32)
+            r_arrv = jnp.zeros((0,), jnp.float64)
+            r_cost = jnp.zeros((0,), jnp.float64)
+            r_att = jnp.zeros((0,), jnp.int32)
+
+        # -- (10) ONE widened serve/dispatch call: arrivals + retry slots
+        #    against the CURRENT policy, mask and μ̂ (retry_cap=0 compiles
+        #    the plain serve math — bit-identical program)
+        if retry_on:
+            slots = jnp.concatenate([jnp.ones((k,), bool), okR])
+            fake_js, workers, q_view, learner, arr, key = rs._serve_step_math(
+                q_view, learner, arr, learner.mu_hat, lcfg, key,
+                comp_w, comp_t, (t32, last_fake, comp_now32),
+                k, policy, max_fake, True, None, use_alias, active_t,
+                k + retry_cap, slots,
+            )
+            wk, rw = workers[:k], workers[k:]
+        else:
+            fake_js, workers, q_view, learner, arr, key = rs._serve_step_math(
+                q_view, learner, arr, learner.mu_hat, lcfg, key,
+                comp_w, comp_t, (t32, last_fake, comp_now32),
+                k, policy, max_fake, True, None, use_alias, active_t,
+            )
+            wk = workers
+            rw = jnp.zeros((0,), jnp.int32)
+        last_fake = t32
+
+        # -- (11) speculative re-execution on the post-serve μ̂: duplicate
+        #    the slowest suspected stragglers via the planner's greedy fill
+        mu64 = learner.mu_hat.astype(jnp.float64)
+        if spec_cap > 0:
+            age = t64 - p_arrv
+            expect = p_cost / jnp.maximum(mu64[p_rep], mu_floor)
+            ratio = age / expect
+            tclip = jnp.clip(p_task, 0, n_pad)
+            candS = (p_valid & jnp.isfinite(p_done) & is_real & ~p_dup
+                     & ~p_retry & ~jnp.isfinite(resp[tclip])
+                     & (ratio > spec_ratio))
+            keyS = jnp.where(candS, -ratio, jnp.inf)
+            orderS = jnp.lexsort((p_seq, keyS, ~candS))
+            chosenS = orderS[:spec_cap]
+            okS = jnp.arange(spec_cap) < jnp.sum(candS)
+            p_dup = p_dup | jnp.zeros_like(p_valid).at[chosenS].set(okS)
+            s_task = jnp.where(okS, p_task[chosenS], 0)
+            s_arrv = jnp.where(okS, p_arrv[chosenS], t64)
+            s_cost = jnp.where(okS, p_cost[chosenS], 1.0)
+            s_att = jnp.where(okS, p_att[chosenS], 0)
+            mu_plan = (jnp.where(active_t, learner.mu_hat, 0.0)
+                       if churn else learner.mu_hat)
+            spec_w = strg.speculative_workers(mu_plan, spec_cap).astype(
+                jnp.int32)
+            ctr = ctr.at[rcv.CTR["spec"]].add(jnp.sum(okS))
+            q_view = q_view.at[spec_w].add(okS.astype(jnp.int32))
+        else:
+            okS = jnp.zeros((0,), bool)
+            s_task = jnp.zeros((0,), jnp.int32)
+            s_arrv = jnp.zeros((0,), jnp.float64)
+            s_cost = jnp.zeros((0,), jnp.float64)
+            s_att = jnp.zeros((0,), jnp.int32)
+            spec_w = jnp.zeros((0,), jnp.int32)
+
+        # -- (12) deadlines for the new copies, from the post-serve μ̂
+        #    (numpy-computed backoff LUT on both layers)
+        dead_new = t64 + (mult * float(lut[0])) * costs64 / jnp.maximum(
+            mu64[jnp.maximum(wk, 0)], mu_floor)
+        lut_j = jnp.asarray(lut)
+        if retry_on:
+            fac_r = mult * lut_j[jnp.clip(r_att, 0, len(lut) - 1)]
+            dead_rt = t64 + fac_r * r_cost / jnp.maximum(
+                mu64[jnp.maximum(rw, 0)], mu_floor)
+        else:
+            dead_rt = jnp.zeros((0,), jnp.float64)
+        if spec_cap > 0:
+            fac_s = mult * lut_j[jnp.clip(s_att, 0, len(lut) - 1)]
+            dead_sp = t64 + fac_s * s_cost / jnp.maximum(
+                mu64[spec_w], mu_floor)
+        else:
+            dead_sp = jnp.zeros((0,), jnp.float64)
+
+        # -- (13) pool chain: fakes → probe bursts → reals → retries →
+        #    specs, the exact sequential recurrence with per-slot gating
+        act = jnp.concatenate([
+            fake_js >= 0, burst_t >= 0, jnp.ones((k,), bool),
+            okR & (rw >= 0), okS,
+        ])
+        sub_w = jnp.concatenate([
+            jnp.maximum(fake_js, 0), jnp.maximum(burst_t, 0), wk,
+            jnp.maximum(rw, 0), spec_w,
+        ])
+        sub_arr = jnp.concatenate([
+            jnp.full((max_fake + burst_cap,), t64), times64,
+            jnp.full((retry_cap + spec_cap,), t64),
+        ])
+        sub_cost = jnp.concatenate([
+            jnp.full((max_fake,), fake_cost),
+            jnp.full((burst_cap,), burst_cost), costs64, r_cost, s_cost,
+        ])
+
+        def pstep(fa, x):
+            w, a, c, ac = x
+            start = jnp.maximum(a, fa[w])
+            done = start + c / speeds64[w]
+            fa = jnp.where(ac, fa.at[w].set(done), fa)
+            return fa, (start, done)
+
+        free_at, (sub_start, sub_done) = jax.lax.scan(
+            pstep, free_at, (sub_w, sub_arr, sub_cost, act)
+        )
+
+        # -- (14) pending append: compact survivors, write the new copies
+        #    with their full lifecycle columns
+        sub_task = jnp.concatenate([
+            jnp.full((max_fake + burst_cap,), -1, jnp.int32),
+            turn * k + jnp.arange(k, dtype=jnp.int32),
+            r_task.astype(jnp.int32), s_task.astype(jnp.int32),
+        ])
+        sub_arrv = jnp.concatenate([
+            jnp.full((max_fake + burst_cap,), t64), times64, r_arrv, s_arrv,
+        ])
+        sub_dead = jnp.concatenate([
+            jnp.full((max_fake + burst_cap,), jnp.inf), dead_new,
+            dead_rt, dead_sp,
+        ])
+        sub_att = jnp.concatenate([
+            jnp.zeros((max_fake + burst_cap + k,), jnp.int32),
+            r_att.astype(jnp.int32), s_att.astype(jnp.int32),
+        ])
+        sub_dup = jnp.concatenate([
+            jnp.zeros((max_fake + burst_cap + k + retry_cap,), bool),
+            jnp.ones((spec_cap,), bool),
+        ])
+        ctr = ctr.at[rcv.CTR["launch_fake"]].add(
+            jnp.sum(act[:max_fake + burst_cap]))
+
+        pkey = jnp.where(p_valid, p_seq, jnp.iinfo(jnp.int32).max)
+        perm = jnp.argsort(pkey).astype(jnp.int32)
+        (p_done, p_start, p_rep, p_seq, p_valid, p_task, p_arrv, p_cost,
+         p_dead, p_att, p_dup, p_learn, p_to, p_retry) = (
+            p_done[perm], p_start[perm], p_rep[perm], p_seq[perm],
+            p_valid[perm], p_task[perm], p_arrv[perm], p_cost[perm],
+            p_dead[perm], p_att[perm], p_dup[perm], p_learn[perm],
+            p_to[perm], p_retry[perm])
+        nv = jnp.sum(p_valid, dtype=jnp.int32)
+        pos = jnp.cumsum(act.astype(jnp.int32)) - 1
+        slot = jnp.where(act, nv + pos, pend_cap)
+        p_done = p_done.at[slot].set(sub_done, mode="drop")
+        p_start = p_start.at[slot].set(sub_start, mode="drop")
+        p_rep = p_rep.at[slot].set(sub_w.astype(jnp.int32), mode="drop")
+        p_seq = p_seq.at[slot].set(seq_ctr + pos, mode="drop")
+        p_valid = p_valid.at[slot].set(True, mode="drop")
+        p_task = p_task.at[slot].set(sub_task, mode="drop")
+        p_arrv = p_arrv.at[slot].set(sub_arrv, mode="drop")
+        p_cost = p_cost.at[slot].set(sub_cost, mode="drop")
+        p_dead = p_dead.at[slot].set(sub_dead, mode="drop")
+        p_att = p_att.at[slot].set(sub_att, mode="drop")
+        p_dup = p_dup.at[slot].set(sub_dup, mode="drop")
+        p_learn = p_learn.at[slot].set(True, mode="drop")
+        p_to = p_to.at[slot].set(False, mode="drop")
+        p_retry = p_retry.at[slot].set(False, mode="drop")
+        over_pend = over_pend + jnp.sum(
+            act & (slot >= pend_cap)).astype(jnp.int32)
+        seq_ctr = seq_ctr + jnp.sum(act).astype(jnp.int32)
+
+        carry = (q_view, learner, arr, key, last_fake, free_at,
+                 p_done, p_start, p_rep, p_seq, p_valid, seq_ctr,
+                 over_flush, over_pend,
+                 p_task, p_arrv, p_cost, p_dead, p_att, p_dup, p_learn,
+                 p_to, p_retry, resp, ctr, max_clean, turn + 1)
+        return carry, mu_tr
+
+    @functools.partial(jax.jit, donate_argnums=(1,))
+    def run(lcfg, carry0, xs):
+        return jax.lax.scan(functools.partial(body, lcfg), carry0, xs)
+
+    return run
+
+
 def run_simulation_scan(
     router: rt.RosellaRouter,
     pool: rt.SimulatedPool,
@@ -244,6 +578,7 @@ def run_simulation_scan(
     seed: int = 0,
     arrival_batch: int = 1,
     pend_cap: int = PEND_CAP,
+    strict_overflow: bool = True,
 ):
     """Drop-in for ``run_simulation`` with the whole loop scan-compiled.
 
@@ -269,6 +604,7 @@ def run_simulation_scan(
     return run_workload_scan(
         router, pool, times_np, costs_np, speeds_np,
         fake_cost=request_cost * 0.25, pend_cap=pend_cap,
+        strict_overflow=strict_overflow,
     )
 
 
@@ -286,7 +622,20 @@ def run_workload_scan(
     burst_cost: float | None = None,  # default: 4×fake_cost = the full
     # request cost — rejoin probes must be cost-calibrated with real
     # traffic or the rejoined worker's μ̂ rebuilds ~4× high
-    pend_cap: int = PEND_CAP,
+    kill_np: np.ndarray | None = None,  # f64[T, n] crash instants (+inf)
+    stall_np: np.ndarray | None = None,  # f64[T, n] blackout instants
+    stall_dur_np: np.ndarray | None = None,  # f64[T, n] blackout durations
+    recovery=None,  # RecoveryConfig — engages the failure-semantics scan
+    # even without fault columns (timeouts/retries against slow workers)
+    pend_cap: int | None = None,  # None → auto-sized: the total-submission
+    # bound (turns × per-turn appends), clamped to [PEND_CAP, 65536] — a
+    # workload that can NEVER overflow the pending set. Pass an explicit
+    # cap to bound the per-turn flush-sort cost instead (the perf path);
+    # overflow then raises under strict_overflow. The cap does not change
+    # results absent overflow.
+    strict_overflow: bool = True,  # overflowed capacities RAISE instead of
+    # returning silently-lossy results; pass False to get the counters
+    # back in info and handle them yourself (the benchmark harness warns)
     chunk_turns: int | None = None,  # stream the horizon through scans of
     # ≤ this many turns: the DONATED carry flows device-to-device across
     # chunk boundaries (no host round-trip), so arbitrarily long horizons
@@ -310,9 +659,20 @@ def run_workload_scan(
     worker's rebuilt sample ring is cost-calibrated with real traffic —
     matching ``env.serving.run_workload`` (the host loop)
     float-for-float. Without them, the compiled program is byte-identical
-    to the pre-env scan."""
+    to the pre-env scan.
+
+    With fault columns (``kill_np``/``stall_np``/``stall_dur_np`` from
+    ``Scenario.compile_serving``) or a ``recovery`` config, the
+    failure-semantics program runs instead (``_build_scan_faulty``): crash
+    kills, blackout stalls, deadline timeouts, retry re-dispatch and
+    speculative re-execution — float-for-float against
+    ``env.serving.run_workload`` with the same recovery config. Responses
+    are then task-indexed with NaN for lost tasks, and ``info["ledger"]``
+    carries the conservation ledger."""
     T, k = times_np.shape
     n = router.n
+    faulty = (kill_np is not None or stall_np is not None
+              or recovery is not None)
     if active_np is None and router.active is not None:
         # the router already carries a (static) membership mask — honor it
         # like the host loop does on every serve_turn, or the scan would
@@ -327,6 +687,21 @@ def run_workload_scan(
         burst_cap = int(burst_np.shape[1])
     if burst_cost is None:
         burst_cost = 4.0 * fake_cost
+    from repro.serving import recovery as rcv
+
+    rc = (recovery if recovery is not None else rcv.INERT_RECOVERY) \
+        if faulty else None
+    per_turn = 8 + burst_cap + k + (
+        (rc.retry_cap + rc.spec_cap) if faulty else 0)
+    if pend_cap is None:
+        # total-submission bound: this workload can never overflow the
+        # pending set (the flush-sort cost scales with the cap — pass an
+        # explicit pend_cap on perf-critical paths)
+        need = max(PEND_CAP, T * per_turn)
+        pend_cap = PEND_CAP
+        while pend_cap < need and pend_cap < 65536:
+            pend_cap <<= 1
+    n_tasks = T * k
 
     from jax.experimental import enable_x64
 
@@ -350,6 +725,15 @@ def run_workload_scan(
                 np.asarray(rej, bool),
                 np.asarray(bw, np.int32),
             )
+        if faulty:
+            xs_np = xs_np + (
+                np.asarray(kill_np, np.float64) if kill_np is not None
+                else np.full((T, n), np.inf),
+                np.asarray(stall_np, np.float64) if stall_np is not None
+                else np.full((T, n), np.inf),
+                np.asarray(stall_dur_np, np.float64)
+                if stall_dur_np is not None else np.zeros((T, n)),
+            )
         carry0 = (
             jnp.asarray(router.q_view),
             router.learner,
@@ -366,14 +750,36 @@ def run_workload_scan(
             jnp.int32(0),  # over_flush
             jnp.int32(0),  # over_pend
         )
-        run = _build_scan(
-            # the flush batch can never exceed the pending buffer; the
-            # SERVE_COMP_CAP shape keeps the learner fold identical to the
-            # host loop's serve_step padding at the default capacities
-            n, k, min(rt.SERVE_COMP_CAP, pend_cap), pend_cap,
-            router.policy, 8, router.use_alias, fake_cost,
-            churn, burst_cap, float(burst_cost),
-        )
+        if faulty:
+            carry0 = carry0 + (
+                jnp.full((pend_cap,), -1, jnp.int32),  # p_task
+                jnp.zeros((pend_cap,), jnp.float64),  # p_arrv
+                jnp.ones((pend_cap,), jnp.float64),  # p_cost
+                jnp.full((pend_cap,), jnp.inf, jnp.float64),  # p_dead
+                jnp.zeros((pend_cap,), jnp.int32),  # p_att
+                jnp.zeros((pend_cap,), bool),  # p_dup
+                jnp.ones((pend_cap,), bool),  # p_learn
+                jnp.zeros((pend_cap,), bool),  # p_to
+                jnp.zeros((pend_cap,), bool),  # p_retry
+                jnp.full((n_tasks + 1,), jnp.inf, jnp.float64),  # resp
+                jnp.zeros((rcv.NCTR,), jnp.int64),  # ctr
+                jnp.float64(0.0),  # max_clean
+                jnp.int32(0),  # turn
+            )
+            run = _build_scan_faulty(
+                n, k, min(rt.SERVE_COMP_CAP, pend_cap), pend_cap,
+                router.policy, 8, router.use_alias, fake_cost,
+                churn, burst_cap, float(burst_cost), rc,
+            )
+        else:
+            run = _build_scan(
+                # the flush batch can never exceed the pending buffer; the
+                # SERVE_COMP_CAP shape keeps the learner fold identical to
+                # the host loop's serve_step padding at default capacities
+                n, k, min(rt.SERVE_COMP_CAP, pend_cap), pend_cap,
+                router.policy, 8, router.use_alias, fake_cost,
+                churn, burst_cap, float(burst_cost),
+            )
         step = T if chunk_turns is None else max(int(chunk_turns), 1)
         carry = carry0
         resp_l, mu_l = [], []
@@ -381,10 +787,30 @@ def run_workload_scan(
             xs = tuple(
                 jnp.asarray(x[s:s + step]) for x in xs_np
             )
-            carry, (resp_c, mu_c) = run(router.lcfg, carry, xs)
-            resp_l.append(resp_c)
-            mu_l.append(mu_c)
-        if resp_l:
+            carry, ys = run(router.lcfg, carry, xs)
+            if faulty:
+                mu_l.append(ys)
+            else:
+                resp_l.append(ys[0])
+                mu_l.append(ys[1])
+        ledger = None
+        if faulty:
+            # the response min-fold rides the carry (a task's copies can
+            # complete many turns after its launch); finalize with the
+            # shared numpy epilogue so host and scan close the books
+            # identically
+            validF = np.asarray(carry[10])
+            resp_acc = np.asarray(carry[23])[:n_tasks].copy()
+            ctr = np.asarray(carry[24]).copy()
+            rcv.drain_pending(
+                resp_acc, ctr, np.asarray(carry[6])[validF],
+                np.asarray(carry[14])[validF], np.asarray(carry[15])[validF],
+            )
+            resp, ledger = rcv.build_ledger(
+                resp_acc, ctr, n_tasks, float(carry[25]))
+            mu_trace = (np.concatenate([np.asarray(m) for m in mu_l])
+                        if mu_l else np.zeros((0, n), np.float32))
+        elif resp_l:
             resp = np.concatenate([np.asarray(r) for r in resp_l]).reshape(-1)
             mu_trace = np.concatenate([np.asarray(m) for m in mu_l])
         else:
@@ -392,9 +818,11 @@ def run_workload_scan(
             mu_trace = np.zeros((0, n), np.float32)
         info = {
             "turns": T,
-            "flush_overflow": int(carry[-2]),
-            "pend_overflow": int(carry[-1]),
+            "flush_overflow": int(carry[12]),
+            "pend_overflow": int(carry[13]),
         }
+        if ledger is not None:
+            info["ledger"] = ledger
         # advance the host-side objects to the final state, as the host
         # loop would have left them
         router.q_view = jnp.asarray(np.asarray(carry[0]))
@@ -415,6 +843,15 @@ def run_workload_scan(
         router.table_front = dsp.build_alias_table(
             router.mu_front, router.active
         )
+    if strict_overflow and (info["flush_overflow"] or info["pend_overflow"]):
+        raise RuntimeError(
+            f"scan capacities overflowed (flush_overflow="
+            f"{info['flush_overflow']}, pend_overflow="
+            f"{info['pend_overflow']}): results silently dropped work. "
+            f"Raise pend_cap (current {pend_cap}; pend_cap=None auto-sizes "
+            f"to the total-submission bound) or pass strict_overflow=False "
+            f"to inspect the counters."
+        )
     return resp, mu_trace, info
 
 
@@ -426,7 +863,8 @@ def run_workload_scan(
 @functools.lru_cache(maxsize=8)
 def _build_fleet_scan(n, S, k_f, comp_cap, pend_cap, policy, max_fake,
                       use_alias, fake_cost, sync_every, frozen_mu,
-                      churn=False, burst_cap=0, burst_cost=0.0, mesh=None):
+                      churn=False, burst_cap=0, burst_cost=0.0, mesh=None,
+                      faulty=False):
     """Compile-once factory for the FLEET scan program: S full frontends
     (stale views, learners, λ̂ streams, double-buffered μ̂, herd
     bookkeeping — a ``FleetServeCarry``) ride the carry alongside the env
@@ -475,9 +913,19 @@ def _build_fleet_scan(n, S, k_f, comp_cap, pend_cap, policy, max_fake,
         )
         sync_stage = fsync.make_fleet_scan_sync(mesh)
 
+    if faulty:
+        from repro.serving import recovery as rcv
+
     def body(lcfg, carry, xs):
-        (fl, free_at, p_done, p_start, p_rep, p_seq, p_fr, p_valid,
-         seq_ctr, turn, over_flush, over_pend) = carry
+        if faulty:
+            (fl, free_at, p_done, p_start, p_rep, p_seq, p_fr, p_valid,
+             seq_ctr, turn, over_flush, over_pend,
+             p_task, p_arrv, p_learn, resp_acc, ctr, max_clean) = carry
+            xs, fault_xs = xs[:-3], xs[-3:]
+            kill_t, stall_t, stall_d = fault_xs
+        else:
+            (fl, free_at, p_done, p_start, p_rep, p_seq, p_fr, p_valid,
+             seq_ctr, turn, over_flush, over_pend) = carry
         if churn:
             (times64, costs64, speeds64, active_t, rejoin_t, changed_t,
              burst_t) = xs
@@ -487,6 +935,28 @@ def _build_fleet_scan(n, S, k_f, comp_cap, pend_cap, policy, max_fake,
             burst_t = jnp.zeros((0,), jnp.int32)
         t64 = times64[-1]
         t32 = t64.astype(jnp.float32)
+
+        # -- fault arithmetic (kill/stall + loss accounting subset — the
+        #    fleet carries NO retry/timeout/speculation machinery): same
+        #    per-copy math as _build_scan_faulty steps (2)-(3), with the
+        #    queue drain tracked per (frontend, worker)
+        if faulty:
+            is_real = p_task >= 0
+            n_pad = resp_acc.shape[0] - 1
+            drainSn = jnp.zeros((S, n), jnp.int32)
+            aff = p_valid & jnp.isfinite(p_done) & (p_done > stall_t[p_rep])
+            p_done = jnp.where(aff, p_done + stall_d[p_rep], p_done)
+            p_learn = p_learn & ~aff
+            ctr = ctr.at[rcv.CTR["stalled"]].add(jnp.sum(aff & is_real))
+            free_at = jnp.where(free_at > stall_t, free_at + stall_d,
+                                free_at)
+            killed = p_valid & jnp.isfinite(p_done) & (p_done > kill_t[p_rep])
+            drainSn = drainSn.at[p_fr, p_rep].add(killed.astype(jnp.int32))
+            ctr = ctr.at[rcv.CTR["kill_real"]].add(jnp.sum(killed & is_real))
+            ctr = ctr.at[rcv.CTR["kill_fake"]].add(jnp.sum(killed & ~is_real))
+            p_learn = p_learn & ~killed
+            p_valid = p_valid & ~killed
+            free_at = jnp.where(free_at > kill_t, kill_t, free_at)
 
         learner = fl.learner
         mu_front = fl.mu_front
@@ -576,7 +1046,8 @@ def _build_fleet_scan(n, S, k_f, comp_cap, pend_cap, policy, max_fake,
         #    frontend, oldest done first, stable by insertion — the single
         #    scan's exact flush math vmapped over the p_fr partition
         due = p_valid & (p_done <= t64)
-        fmask = due[None, :] & (
+        clean = due & p_learn if faulty else due
+        fmask = clean[None, :] & (
             p_fr[None, :] == jnp.arange(S, dtype=jnp.int32)[:, None]
         )
 
@@ -604,10 +1075,27 @@ def _build_fleet_scan(n, S, k_f, comp_cap, pend_cap, policy, max_fake,
         comp_w, comp_t, comp_now32, flushed_f, n_due_f = jax.vmap(flushf)(
             fmask
         )
-        p_valid = p_valid & ~jnp.any(flushed_f, axis=0)
         over_flush = over_flush + jnp.sum(
             jnp.maximum(n_due_f - comp_cap, 0)
         ).astype(jnp.int32)
+        if faulty:
+            # dirty completions (stall-touched, killed-adjacent) drain the
+            # owning frontend's view only; every real completion min-folds
+            # its task's response; the books stay balanced
+            max_clean = jnp.maximum(max_clean, jnp.max(
+                jnp.where(clean, p_done - p_start, -jnp.inf)))
+            dirtyF = due & ~p_learn
+            drainSn = drainSn.at[p_fr, p_rep].add(dirtyF.astype(jnp.int32))
+            ctr = ctr.at[rcv.CTR["comp_dirty"]].add(jnp.sum(dirtyF & is_real))
+            drF = due & is_real
+            resp_acc = resp_acc.at[jnp.where(drF, p_task, n_pad)].min(
+                jnp.where(drF, p_done - p_arrv, jnp.inf))
+            ctr = ctr.at[rcv.CTR["comp_real"]].add(jnp.sum(drF))
+            ctr = ctr.at[rcv.CTR["comp_fake"]].add(jnp.sum(due & ~is_real))
+            p_valid = p_valid & ~due
+            q_view = jnp.maximum(q_view - drainSn, 0)
+        else:
+            p_valid = p_valid & ~jnp.any(flushed_f, axis=0)
 
         # -- herd correction (pre-flip mu_front, like the host): inflate
         #    each view by the expected peer placements since its last sync,
@@ -711,6 +1199,10 @@ def _build_fleet_scan(n, S, k_f, comp_cap, pend_cap, policy, max_fake,
             p_done[perm], p_start[perm], p_rep[perm], p_seq[perm],
             p_fr[perm], p_valid[perm]
         )
+        if faulty:
+            p_task, p_arrv, p_learn = (
+                p_task[perm], p_arrv[perm], p_learn[perm]
+            )
         nv = jnp.sum(p_valid, dtype=jnp.int32)
         pos = jnp.cumsum(act.astype(jnp.int32)) - 1
         slot = jnp.where(act, nv + pos, pend_cap)
@@ -720,6 +1212,19 @@ def _build_fleet_scan(n, S, k_f, comp_cap, pend_cap, policy, max_fake,
         p_seq = p_seq.at[slot].set(seq_ctr + pos, mode="drop")
         p_fr = p_fr.at[slot].set(sub_fr, mode="drop")
         p_valid = p_valid.at[slot].set(True, mode="drop")
+        if faulty:
+            nfb = S * max_fake + burst_cap
+            sub_task = jnp.concatenate([
+                jnp.full((nfb,), -1, jnp.int32),
+                turn * k + jnp.arange(k, dtype=jnp.int32),
+            ])
+            sub_arrv = jnp.concatenate([
+                jnp.full((nfb,), t64), times64,
+            ])
+            p_task = p_task.at[slot].set(sub_task, mode="drop")
+            p_arrv = p_arrv.at[slot].set(sub_arrv, mode="drop")
+            p_learn = p_learn.at[slot].set(True, mode="drop")
+            ctr = ctr.at[rcv.CTR["launch_fake"]].add(jnp.sum(act[:nfb]))
         over_pend = over_pend + jnp.sum(act & (slot >= pend_cap)).astype(
             jnp.int32
         )
@@ -733,6 +1238,9 @@ def _build_fleet_scan(n, S, k_f, comp_cap, pend_cap, policy, max_fake,
         )
         carry = (fl, free_at, p_done, p_start, p_rep, p_seq, p_fr, p_valid,
                  seq_ctr, turn + 1, over_flush, over_pend)
+        if faulty:
+            carry = carry + (p_task, p_arrv, p_learn, resp_acc, ctr,
+                             max_clean)
         return carry, (resp, mu_tr, workers, did_sync, gaps)
 
     @functools.partial(jax.jit, donate_argnums=(1,))
@@ -759,11 +1267,22 @@ def run_fleet_workload_scan(
     frozen_mu: bool = False,
     chunk_turns: int | None = None,
     mesh=None,
+    kill_np: np.ndarray | None = None,  # f64[T, n] crash instants (+inf)
+    stall_np: np.ndarray | None = None,  # f64[T, n] blackout instants (+inf)
+    stall_dur_np: np.ndarray | None = None,  # f64[T, n] blackout durations
+    strict_overflow: bool = True,
 ):
     """The one-program FLEET over a pre-materialized workload: S frontends
     × environment × serving loop as a single ``lax.scan`` (chunked when
     ``chunk_turns`` streams a long horizon — the donated carry crosses
     chunk boundaries device-side).
+
+    ``kill_np``/``stall_np``/``stall_dur_np`` enable the fleet's fault
+    SUBSET — crash (in-flight kill) and blackout (completion stall) with
+    full loss accounting (``info["ledger"]``) — but NOT the re-dispatch
+    machinery (timeout/retry/speculation), which is single-frontend only
+    (``run_workload_scan``). At S=1 the faulty fleet is bit-equal to the
+    faulty single scan with ``recovery=None``.
 
     The arrival batch k must divide evenly over the S frontends (frontend
     f owns the contiguous chunk ``times[:, f*k_f:(f+1)*k_f]`` — the host
@@ -808,6 +1327,8 @@ def run_fleet_workload_scan(
     if burst_cost is None:
         burst_cost = 4.0 * fake_cost
     sync_every = max(int(sync_every), 1)
+    faulty = kill_np is not None or stall_np is not None
+    from repro.serving import recovery as rcv
 
     from jax.experimental import enable_x64
 
@@ -838,6 +1359,16 @@ def run_fleet_workload_scan(
                 changed,
                 np.asarray(bw, np.int32),
             )
+        if faulty:
+            xs_np = xs_np + (
+                np.asarray(kill_np, np.float64) if kill_np is not None
+                else np.full((T, n), np.inf),
+                np.asarray(stall_np, np.float64) if stall_np is not None
+                else np.full((T, n), np.inf),
+                np.asarray(stall_dur_np, np.float64)
+                if stall_dur_np is not None else np.zeros((T, n)),
+            )
+        n_tasks = T * k
 
         from repro.fleet.state import FleetServeCarry
 
@@ -887,10 +1418,19 @@ def run_fleet_workload_scan(
             jnp.int32(0),  # over_flush
             jnp.int32(0),  # over_pend
         )
+        if faulty:
+            carry0 = carry0 + (
+                jnp.full((pend_cap,), -1, jnp.int32),  # p_task
+                jnp.zeros((pend_cap,), jnp.float64),  # p_arrv
+                jnp.ones((pend_cap,), bool),  # p_learn
+                jnp.full((n_tasks + 1,), jnp.inf, jnp.float64),  # resp_acc
+                jnp.zeros((rcv.NCTR,), jnp.int64),  # ctr
+                jnp.float64(0.0),  # max_clean
+            )
         run = _build_fleet_scan(
             n, S, k_f, min(rt.SERVE_COMP_CAP, pend_cap), pend_cap,
             frs[0].policy, 8, use_alias, fake_cost, sync_every, frozen_mu,
-            churn, burst_cap, float(burst_cost), mesh,
+            churn, burst_cap, float(burst_cost), mesh, faulty,
         )
         step = T if chunk_turns is None else max(int(chunk_turns), 1)
         carry = carry0
@@ -913,6 +1453,23 @@ def run_fleet_workload_scan(
             workers_log = np.zeros((0, S, k_f), np.int32)
             synced = np.zeros((0,), bool)
             gaps = np.zeros((0, S), np.int32)
+
+        ledger = None
+        if faulty:
+            # finalize with the shared numpy epilogue (drain still-pending
+            # copies, min-fold responses, close the conservation books) —
+            # identical to the single faulty scan's ending, so the S=1
+            # bit-equality extends to the returned responses and ledger
+            validF = np.asarray(carry[7])
+            resp_acc = np.asarray(carry[15])[:n_tasks].copy()
+            ctr_np = np.asarray(carry[16]).copy()
+            rcv.drain_pending(
+                resp_acc, ctr_np, np.asarray(carry[2])[validF],
+                np.asarray(carry[12])[validF],
+                np.asarray(carry[13])[validF],
+            )
+            resp, ledger = rcv.build_ledger(
+                resp_acc, ctr_np, n_tasks, float(carry[17]))
 
         fl = carry[0]
         mu_pend_np = np.asarray(fl.mu_pend)
@@ -944,8 +1501,8 @@ def run_fleet_workload_scan(
 
         info = {
             "turns": T,
-            "flush_overflow": int(carry[-2]),
-            "pend_overflow": int(carry[-1]),
+            "flush_overflow": int(carry[10]),
+            "pend_overflow": int(carry[11]),
             "frontends": np.tile(
                 np.repeat(np.arange(S, dtype=np.int64), k_f), T
             ),
@@ -960,6 +1517,15 @@ def run_fleet_workload_scan(
                 [float(est.lam_hat_ema(fr.arr)) for fr in frs]
             ),
         }
+        if ledger is not None:
+            info["ledger"] = ledger
+    if strict_overflow and (info["flush_overflow"] or info["pend_overflow"]):
+        raise RuntimeError(
+            f"fleet scan overflow: flush_overflow={info['flush_overflow']} "
+            f"pend_overflow={info['pend_overflow']} with pend_cap="
+            f"{pend_cap} — results silently dropped completions; raise "
+            "pend_cap or pass strict_overflow=False to accept"
+        )
     return resp, mu_trace, info
 
 

@@ -84,13 +84,18 @@ def test_scan_alias_vs_inverse_cdf_statistical_parity():
 
 
 def test_scan_pend_overflow_is_counted_not_silent():
-    """An undersized pending buffer reports dropped submissions instead of
-    silently corrupting the run."""
+    """An undersized pending buffer RAISES by default (loud, never a
+    silently corrupted run); opting out still reports the drop count.
+    tests/test_faults.py pins the raise + the pend_cap auto-sizing."""
+    kw = dict(arrival_rate=3.0, horizon=60.0, seed=0, arrival_batch=16,
+              pend_cap=8)
     r = RosellaRouter(4, mu_bar=SPEEDS.sum(), seed=0, async_mu=False)
     p = SimulatedPool(SPEEDS)
-    _, _, info = run_simulation_scan(
-        r, p, arrival_rate=3.0, horizon=60.0, seed=0, arrival_batch=16,
-        pend_cap=8)
+    with pytest.raises(RuntimeError, match="pend_cap"):
+        run_simulation_scan(r, p, **kw)
+    r = RosellaRouter(4, mu_bar=SPEEDS.sum(), seed=0, async_mu=False)
+    p = SimulatedPool(SPEEDS)
+    _, _, info = run_simulation_scan(r, p, strict_overflow=False, **kw)
     assert info["pend_overflow"] > 0
 
 
