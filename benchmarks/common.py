@@ -1,7 +1,11 @@
 """Shared helpers for the figure benchmarks: run a sim config, time it, and
-emit ``name,us_per_call,derived`` CSV rows (one per paper table/figure)."""
+emit ``name,us_per_call,derived`` CSV rows (one per paper table/figure) —
+plus the uniform ``BENCH_*.json`` writer (schema version + host/jax/device
+provenance) all the suite benchmarks emit through."""
 from __future__ import annotations
 
+import json
+import platform
 import time
 
 import jax
@@ -9,6 +13,47 @@ import numpy as np
 
 from repro.core import metrics as M
 from repro.core import simulator as sim
+
+#: Bump when the shared BENCH envelope changes shape (suite payloads keep
+#: their own top-level keys — readers like ci.sh's smoke comparisons are
+#: unaffected by the envelope).
+BENCH_SCHEMA_VERSION = 1
+
+
+def bench_provenance() -> dict:
+    """Where this artifact was measured: host, python, jax, devices."""
+    return {
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+        "hostname": platform.node(),
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "devices": [str(d) for d in jax.devices()],
+    }
+
+
+def write_bench(stem: str, payload: dict, *, smoke: bool = False,
+                smoke_reference: dict | None = None,
+                path: str | None = None) -> str:
+    """Write ``BENCH_<stem>.json`` (committed) or ``BENCH_<stem>_smoke.json``
+    (gitignored) with the shared envelope: the suite's payload keys stay
+    top-level (existing readers — ci.sh's non-gating smoke comparisons —
+    keep working), plus ``schema_version`` + ``provenance``; smoke runs get
+    ``smoke: true``, full runs record their reduced-shape
+    ``smoke_reference`` for those comparisons."""
+    out = dict(payload)
+    out["schema_version"] = BENCH_SCHEMA_VERSION
+    out["provenance"] = bench_provenance()
+    if smoke:
+        out["smoke"] = True
+    elif smoke_reference is not None:
+        out["smoke_reference"] = smoke_reference
+    if path is None:
+        path = f"BENCH_{stem}_smoke.json" if smoke else f"BENCH_{stem}.json"
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {path}")
+    return path
 
 
 def run_sim(cfg, params, seed: int = 0, warmup_frac: float = 0.3):

@@ -26,11 +26,11 @@ Run:  PYTHONPATH=src:. python benchmarks/fault_suite.py [--smoke]
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import numpy as np
 
+from benchmarks.common import write_bench
 from repro import env
 from repro.core import metrics as M
 from repro.core import policies as pol
@@ -160,8 +160,7 @@ def main():
     if args.smoke:
         results = run_suite(SMOKE_SCENARIOS, horizon=120.0,
                             arrival_batch=8, seed=args.seed)
-        out = {"smoke": True, "scenarios": results}
-        path = "BENCH_faults_smoke.json"
+        write_bench("faults", {"scenarios": results}, smoke=True)
     else:
         results = run_suite(FULL_SCENARIOS, arrival_batch=8,
                             seed=args.seed)
@@ -179,25 +178,21 @@ def main():
                         "ledger (NaN response = lost task)",
             },
             "scenarios": results,
-            "smoke_reference": {
-                name: {
-                    p: {
-                        c: {
-                            "bench_throughput_rps":
-                                r["bench_throughput_rps"],
-                            "p50": r["p50"],
-                        }
-                        for c, r in cells.items()
-                    }
-                    for p, cells in entry["policies"].items()
-                }
-                for name, entry in smoke_ref.items()
-            },
         }
-        path = "BENCH_faults.json"
-    with open(path, "w") as f:
-        json.dump(out, f, indent=1)
-    print(f"wrote {path}")
+        write_bench("faults", out, smoke_reference={
+            name: {
+                p: {
+                    c: {
+                        "bench_throughput_rps":
+                            r["bench_throughput_rps"],
+                        "p50": r["p50"],
+                    }
+                    for c, r in cells.items()
+                }
+                for p, cells in entry["policies"].items()
+            }
+            for name, entry in smoke_ref.items()
+        })
 
 
 if __name__ == "__main__":

@@ -57,7 +57,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import csv_row
+from benchmarks.common import csv_row, write_bench
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -501,11 +501,11 @@ def run(smoke: bool = False, json_path: str | None = None):
                 "staleness_sweep": stale,
                 "s1_parity": parity,
             },
-            "smoke_reference": smoke_point,
         }
     if json_path:
-        with open(json_path, "w") as f:
-            json.dump(summary, f, indent=1)
+        write_bench("fleet", summary, smoke=smoke,
+                    smoke_reference=None if smoke else smoke_point,
+                    path=json_path)
         rows.append(csv_row("fleet_bench_json", 0.0, f"wrote={json_path}"))
     return rows, summary
 

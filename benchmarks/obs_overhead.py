@@ -1,0 +1,89 @@
+"""Telemetry overhead: the in-scan window fold must be near-free.
+
+Runs the one-program serving scan on the churn scenario three ways —
+telemetry off, telemetry on (windows + per-request ys), and stream-only
+(``emit_responses=False``) — compiles each program once, then times warm
+re-dispatches. Reports the warm-path overhead ratio of each telemetry
+mode against the off baseline and warns above ``WARN_OVERHEAD``.
+
+``--smoke`` (the ci.sh non-gating gate) uses a short horizon and writes
+``BENCH_obs_smoke.json`` (gitignored); a full run writes
+``BENCH_obs.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import write_bench
+from repro import env, obs
+from repro.env.serving import run_scenario
+
+WARN_OVERHEAD = 0.10  # warn when telemetry costs > 10% warm wall-clock
+
+
+def _time_mode(scn, observe, *, reps: int, seed: int = 0) -> dict:
+    def once():
+        t0 = time.time()
+        out = run_scenario(scn, use_scan=True, sequential_pool=True,
+                           arrival_batch=8, seed=seed, observe=observe)
+        return time.time() - t0, out
+
+    cold, out = once()  # compile
+    walls = [once()[0] for _ in range(reps)]
+    res = {
+        "wall_cold_s": cold,
+        # min, not median: warm dispatches of a fixed program have a
+        # one-sided noise distribution, and the floor is the cost
+        "wall_warm_s": float(np.min(walls)),
+        "wall_warm_all": walls,
+        "turns": out["info"]["turns"],
+        "n_responses": int(np.asarray(out["responses"]).size),
+    }
+    if observe is not None:
+        res["n_windows"] = len(out["info"]["windows"])
+    return res
+
+
+def run(smoke: bool = False, seed: int = 0):
+    horizon = 300.0 if smoke else 3600.0
+    reps = 5 if smoke else 7
+    scn = env.make("churn", horizon=horizon)
+    ocfg = obs.ObserveConfig(window_turns=16)
+    so_cfg = obs.ObserveConfig(window_turns=16, emit_responses=False)
+
+    modes = {
+        "off": _time_mode(scn, None, reps=reps, seed=seed),
+        "windows": _time_mode(scn, ocfg, reps=reps, seed=seed),
+        "stream_only": _time_mode(scn, so_cfg, reps=reps, seed=seed),
+    }
+    base = modes["off"]["wall_warm_s"]
+    for name, m in modes.items():
+        m["overhead_vs_off"] = m["wall_warm_s"] / base - 1.0
+    payload = {
+        "config": {"scenario": "churn", "horizon": horizon, "reps": reps,
+                   "seed": seed, "window_turns": 16,
+                   "warn_overhead": WARN_OVERHEAD},
+        "modes": modes,
+    }
+    write_bench("obs", payload, smoke=smoke)
+
+    worst = max(m["overhead_vs_off"] for n, m in modes.items() if n != "off")
+    for name, m in modes.items():
+        print(f"{name:12s} warm={m['wall_warm_s'] * 1e3:8.1f} ms  "
+              f"overhead={m['overhead_vs_off'] * 100:+6.1f}%")
+    if worst > WARN_OVERHEAD:
+        print(f"WARNING: telemetry overhead {worst * 100:.1f}% exceeds "
+              f"{WARN_OVERHEAD * 100:.0f}% budget", file=sys.stderr)
+    return payload, worst
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(smoke=args.smoke, seed=args.seed)

@@ -24,11 +24,11 @@ Run:  PYTHONPATH=src:. python benchmarks/scenario_suite.py [--smoke]
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import numpy as np
 
+from benchmarks.common import write_bench
 from repro import env
 from repro.core import metrics as M
 from repro.core import policies as pol
@@ -168,8 +168,7 @@ def main():
             SMOKE_SCENARIOS, horizon=120.0, arrival_batch=8,
             seed=args.seed, check_parity=False,
         )
-        out = {"smoke": True, "scenarios": results}
-        path = "BENCH_scenarios_smoke.json"
+        write_bench("scenarios", {"scenarios": results}, smoke=True)
     else:
         results = run_suite(FULL_SCENARIOS, arrival_batch=8, seed=args.seed)
         # smoke_reference: the same reduced shapes the CI smoke runs, so
@@ -188,18 +187,14 @@ def main():
                         "its pre-shift band (core/metrics.adaptation_report)",
             },
             "scenarios": results,
-            "smoke_reference": {
-                name: {
-                    p: {"throughput_rps": r["throughput_rps"], "p50": r["p50"]}
-                    for p, r in entry["policies"].items()
-                }
-                for name, entry in smoke_ref.items()
-            },
         }
-        path = "BENCH_scenarios.json"
-    with open(path, "w") as f:
-        json.dump(out, f, indent=1)
-    print(f"wrote {path}")
+        write_bench("scenarios", out, smoke_reference={
+            name: {
+                p: {"throughput_rps": r["throughput_rps"], "p50": r["p50"]}
+                for p, r in entry["policies"].items()
+            }
+            for name, entry in smoke_ref.items()
+        })
 
 
 if __name__ == "__main__":

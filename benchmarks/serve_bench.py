@@ -31,13 +31,12 @@ and the ``scan_loop`` section: cold/warm scan wall-clock vs the host loop).
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import time
 
 import numpy as np
 
-from benchmarks.common import csv_row
+from benchmarks.common import csv_row, write_bench
 from repro.core import metrics as M
 from repro.serving import (
     RosellaRouter,
@@ -73,7 +72,7 @@ def _run(loop, router_cls, *, horizon, arrival_batch, rate, seed, **router_kw):
 
 
 def run(horizon: float = 3600.0, arrival_batch: int = 64, rate: float = 6.0,
-        seed: int = 0, json_path: str | None = None):
+        seed: int = 0, json_path: str | None = None, smoke: bool = False):
     rows = []
     n_batches = max(int(rate * horizon / arrival_batch), 1)
 
@@ -193,8 +192,7 @@ def run(horizon: float = 3600.0, arrival_batch: int = 64, rate: float = 6.0,
         },
     }
     if json_path:
-        with open(json_path, "w") as f:
-            json.dump(summary, f, indent=1)
+        write_bench("serve", summary, smoke=smoke, path=json_path)
         rows.append(csv_row("serve_bench_json", 0.0, f"wrote={json_path}"))
     return rows, summary
 
@@ -211,5 +209,5 @@ if __name__ == "__main__":
         args.out = os.path.join(os.path.dirname(__file__), "..", name)
     horizon = args.horizon or (300.0 if args.smoke else 3600.0)
     for r in run(horizon=horizon, arrival_batch=args.batch,
-                 json_path=os.path.abspath(args.out))[0]:
+                 json_path=os.path.abspath(args.out), smoke=args.smoke)[0]:
         print(r)

@@ -17,7 +17,7 @@ python -m pytest -x -q -m "not slow" \
     tests/test_learner.py tests/test_theory.py tests/test_fleet.py \
     tests/test_router_and_straggler.py tests/test_properties.py \
     tests/test_alias.py tests/test_scanloop.py tests/test_env.py \
-    tests/test_fleet_scan.py tests/test_faults.py
+    tests/test_fleet_scan.py tests/test_faults.py tests/test_obs.py
 
 # ~10 s engine smoke: all policies, reduced shapes
 timeout 120 python benchmarks/sched_throughput.py --smoke
@@ -146,6 +146,12 @@ try:
 except Exception as e:  # advisory only — never fail CI on the smoke
     print(f"fault-smoke: skipped ({e})")
 EOF
+
+# non-gating telemetry-overhead smoke: the in-scan window fold must stay
+# near-free — warn when any telemetry mode costs >10% warm wall-clock vs
+# the telemetry-off scan (writes gitignored BENCH_obs_smoke.json; the
+# warning prints from the benchmark itself)
+timeout 600 python benchmarks/obs_overhead.py --smoke || true
 
 # informational: full not-slow suite (known model-layer failures tolerated)
 python -m pytest -q -m "not slow" || true

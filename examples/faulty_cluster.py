@@ -19,9 +19,11 @@ Run:  PYTHONPATH=src python examples/faulty_cluster.py
 """
 import numpy as np
 
-from repro import env
+from repro import env, obs
 from repro.core import metrics as M
 from repro.serving import RecoveryConfig
+
+OCFG = obs.ObserveConfig(window_turns=32)
 
 
 def show(tag, out, horizon):
@@ -45,6 +47,8 @@ def show(tag, out, horizon):
           f"(amplification {rep['retry_amplification']:.3f}x)")
     print(f"  latency p50={rep['p50']:.2f}  p99={rep['p99']:.2f}  "
           f"p999={rep['p999']:.2f}")
+    obs.dashboard(out["info"]["windows"],
+                  title=f"live windows ({OCFG.window_turns} turns each)")
     return led
 
 
@@ -55,14 +59,15 @@ def main():
           f"~Exp(110s) and recovers ~Exp(35s) later")
 
     bare = env.run_scenario(scn, seed=0, use_scan=True,
-                            sequential_pool=True)
+                            sequential_pool=True, observe=OCFG)
     led_b = show("faults only (no recovery): kills become losses",
                  bare, scn.horizon)
 
     rc = RecoveryConfig(timeout_mult=8.0, retry_budget=2, retry_cap=4,
                         spec_cap=2, spec_ratio=3.0)
     armed = env.run_scenario(scn, seed=0, use_scan=True,
-                             sequential_pool=True, recovery=rc)
+                             sequential_pool=True, recovery=rc,
+                             observe=OCFG)
     led_a = show("timeout + retry + speculation: kills get re-dispatched",
                  armed, scn.horizon)
 

@@ -13,7 +13,7 @@ Run:  PYTHONPATH=src python examples/volatile_cluster.py
 """
 import numpy as np
 
-from repro import env
+from repro import env, obs
 from repro.core import metrics as M
 from repro.core import policies as pol
 
@@ -24,9 +24,10 @@ def main():
     for name, policy, window in [("rosella", pol.PPOT_SQ2, 10.0),
                                  ("slow-learner", pol.PPOT_SQ2, 80.0),
                                  ("pot(oblivious)", pol.POT, 10.0)]:
+        ocfg = obs.ObserveConfig(window_turns=64)
         out = env.run_scenario(
             scn, policy=policy, seed=0, arrival_batch=1, async_mu=True,
-            c_window=window,
+            c_window=window, observe=ocfg,
         )
         resp, mu, wl = out["responses"], out["mu_trace"], out["workload"]
         n = len(resp)
@@ -47,6 +48,10 @@ def main():
             )
             print(f"{'':15s} adaptation time per shift: {rep['per_shift']}"
                   f"  (mean {rep['mean']:.1f}s)")
+            # the same shock, seen live: p50/μ̂-error spike in the shock
+            # windows, then recover as the learner re-converges
+            obs.dashboard(out["info"]["windows"],
+                          title="rosella live windows (64 turns each)")
 
 
 if __name__ == "__main__":

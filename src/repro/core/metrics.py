@@ -165,11 +165,17 @@ def fleet_summary(
     lam_true: float | None = None,  # true TOTAL arrival rate λ
     view_gaps: np.ndarray | None = None,  # staleness |view − truth| samples
     sync_ages: np.ndarray | None = None,  # time-since-last-sync samples
+    ledger: dict | None = None,  # recovery.build_ledger conservation books
 ) -> dict:
     """Fleet health metrics shared by the benchmark and the tests:
     per-frontend λ̂ calibration error (each frontend sees ~λ/S), the sync
     staleness histogram (view-gap and age distributions), the herd-collision
     rate (``fleet.conflict.collision_stats``), and arrival-share balance.
+
+    ``ledger`` (the faulty runs' ``info["ledger"]``) folds the fault /
+    recovery counters into the summary: the full conservation books under
+    ``"ledger"`` plus derived ``"fault"`` rates (loss_rate, kill_rate,
+    retry_rate over the real copies launched).
 
     Simulator callers pull the placement log from the trace
     (``fleet_summary_from_trace``); serving callers pass
@@ -221,12 +227,26 @@ def fleet_summary(
             "p95": float(np.percentile(a, 95)),
             "max": float(a.max()),
         }
+    if ledger is not None:
+        out["ledger"] = dict(ledger)
+        n_tasks = max(int(ledger.get("n_tasks", 0)), 1)
+        launched = max(int(ledger.get("copies_real_launched", 0)), 1)
+        out["fault"] = {
+            "loss_rate": int(ledger.get("lost_tasks", 0)) / n_tasks,
+            "kill_rate": int(ledger.get("copies_real_killed", 0)) / launched,
+            "retry_rate": int(ledger.get("n_retries", 0)) / launched,
+            "dirty_rate": (
+                int(ledger.get("n_dirty_completions", 0)) / launched
+            ),
+            "timeout_rate": int(ledger.get("n_timeouts", 0)) / launched,
+            "conserved": bool(ledger.get("conserved", True)),
+        }
     return out
 
 
 def fleet_summary_from_trace(
     trace, *, n_frontends: int, sync_every: int = 1,
-    lam_hat_frontends=None, lam_true=None
+    lam_hat_frontends=None, lam_true=None, ledger=None
 ) -> dict:
     """``fleet_summary`` over a simulator trace (multi-frontend mode): the
     placement log is every active task of every arrival event. Trace rows
@@ -249,14 +269,26 @@ def fleet_summary_from_trace(
     fr_t = np.repeat(fr, mt)[valid.ravel()]
     w_t = tw.ravel()[valid.ravel()]
     ep_t = np.repeat(ep, mt)[valid.ravel()]
-    return fleet_summary(
+    out = fleet_summary(
         fr_t, w_t, ep_t,
         n_frontends=n_frontends,
         lam_hat_frontends=lam_hat_frontends,
         lam_true=lam_true,
         view_gaps=gaps,
         sync_ages=age,
+        ledger=ledger,
     )
+    # chain-level fault counters (crash-emptied queues) ride the trace
+    # even without a serving ledger
+    if "killed" in trace and np.asarray(trace["killed"]).size:
+        out.setdefault("fault", {})
+        out["fault"]["chain_killed_tasks"] = int(
+            np.asarray(trace["killed"]).sum()
+        )
+        out["fault"]["chain_killed_fake"] = int(
+            np.asarray(trace["killed_fake"]).sum()
+        )
+    return out
 
 
 def mu_rel_error_trace(

@@ -91,6 +91,7 @@ from repro.core import policies as pol
 from repro.fleet import conflict as cfl
 from repro.fleet import state as flt
 from repro.fleet import sync as fsync
+from repro.obs import windows as obw
 from repro.utils.struct import pytree_dataclass
 
 # Event codes in the trace.
@@ -150,6 +151,15 @@ class SimConfig:
     # "sticky" — deterministic round-robin by job ordinal (the
     # session-affinity limit: zero balance variance, zero randomness).
     frontend_lb: str = "uniform"
+    # In-scan telemetry (repro.obs): an ``obs.ObserveConfig`` folds the
+    # windowed-metric step once per chain round (windows span
+    # ``window_turns`` ROUNDS here — jumps, not serving turns); the trace
+    # gains ``obs_row``/``obs_flag`` columns consumed by
+    # ``obs.windows.sim_records_from_trace``. The histogram folds real
+    # completions' exact service-time samples (the chain has no per-task
+    # response times until metrics.analyze matches ordinals). None (the
+    # default) traces the exact prior program.
+    observe: "obw.ObserveConfig | None" = None
 
 
 @pytree_dataclass
@@ -433,6 +443,9 @@ def simulate(cfg: SimConfig, params: SimParams, key: jax.Array,
             n_tasks=n_tasks, task_workers=workers, task_targets=targets,
             frontend=f, view_gap=view_gap, sync_age=sync_age,
         )
+        if cfg.observe is not None:
+            ev["svc"] = jnp.float32(0.0)
+            ev["svc_ok"] = jnp.bool_(False)
         return new_state, ev
 
     def service_branch(state: SimState, key, widx):
@@ -481,6 +494,11 @@ def simulate(cfg: SimConfig, params: SimParams, key: jax.Array,
             frontend=jnp.int32(-1), view_gap=jnp.int32(0),
             sync_age=jnp.float32(0.0),
         )
+        if cfg.observe is not None:
+            # exact Exp(μ) service sample of a REAL completion — the
+            # window histogram's input at this layer
+            ev["svc"] = service_time.astype(jnp.float32)
+            ev["svc_ok"] = do_real
         return new_state, ev
 
     def fake_branch(state: SimState, key):
@@ -512,6 +530,9 @@ def simulate(cfg: SimConfig, params: SimParams, key: jax.Array,
             frontend=jnp.int32(-1), view_gap=jnp.int32(0),
             sync_age=jnp.float32(0.0),
         )
+        if cfg.observe is not None:
+            ev["svc"] = jnp.float32(0.0)
+            ev["svc_ok"] = jnp.bool_(False)
         return new_state, ev
 
     def self_loop_ev(state: SimState):
@@ -524,9 +545,16 @@ def simulate(cfg: SimConfig, params: SimParams, key: jax.Array,
             frontend=jnp.int32(-1), view_gap=jnp.int32(0),
             sync_age=jnp.float32(0.0),
         )
+        if cfg.observe is not None:
+            ev["svc"] = jnp.float32(0.0)
+            ev["svc_ok"] = jnp.bool_(False)
         return state, ev
 
-    def round_fn(state: SimState, xs):
+    def round_fn(carry, xs):
+        if cfg.observe is None:
+            state = carry
+        else:
+            state, tc = carry
         t, key = xs
         k_dt, k_ev, k_br, k_refresh = jax.random.split(key, 4)
         act_prev = cur_act(state.now)  # membership BEFORE this jump
@@ -675,9 +703,44 @@ def simulate(cfg: SimConfig, params: SimParams, key: jax.Array,
         out["mu_hat"] = (
             state.learner.mu_hat if cfg.trace_mu else jnp.zeros((0,), jnp.float32)
         )
-        return state, out
+        if cfg.observe is None:
+            return state, out
+
+        # -- telemetry fold: one obs.windows step per chain round, READ-
+        #    ONLY on the chain state (the observe=None program above is
+        #    untouched). Windows span window_turns ROUNDS; arrivals/
+        #    launches count the round's dispatched tasks, completions the
+        #    round's real completion (0/1), kills the crash track's
+        #    emptied queue.
+        i32 = jnp.int32
+        svc = out.pop("svc")
+        svc_ok = out.pop("svc_ok")
+        arrived = ev["n_tasks"].astype(i32)
+        comp = (ev["code"] == EV_REAL_DONE).astype(i32)
+        kl = (
+            jnp.sum(killed_row, dtype=i32)
+            if killed_row.shape[0] else i32(0)
+        )
+        tob = obw.TurnObs(
+            t=state.now, resp=svc[None], resp_ok=svc_ok[None],
+            arrivals=arrived, q_view=state.q_real,
+            lam_hat=state.arr.lam_hat, mu_hat=state.learner.mu_hat,
+            mu_true=cur_mu(state.now), active=cur_act(state.now),
+            launched=arrived, completed=comp, dirty=i32(0),
+            killed=kl, retried=i32(0), collisions=i32(0),
+        )
+        tc, row, flag = obw.observe_turn(cfg.observe, tc, tob)
+        out["obs_row"] = row
+        out["obs_flag"] = flag
+        return (state, tc), out
 
     keys = jax.random.split(key, cfg.rounds)
     ts = jnp.arange(cfg.rounds)
-    final, trace = jax.lax.scan(round_fn, state0, (ts, keys))
+    carry0 = (
+        state0 if cfg.observe is None
+        else (state0, obw.init_carry(cfg.observe))
+    )
+    final, trace = jax.lax.scan(round_fn, carry0, (ts, keys))
+    if cfg.observe is not None:
+        final = final[0]
     return final, trace

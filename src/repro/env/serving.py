@@ -23,10 +23,13 @@ adaptation-time metric).
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
 import numpy as np
 
+from repro.core import estimator as est
 from repro.core import policies as pol
 from repro.env.scenario import Scenario, ServingWorkload
+from repro.obs import windows as obw
 from repro.serving import recovery as rcv
 from repro.serving import router as rt
 from repro.serving import scanloop
@@ -40,6 +43,8 @@ def run_workload(
     fake_cost: float,
     burst_cost: float | None = None,
     recovery: rcv.RecoveryConfig | None = None,
+    observe: "obw.ObserveConfig | None" = None,
+    decisions=None,  # obs.DecisionTrace — lifecycle event ring (host only)
 ):
     """Drive the host serving loop over a compiled workload.
 
@@ -48,6 +53,12 @@ def run_workload(
     sample ring, so they must be cost-calibrated with real traffic —
     cheap fake-cost probes would rebuild its μ̂ ~4× high and herd the
     router onto the worker that just came back.
+
+    ``observe`` (an ``obs.ObserveConfig``) folds the SAME jitted
+    telemetry step as the scan body once per turn — the window stream in
+    ``info["windows"]`` is float-for-float equal to the scan's.
+    ``decisions`` (an ``obs.DecisionTrace``) records per-task lifecycle
+    events (arrive → place → complete) into the bounded ring.
 
     Returns ``(response_times, mu_trace, info)`` — the scan loop's
     contract (``info`` carries the turn count; overflow accounting is a
@@ -59,7 +70,7 @@ def run_workload(
         # path for the overwhelmingly common fault-free case
         return rcv.run_workload_recovery(
             router, pool, wl, fake_cost=fake_cost, burst_cost=burst_cost,
-            recovery=recovery,
+            recovery=recovery, observe=observe, decisions=decisions,
         )
     if burst_cost is None:
         burst_cost = 4.0 * fake_cost
@@ -70,6 +81,8 @@ def run_workload(
     p_done = np.empty(0)
     p_rep = np.empty(0, np.int32)
     p_start = np.empty(0)
+    tc = obw.init_carry(observe) if observe is not None else None
+    windows: list = []
 
     for turn in range(T):
         times = wl.times[turn]
@@ -127,8 +140,33 @@ def run_workload(
         p_start = np.concatenate([p_start, ss])
         mu_trace.append(np.asarray(router.mu_front))
 
+        if decisions is not None:
+            for i in range(k):
+                task = turn * k + i
+                decisions.arrive(times[i], task)
+                decisions.place(times[i], task, int(js[i]))
+                decisions.complete(dd[i], task, int(js[i]))
+        if observe is not None:
+            tob = obw.plain_turn_obs(
+                observe, t=np.float32(times[-1]), resp=dd - times,
+                arrivals_k=k, q_view=router.q_view,
+                lam_hat=est.lam_hat_ema(router.arr),
+                mu_hat=router.learner.mu_hat,
+                mu_true=wl.speeds[turn],
+                active=(None if wl.active is None
+                        else jnp.asarray(wl.active[turn])),
+            )
+            tc, row, flag = obw.observe_turn_host(observe, tc, tob)
+            if bool(flag):
+                windows.append(obw.record_from_state(observe, row))
+
     resp = np.concatenate(responses) if responses else np.empty(0)
     info = {"turns": T, "flush_overflow": 0, "pend_overflow": 0}
+    if observe is not None:
+        tail = obw.final_partial_record(observe, tc)
+        if tail is not None:
+            windows.append(tail)
+        info["windows"] = windows
     return resp, np.asarray(mu_trace), info
 
 
@@ -150,6 +188,10 @@ def run_scenario(
     herd_correction=False,
     frozen_mu: bool = False,
     recovery: rcv.RecoveryConfig | None = None,
+    observe: "obw.ObserveConfig | None" = None,
+    obs_sink=None,
+    decisions=None,
+    chunk_turns: int | None = None,
 ):
     """One scenario end to end on the serving layer.
 
@@ -204,7 +246,8 @@ def run_scenario(
             active_np=wl.active, rejoin_np=wl.rejoin, burst_np=wl.burst,
             fake_cost=fake_cost, sync_every=sync_every,
             frozen_mu=frozen_mu, kill_np=wl.kill_at, stall_np=wl.stall_at,
-            stall_dur_np=wl.stall_dur,
+            stall_dur_np=wl.stall_dur, chunk_turns=chunk_turns,
+            observe=observe, obs_sink=obs_sink,
         )
         return {
             "responses": resp,
@@ -230,10 +273,12 @@ def run_scenario(
             active_np=wl.active, rejoin_np=wl.rejoin, burst_np=wl.burst,
             fake_cost=fake_cost, kill_np=wl.kill_at, stall_np=wl.stall_at,
             stall_dur_np=wl.stall_dur, recovery=recovery,
+            chunk_turns=chunk_turns, observe=observe, obs_sink=obs_sink,
         )
     else:
         resp, mu_trace, info = run_workload(
-            router, pool, wl, fake_cost=fake_cost, recovery=recovery
+            router, pool, wl, fake_cost=fake_cost, recovery=recovery,
+            observe=observe, decisions=decisions,
         )
     return {
         "responses": resp,

@@ -1,0 +1,47 @@
+"""repro.obs — the telemetry subsystem.
+
+``windows``: the in-carry windowed metric fold (TelemetryCarry pytree +
+pure fold functions shared by scan bodies and host loops).
+``export``: Prometheus / JSONL / terminal-dashboard sinks.
+``tracing``: decision-lifecycle ring → Chrome trace JSON, profiler
+annotations.
+"""
+from repro.obs.export import (  # noqa: F401
+    JsonlSink,
+    dashboard,
+    dashboard_header,
+    dashboard_row,
+    prometheus_snapshot,
+)
+from repro.obs.tracing import (  # noqa: F401
+    DecisionTrace,
+    save_chrome_trace,
+    step_annotation,
+    trace_annotation,
+    windows_to_chrome_trace,
+)
+from repro.obs.windows import (  # noqa: F401
+    ObserveConfig,
+    TelemetryCarry,
+    TurnObs,
+    aggregate_rows,
+    bin_edges,
+    bin_ratio,
+    faulty_turn_obs,
+    final_partial_record,
+    fleet_collisions,
+    fleet_final_partial,
+    fleet_records_from_rows,
+    fold_turn,
+    hist_mean,
+    hist_quantile,
+    init_carry,
+    observe_turn,
+    observe_turn_host,
+    plain_turn_obs,
+    quantile_tolerance,
+    record_from_state,
+    records_from_rows,
+    reset_window,
+    sim_records_from_trace,
+)

@@ -1,0 +1,528 @@
+"""Windowed telemetry engine — the in-carry observation fold.
+
+The observability substrate the paper's "monitors total system load /
+adjusts in real-time" claim presupposes: rolling windowed metrics
+computed INSIDE the serving scan (a ``TelemetryCarry`` pytree folded
+once per turn, emitted as downsampled scan ys) rather than post-hoc
+reductions over a fully materialized per-task trace. The same pure
+fold functions run in
+
+  * ``serving.scanloop.run_workload_scan`` (plain + faulty bodies),
+  * ``serving.scanloop.run_fleet_workload_scan`` (vmapped over the S
+    frontends, per-frontend rows + ``aggregate_rows`` fleet fold),
+  * the host loops (``env.serving.run_workload``,
+    ``serving.recovery.run_workload_recovery``) via ``observe_turn``,
+  * the chain simulator (``core.simulator.simulate`` with
+    ``SimConfig.observe``) — one fold per chain round,
+
+so host-vs-scan window streams are float-for-float equal by
+construction: identical jnp ops over identical per-turn inputs.
+
+Design rules that make the parity claims hold:
+
+  * the fold is READ-ONLY with respect to scheduler state — folding
+    never touches router/learner math, so telemetry-on responses stay
+    bit-equal to telemetry-off;
+  * every float accumulator is a per-turn scalar sum (same order on
+    host and scan); per-response reductions use only order-independent
+    integer scatter-adds (the latency histogram) — never float sums
+    over variable-length completion sets, which would differ between
+    the host's compacted arrays and the scan's masked fixed-width
+    slots;
+  * window quantiles come from a fixed log-spaced histogram, so the
+    p50/p99/p999 streams match exact trace percentiles within one bin
+    ratio (``quantile_tolerance``) — the pinned test bound.
+
+Windows are TURN-based (every ``window_turns`` folds) so boundaries
+are static and chunk-crossing: ``turn_idx`` in the carry is global and
+never resets, which is what makes the window stream continuous across
+``chunk_turns`` chunk boundaries.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ObserveConfig:
+    """Static telemetry configuration (hashable — rides jit static args).
+
+    ``window_turns``: serving turns (chain rounds at the sim layer) per
+    emitted window row. ``hist_lo``/``hist_hi``/``hist_bins``: the
+    log-spaced latency histogram; quantile error is bounded by one bin
+    ratio (see ``quantile_tolerance``). ``emit_responses=False`` puts
+    the scan in stream-only mode: the per-request response ys (and μ̂
+    trace) are dropped from the program entirely, so a million-turn
+    horizon materializes only the window stream.
+    """
+
+    window_turns: int = 16
+    hist_bins: int = 64
+    hist_lo: float = 1e-3
+    hist_hi: float = 1e4
+    emit_responses: bool = True
+
+    def __post_init__(self):
+        if self.window_turns < 1:
+            raise ValueError("window_turns must be >= 1")
+        if not (0.0 < self.hist_lo < self.hist_hi):
+            raise ValueError("need 0 < hist_lo < hist_hi")
+        if self.hist_bins < 2:
+            raise ValueError("hist_bins must be >= 2")
+
+
+def bin_ratio(cfg: ObserveConfig) -> float:
+    """Geometric width of one histogram bin."""
+    return (cfg.hist_hi / cfg.hist_lo) ** (1.0 / cfg.hist_bins)
+
+
+def quantile_tolerance(cfg: ObserveConfig) -> float:
+    """Pinned relative-error bound for windowed quantiles vs exact
+    percentiles: one bin ratio (values inside [hist_lo, hist_hi])."""
+    return bin_ratio(cfg) - 1.0
+
+
+def bin_edges(cfg: ObserveConfig) -> np.ndarray:
+    """f64[hist_bins + 1] log-spaced bin edges."""
+    return cfg.hist_lo * bin_ratio(cfg) ** np.arange(cfg.hist_bins + 1)
+
+
+class TelemetryCarry(NamedTuple):
+    """The in-carry window state. Window-local fields reset at each
+    boundary; ``turn_idx`` and the ``cum_*`` ledger counters are global
+    (they survive resets AND chunk boundaries)."""
+
+    hist: jax.Array  # i32[hist_bins] latency histogram (window-local)
+    n_resp: jax.Array  # i32 responses folded this window
+    arrivals: jax.Array  # i32 task arrivals this window
+    launched: jax.Array  # i32 real copies launched (incl. retry/spec)
+    completed: jax.Array  # i32 clean real completions
+    dirty: jax.Array  # i32 dirty completions (post-kill stragglers)
+    killed: jax.Array  # i32 real copies killed
+    retried: jax.Array  # i32 retry re-dispatches
+    collisions: jax.Array  # i32 herd collisions (fleet; 0 single-frontend)
+    q_sum: jax.Array  # f32 sum over turns of mean active queue depth
+    q_max: jax.Array  # i32 max queue depth seen this window
+    mu_err_sum: jax.Array  # f32 sum of shape-normalized mu-hat rel error
+    lam_hat: jax.Array  # f32 lambda-hat gauge at last fold
+    t_start: jax.Array  # f32 window start time
+    t_last: jax.Array  # f32 time of last fold
+    turns: jax.Array  # i32 turns folded this window
+    turn_idx: jax.Array  # i32 GLOBAL turn counter (never resets)
+    cum_launched: jax.Array  # i32 global launched counter
+    cum_completed: jax.Array  # i32 global clean+dirty completions
+    cum_killed: jax.Array  # i32 global killed counter
+
+
+class TurnObs(NamedTuple):
+    """What one serving turn (or chain round) exposes to the fold.
+
+    ``resp``/``resp_ok``: this turn's completed-task response times and
+    a validity mask (fixed width; masked slots are ignored). All other
+    fields are scalars or [n] vectors sampled AFTER the turn's serve
+    step, so host loop and scan observe the same post-step state.
+    """
+
+    t: jax.Array  # f32 turn-end time
+    resp: jax.Array  # f32[m] response-time samples
+    resp_ok: jax.Array  # bool[m] validity mask
+    arrivals: jax.Array  # i32 tasks arrived this turn
+    q_view: jax.Array  # i32[n] queue depths after the serve step
+    lam_hat: jax.Array  # f32 arrival-rate estimate
+    mu_hat: jax.Array  # f32[n] learner speed estimates
+    mu_true: jax.Array  # f32[n] true speeds this turn
+    active: jax.Array | None  # bool[n] membership (None = all active)
+    launched: jax.Array  # i32 real copies launched this turn
+    completed: jax.Array  # i32 clean completions this turn
+    dirty: jax.Array  # i32 dirty completions this turn
+    killed: jax.Array  # i32 copies killed this turn
+    retried: jax.Array  # i32 retries this turn
+    collisions: jax.Array  # i32 herd collisions this turn
+
+
+def init_carry(cfg: ObserveConfig) -> TelemetryCarry:
+    i32 = jnp.int32
+    f32 = jnp.float32
+    return TelemetryCarry(
+        hist=jnp.zeros((cfg.hist_bins,), i32),
+        n_resp=i32(0), arrivals=i32(0), launched=i32(0), completed=i32(0),
+        dirty=i32(0), killed=i32(0), retried=i32(0), collisions=i32(0),
+        q_sum=f32(0.0), q_max=i32(0), mu_err_sum=f32(0.0),
+        lam_hat=f32(0.0), t_start=f32(0.0), t_last=f32(0.0),
+        turns=i32(0), turn_idx=i32(0),
+        cum_launched=i32(0), cum_completed=i32(0), cum_killed=i32(0),
+    )
+
+
+def _hist_fold(cfg: ObserveConfig, hist, resp, ok):
+    """Order-independent scatter-add of response samples into the
+    log-spaced histogram (below-range clips to bin 0, above-range to
+    the last bin; masked slots drop)."""
+    lo = jnp.float32(cfg.hist_lo)
+    inv_log_ratio = jnp.float32(1.0 / math.log(bin_ratio(cfg)))
+    r = jnp.maximum(resp.astype(jnp.float32), lo)
+    idx = jnp.floor(jnp.log(r / lo) * inv_log_ratio).astype(jnp.int32)
+    idx = jnp.clip(idx, 0, cfg.hist_bins - 1)
+    idx = jnp.where(ok, idx, cfg.hist_bins)  # out-of-range slot drops
+    return hist.at[idx].add(1, mode="drop")
+
+
+def _mu_shape_err(mu_hat, mu_true, active):
+    """Per-turn shape-normalized mu-hat relative error — the same
+    normalize-to-unit-shares formula as ``metrics.mu_rel_error_trace``,
+    in f32 so host and scan agree bitwise."""
+    if active is None:
+        h = mu_hat.astype(jnp.float32)
+        m = mu_true.astype(jnp.float32)
+    else:
+        h = jnp.where(active, mu_hat, 0.0).astype(jnp.float32)
+        m = jnp.where(active, mu_true, 0.0).astype(jnp.float32)
+    h = h / jnp.maximum(jnp.sum(h), jnp.float32(1e-12))
+    m = m / jnp.maximum(jnp.sum(m), jnp.float32(1e-12))
+    return jnp.sum(jnp.abs(h - m))
+
+
+def fold_turn(cfg: ObserveConfig, tc: TelemetryCarry,
+              obs: TurnObs) -> TelemetryCarry:
+    """Fold one turn's observations into the window state (pure)."""
+    i32 = jnp.int32
+    f32 = jnp.float32
+    qf = obs.q_view.astype(f32)
+    if obs.active is None:
+        q_mean = jnp.mean(qf)
+        q_hi = jnp.max(obs.q_view).astype(i32)
+    else:
+        nact = jnp.maximum(jnp.sum(obs.active.astype(f32)), f32(1.0))
+        q_mean = jnp.sum(jnp.where(obs.active, qf, 0.0)) / nact
+        q_hi = jnp.max(jnp.where(obs.active, obs.q_view, 0)).astype(i32)
+    return TelemetryCarry(
+        hist=_hist_fold(cfg, tc.hist, obs.resp, obs.resp_ok),
+        n_resp=tc.n_resp + jnp.sum(obs.resp_ok, dtype=i32),
+        arrivals=tc.arrivals + obs.arrivals,
+        launched=tc.launched + obs.launched,
+        completed=tc.completed + obs.completed,
+        dirty=tc.dirty + obs.dirty,
+        killed=tc.killed + obs.killed,
+        retried=tc.retried + obs.retried,
+        collisions=tc.collisions + obs.collisions,
+        q_sum=tc.q_sum + q_mean,
+        q_max=jnp.maximum(tc.q_max, q_hi),
+        mu_err_sum=tc.mu_err_sum + _mu_shape_err(
+            obs.mu_hat, obs.mu_true, obs.active),
+        lam_hat=obs.lam_hat.astype(f32),
+        t_start=tc.t_start,
+        t_last=obs.t.astype(f32),
+        turns=tc.turns + 1,
+        turn_idx=tc.turn_idx + 1,
+        cum_launched=tc.cum_launched + obs.launched,
+        cum_completed=(tc.cum_completed + obs.completed + obs.dirty),
+        cum_killed=tc.cum_killed + obs.killed,
+    )
+
+
+def reset_window(tc: TelemetryCarry) -> TelemetryCarry:
+    """Zero the window-local fields; the new window starts where the
+    old one ended (abutting t spans). Global fields persist."""
+    i32 = jnp.int32
+    f32 = jnp.float32
+    return tc._replace(
+        hist=jnp.zeros_like(tc.hist),
+        n_resp=i32(0), arrivals=i32(0), launched=i32(0), completed=i32(0),
+        dirty=i32(0), killed=i32(0), retried=i32(0), collisions=i32(0),
+        q_sum=f32(0.0), q_max=i32(0), mu_err_sum=f32(0.0),
+        t_start=tc.t_last, turns=i32(0),
+    )
+
+
+def observe_turn(cfg: ObserveConfig, tc: TelemetryCarry, obs: TurnObs):
+    """Fold one turn, snapshot the row, reset at window boundaries.
+
+    Returns ``(tc_next, row, flag)`` where ``row`` is the post-fold
+    window state (meaningful only where ``flag`` is True — the scan
+    emits every turn and the host filters) and ``flag`` marks a window
+    boundary (every ``cfg.window_turns`` global turns). The SAME
+    function body runs inside scan bodies and, jitted, in the host
+    loops — that is what makes the streams float-for-float equal.
+    """
+    row = fold_turn(cfg, tc, obs)
+    flag = (row.turn_idx % cfg.window_turns) == 0
+    fresh = reset_window(row)
+    tc_next = jax.tree_util.tree_map(
+        lambda a, b: jnp.where(flag, a, b), fresh, row
+    )
+    return tc_next, row, flag
+
+
+# jitted host entry — one call per host-loop turn; cfg is static so the
+# trace caches per (cfg, shapes)
+observe_turn_host = jax.jit(observe_turn, static_argnums=(0,))
+
+
+def plain_turn_obs(cfg, *, t, resp, arrivals_k, q_view, lam_hat, mu_hat,
+                   mu_true, active, collisions=None) -> TurnObs:
+    """TurnObs for a fault-free serving turn: every arrival launches and
+    completes within the turn (the pool is work-conserving), so the
+    ledger deltas collapse to launched = completed = k."""
+    i32 = jnp.int32
+    k = i32(arrivals_k)
+    z = i32(0)
+    return TurnObs(
+        t=jnp.asarray(t, jnp.float32),
+        resp=jnp.asarray(resp, jnp.float32),
+        resp_ok=jnp.ones(np.shape(resp), bool),
+        arrivals=k, q_view=q_view,
+        lam_hat=jnp.asarray(lam_hat, jnp.float32),
+        mu_hat=mu_hat, mu_true=jnp.asarray(mu_true, jnp.float32),
+        active=active,
+        launched=k, completed=k, dirty=z, killed=z, retried=z,
+        collisions=z if collisions is None else jnp.asarray(collisions, i32),
+    )
+
+
+def faulty_turn_obs(cfg, *, t, resp, resp_ok, arrivals_k, q_view, lam_hat,
+                    mu_hat, mu_true, active, dctr,
+                    collisions=None) -> TurnObs:
+    """TurnObs for a faulty turn. ``dctr`` is this turn's delta of the
+    recovery counter vector (``serving.recovery.CTR`` layout): the
+    window ledger deltas read straight out of it, identically on host
+    (numpy snapshot diff) and scan (carry diff)."""
+    from repro.serving import recovery as rcv
+
+    i32 = jnp.int32
+    k = i32(arrivals_k)
+    d = jnp.asarray(dctr)
+    retried = d[rcv.CTR["retry"]].astype(i32)
+    spec = d[rcv.CTR["spec"]].astype(i32)
+    # CTR["comp_real"] counts ALL real completions (dirty included);
+    # report clean and dirty disjointly so cum_completed never
+    # double-counts
+    comp_all = d[rcv.CTR["comp_real"]].astype(i32)
+    dirty = d[rcv.CTR["comp_dirty"]].astype(i32)
+    return TurnObs(
+        t=jnp.asarray(t, jnp.float32),
+        resp=jnp.asarray(resp, jnp.float32),
+        resp_ok=jnp.asarray(resp_ok, bool),
+        arrivals=k, q_view=q_view,
+        lam_hat=jnp.asarray(lam_hat, jnp.float32),
+        mu_hat=mu_hat, mu_true=jnp.asarray(mu_true, jnp.float32),
+        active=active,
+        launched=k + retried + spec,
+        completed=comp_all - dirty,
+        dirty=dirty,
+        killed=d[rcv.CTR["kill_real"]].astype(i32),
+        retried=retried,
+        collisions=(i32(0) if collisions is None
+                    else jnp.asarray(collisions, i32)),
+    )
+
+
+def fleet_collisions(workers: jax.Array, n: int) -> jax.Array:
+    """Per-frontend herd-collision counts for one fleet turn.
+
+    ``workers`` is i32[S, k_f] (this turn's placements per frontend);
+    a placement collides when its worker also received a placement
+    from ANOTHER frontend this turn. Returns i32[S].
+    """
+    S = workers.shape[0]
+    counts = jax.vmap(
+        lambda w: jnp.zeros((n,), jnp.int32).at[w].add(1, mode="drop")
+    )(jnp.clip(workers, 0, n - 1))  # i32[S, n]
+    others = jnp.sum(counts, axis=0, dtype=jnp.int32)[None, :] - counts
+    return jnp.sum(jnp.where(others > 0, counts, 0), axis=1,
+                   dtype=jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Host-side row → record conversion (exporters consume these)
+# ---------------------------------------------------------------------------
+
+
+def hist_quantile(hist: np.ndarray, q: float, cfg: ObserveConfig) -> float:
+    """Quantile from the log-spaced histogram with linear-in-log
+    within-bin interpolation. NaN on an empty histogram."""
+    c = np.asarray(hist, np.float64)
+    total = c.sum()
+    if total <= 0:
+        return float("nan")
+    cum = np.cumsum(c)
+    target = q * total
+    b = int(np.searchsorted(cum, target, side="left"))
+    b = min(b, cfg.hist_bins - 1)
+    below = cum[b] - c[b]
+    frac = (target - below) / c[b] if c[b] > 0 else 0.5
+    frac = min(max(frac, 0.0), 1.0)
+    r = bin_ratio(cfg)
+    return float(cfg.hist_lo * r ** (b + frac))
+
+
+def hist_mean(hist: np.ndarray, cfg: ObserveConfig) -> float:
+    """Histogram-estimated mean (geometric bin midpoints)."""
+    c = np.asarray(hist, np.float64)
+    total = c.sum()
+    if total <= 0:
+        return float("nan")
+    r = bin_ratio(cfg)
+    mids = cfg.hist_lo * r ** (np.arange(cfg.hist_bins) + 0.5)
+    return float((c * mids).sum() / total)
+
+
+def record_from_state(cfg: ObserveConfig, row) -> dict:
+    """One window row (a TelemetryCarry snapshot of numpy/JAX scalars)
+    → a flat JSON-friendly record. This is the exporter schema and the
+    ROADMAP-item-2 state-observer feature vector."""
+    hist = np.asarray(row.hist)
+    turns = int(row.turns)
+    t0, t1 = float(row.t_start), float(row.t_last)
+    dt = max(t1 - t0, 1e-12)
+    n_resp = int(row.n_resp)
+    arrivals = int(row.arrivals)
+    launched = int(row.launched)
+    arr_rate = arrivals / dt
+    lam_hat = float(row.lam_hat)
+    rec = {
+        "window": int(row.turn_idx - 1) // cfg.window_turns,
+        "turn": int(row.turn_idx),
+        "turns": turns,
+        "t_start": t0,
+        "t_end": t1,
+        "partial": turns != cfg.window_turns,
+        "n_resp": n_resp,
+        "p50": hist_quantile(hist, 0.50, cfg),
+        "p99": hist_quantile(hist, 0.99, cfg),
+        "p999": hist_quantile(hist, 0.999, cfg),
+        "mean_est": hist_mean(hist, cfg),
+        "throughput": n_resp / dt,
+        "goodput": int(row.completed) / dt,
+        "arrivals": arrivals,
+        "arrival_rate": arr_rate,
+        "lam_hat": lam_hat,
+        "lam_calibration": lam_hat / arr_rate if arr_rate > 0 else float("nan"),
+        "mu_rel_err": float(row.mu_err_sum) / max(turns, 1),
+        "q_mean": float(row.q_sum) / max(turns, 1),
+        "q_max": int(row.q_max),
+        "launched": launched,
+        "completed": int(row.completed),
+        "dirty": int(row.dirty),
+        "killed": int(row.killed),
+        "retried": int(row.retried),
+        "collisions": int(row.collisions),
+        "collision_rate": (int(row.collisions) / launched
+                           if launched > 0 else 0.0),
+        "in_flight": int(row.cum_launched) - int(row.cum_completed)
+        - int(row.cum_killed),
+        "hist": hist.tolist(),
+    }
+    return rec
+
+
+class _RowView:
+    """Attribute view of one row index of stacked TelemetryCarry ys."""
+
+    def __init__(self, stacked, i):
+        for f in TelemetryCarry._fields:
+            setattr(self, f, np.asarray(getattr(stacked, f))[i])
+
+
+def records_from_rows(cfg: ObserveConfig, rows, flags,
+                      base: list | None = None) -> list:
+    """Boundary rows of a stacked scan ys → list of records. ``rows``
+    is a TelemetryCarry of [T, ...] arrays, ``flags`` bool[T]."""
+    out = base if base is not None else []
+    idx = np.nonzero(np.asarray(flags))[0]
+    for i in idx:
+        out.append(record_from_state(cfg, _RowView(rows, int(i))))
+    return out
+
+
+def final_partial_record(cfg: ObserveConfig, tc) -> dict | None:
+    """The trailing partial window (if any turns were folded after the
+    last boundary): same schema, ``partial=True``."""
+    if int(np.asarray(tc.turns)) == 0:
+        return None
+    return record_from_state(cfg, tc)
+
+
+def aggregate_rows(cfg: ObserveConfig, rows_s) -> "_RowView":
+    """Fleet-aggregate fold of S per-frontend window rows (stacked on
+    axis 0): counts, histograms and λ̂ sum (each frontend's λ̂ estimates
+    its OWN k/S arrival stream), q_max maxes, view gauges average, times
+    span. Returns a row usable with ``record_from_state``."""
+
+    class _Agg:
+        pass
+
+    a = _Agg()
+    for f in TelemetryCarry._fields:
+        v = np.asarray(getattr(rows_s, f))
+        if f == "hist":
+            a.hist = v.sum(axis=0)
+        elif f in ("q_max",):
+            setattr(a, f, v.max(axis=0))
+        elif f in ("q_sum", "mu_err_sum"):
+            setattr(a, f, v.mean(axis=0))
+        elif f == "t_start":
+            a.t_start = v.min(axis=0)
+        elif f in ("t_last",):
+            a.t_last = v.max(axis=0)
+        elif f in ("turns", "turn_idx"):
+            setattr(a, f, v.max(axis=0))
+        else:  # counts and lam_hat: sum across frontends
+            setattr(a, f, v.sum(axis=0))
+    return a
+
+
+def fleet_records_from_rows(cfg: ObserveConfig, rows, flags):
+    """Fleet scan ys → (fleet-aggregate records, per-frontend records).
+
+    ``rows`` is a TelemetryCarry of [T, S, ...] arrays, ``flags``
+    bool[T]. The second return is a list (one entry per window) of
+    S-length record lists, each tagged with its frontend index.
+    """
+    out: list = []
+    out_f: list = []
+    idx = np.nonzero(np.asarray(flags))[0]
+    for i in idx:
+        rv = _RowView(rows, int(i))  # fields are [S, ...]
+        out.append(record_from_state(cfg, aggregate_rows(cfg, rv)))
+        per = []
+        for s in range(np.asarray(rv.n_resp).shape[0]):
+            rec = record_from_state(cfg, _RowView(rv, s))
+            rec["frontend"] = s
+            per.append(rec)
+        out_f.append(per)
+    return out, out_f
+
+
+def sim_records_from_trace(cfg: ObserveConfig, trace) -> list:
+    """Window records from a chain-simulator trace run with
+    ``SimConfig.observe`` — boundary rows plus the trailing partial
+    window (recovered from the LAST row: rows are post-fold, pre-reset
+    snapshots, so when the final round is not a boundary the last row IS
+    the partial window's state)."""
+    rows, flags = trace["obs_row"], trace["obs_flag"]
+    recs = records_from_rows(cfg, rows, flags)
+    fl = np.asarray(flags)
+    if fl.size and not fl[-1]:
+        recs.append(record_from_state(cfg, _RowView(rows, -1)))
+    return recs
+
+
+def fleet_final_partial(cfg: ObserveConfig, tc):
+    """Trailing partial window of a fleet run: (aggregate record | None,
+    per-frontend record list)."""
+    if int(np.asarray(tc.turns)[0]) == 0:
+        return None, []
+    rv = _RowView(tc, slice(None))  # materialize [S, ...] numpy views
+    agg = record_from_state(cfg, aggregate_rows(cfg, rv))
+    per = []
+    for s in range(np.asarray(rv.n_resp).shape[0]):
+        rec = record_from_state(cfg, _RowView(rv, s))
+        rec["frontend"] = s
+        per.append(rec)
+    return agg, per

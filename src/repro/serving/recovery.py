@@ -170,6 +170,10 @@ def run_workload_recovery(
     fake_cost: float,
     burst_cost: float | None = None,
     recovery: RecoveryConfig | None = None,
+    observe=None,  # obs.ObserveConfig — fold the windowed-telemetry step
+    # (identical to the faulty scan body's) once per turn; the window
+    # stream lands in info["windows"]
+    decisions=None,  # obs.DecisionTrace — lifecycle event ring
 ):
     """The host serving loop with failure semantics — ``run_workload``
     extended by the copy lifecycle in the module docstring. Per turn, in
@@ -206,6 +210,10 @@ def run_workload_recovery(
     max_clean = 0.0
     mu_trace: list[np.ndarray] = []
     seq_ctr = 0
+    if observe is not None:
+        from repro.obs import windows as obw
+        tc = obw.init_carry(observe)
+    windows: list = []
 
     cols = {
         "done": np.empty(0), "start": np.empty(0),
@@ -227,6 +235,7 @@ def run_workload_recovery(
         pool.set_speeds(wl.speeds[turn])
         drain = np.zeros(n, np.int64)
         real = cols["task"] >= 0
+        ctr_in = ctr.copy()  # telemetry window deltas
 
         # (2) blackout stall: in-flight copies past the stall instant take
         # the outage on their clock; their completions go dirty. The
@@ -257,6 +266,11 @@ def run_workload_recovery(
                              & (cols["att"] < rc.retry_budget) & retry_on)
                     ctr[CTR["kill_real"]] += int((killed & real).sum())
                     ctr[CTR["kill_fake"]] += int((killed & ~real).sum())
+                    if decisions is not None:
+                        for i in np.nonzero(killed & real)[0]:
+                            decisions.kill(t, int(cols["task"][i]),
+                                           int(cols["rep"][i]),
+                                           attempt=int(cols["att"][i]))
                     cols["learn"] &= ~killed
                     cols["done"] = np.where(ghost, np.inf, cols["done"])
                     cols["retry"] |= ghost
@@ -276,6 +290,11 @@ def run_workload_recovery(
                     cols["retry"] |= (newly & ~cols["dup"]
                                       & (cols["att"] < rc.retry_budget))
                 ctr[CTR["timeout"]] += int(newly.sum())
+                if decisions is not None:
+                    for i in np.nonzero(newly)[0]:
+                        decisions.timeout(t, int(cols["task"][i]),
+                                          int(cols["rep"][i]),
+                                          attempt=int(cols["att"][i]))
 
         # (5) flush due completions: clean → learner fold, dirty → drain
         # only; every real completion min-folds its task's response.
@@ -298,6 +317,14 @@ def run_workload_recovery(
         if dr.any():
             np.minimum.at(resp, cols["task"][dr],
                           cols["done"][dr] - cols["arrv"][dr])
+        if observe is not None:
+            lat_obs = (cols["done"] - cols["arrv"])[dr]
+        if decisions is not None:
+            for i in np.nonzero(dr)[0]:
+                decisions.complete(float(cols["done"][i]),
+                                   int(cols["task"][i]),
+                                   int(cols["rep"][i]),
+                                   attempt=int(cols["att"][i]))
         ctr[CTR["comp_real"]] += int(dr.sum())
         ctr[CTR["comp_fake"]] += int((due & ~real).sum())
         cols = _keep(cols, ~due)
@@ -377,6 +404,10 @@ def run_workload_recovery(
         else:
             fake_js, js = router.serve_turn(t, k, comp_w, comp_t, comp_now)
             rw = np.empty(0, np.int64)
+        if decisions is not None and retry_on:
+            for i in np.nonzero(r_act & (np.asarray(rw) >= 0))[0]:
+                decisions.retry(t, int(r_task[i]), int(rw[i]),
+                                attempt=int(r_att[i]))
 
         # (11) speculative re-execution on the post-serve μ̂: duplicate the
         # slowest suspected stragglers via the planner's greedy fill.
@@ -449,6 +480,11 @@ def run_workload_recovery(
                 seq_ctr += m_
                 ctr[CTR["launch_fake"]] += m_
         ss, dd = pool.submit_batch(js, times, costs_r)
+        if decisions is not None:
+            for i in range(k):
+                task = turn * k + i
+                decisions.arrive(times[i], task)
+                decisions.place(times[i], task, int(js[i]))
         cols = _append(
             cols, done=dd, start=ss, rep=js,
             seq=seq_ctr + np.arange(k),
@@ -477,8 +513,39 @@ def run_workload_recovery(
             seq_ctr += m_
         mu_trace.append(np.asarray(router.mu_front))
 
+        if observe is not None:
+            import jax.numpy as jnp
+            from repro.core import estimator as est
+            # pad latency samples to a power-of-two width so the jitted
+            # fold retraces O(log m) times, not once per turn shape; the
+            # histogram fold drops masked slots, so padding is inert
+            m_obs = len(lat_obs)
+            pad = 1
+            while pad < max(m_obs, 1):
+                pad *= 2
+            resp_p = np.zeros(pad)
+            resp_p[:m_obs] = lat_obs
+            ok_p = np.zeros(pad, bool)
+            ok_p[:m_obs] = True
+            tob = obw.faulty_turn_obs(
+                observe, t=np.float32(times[-1]), resp=resp_p, resp_ok=ok_p,
+                arrivals_k=k, q_view=router.q_view,
+                lam_hat=est.lam_hat_ema(router.arr),
+                mu_hat=router.learner.mu_hat, mu_true=wl.speeds[turn],
+                active=(None if wl.active is None
+                        else jnp.asarray(wl.active[turn])),
+                dctr=jnp.asarray(ctr - ctr_in))
+            tc, row, flag = obw.observe_turn_host(observe, tc, tob)
+            if bool(flag):
+                windows.append(obw.record_from_state(observe, row))
+
     drain_pending(resp, ctr, cols["done"], cols["task"], cols["arrv"])
     resp_out, ledger = build_ledger(resp[:n_tasks], ctr, n_tasks, max_clean)
     info = {"turns": T, "flush_overflow": 0, "pend_overflow": 0,
             "ledger": ledger}
+    if observe is not None:
+        tail = obw.final_partial_record(observe, tc)
+        if tail is not None:
+            windows.append(tail)
+        info["windows"] = windows
     return resp_out, np.asarray(mu_trace), info

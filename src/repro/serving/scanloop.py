@@ -52,8 +52,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import estimator as est
 from repro.core import learner as lrn
 from repro.core import scheduler as rs
+from repro.obs import windows as obw
 from repro.serving import router as rt
 
 #: In-flight completion capacity of the scan carry. Bounded by the total
@@ -94,7 +96,8 @@ def _precompute_workload(arrival_rate, horizon, request_cost, speed_schedule,
 
 @functools.lru_cache(maxsize=8)
 def _build_scan(n, k, comp_cap, pend_cap, policy, max_fake, use_alias,
-                fake_cost, churn=False, burst_cap=0, burst_cost=0.0):
+                fake_cost, churn=False, burst_cap=0, burst_cost=0.0,
+                observe=None):
     """Compile-once factory for the whole-run scan program (cached on the
     static shape/config tuple; the scan length T is carried by the xs
     shapes, so a new horizon recompiles — one compile per workload shape;
@@ -107,9 +110,19 @@ def _build_scan(n, k, comp_cap, pend_cap, policy, max_fake, use_alias,
     (``learner.reset_workers``, the same fold the host router applies in
     ``set_membership``), and the probe burst submits alongside the fake
     jobs — no host callbacks anywhere in the run. ``churn=False`` compiles
-    the exact pre-churn program."""
+    the exact pre-churn program.
+
+    ``observe`` (an ``obs.ObserveConfig``) appends a ``TelemetryCarry``
+    to the carry and folds the window metrics per turn (read-only w.r.t.
+    the routing math — responses stay bit-equal to ``observe=None``).
+    The ys gain ``(row, flag)``; with ``observe.emit_responses=False``
+    the per-request response and μ̂ ys drop from the program entirely
+    (stream-only mode for long horizons). ``observe=None`` compiles the
+    exact pre-telemetry program."""
 
     def body(lcfg, carry, xs):
+        if observe is not None:
+            carry, tc = carry[:-1], carry[-1]
         (q_view, learner, arr, key, last_fake, free_at,
          p_done, p_start, p_rep, p_seq, p_valid, seq_ctr,
          over_flush, over_pend) = carry
@@ -219,7 +232,17 @@ def _build_scan(n, k, comp_cap, pend_cap, policy, max_fake, use_alias,
         carry = (q_view, learner, arr, key, last_fake, free_at,
                  p_done, p_start, p_rep, p_seq, p_valid, seq_ctr,
                  over_flush, over_pend)
-        return carry, (resp, mu_tr)
+        if observe is None:
+            return carry, (resp, mu_tr)
+        tob = obw.plain_turn_obs(
+            observe, t=t32, resp=resp, arrivals_k=k, q_view=q_view,
+            lam_hat=est.lam_hat_ema(arr), mu_hat=learner.mu_hat,
+            mu_true=speeds64, active=active_t,
+        )
+        tc, row, flag = obw.observe_turn(observe, tc, tob)
+        if observe.emit_responses:
+            return carry + (tc,), (resp, mu_tr, row, flag)
+        return carry + (tc,), (row, flag)
 
     # carry buffers are DONATED: the output carry reuses the input's
     # storage, so a chunked driver streams a long horizon through repeated
@@ -235,7 +258,8 @@ def _build_scan(n, k, comp_cap, pend_cap, policy, max_fake, use_alias,
 
 @functools.lru_cache(maxsize=8)
 def _build_scan_faulty(n, k, comp_cap, pend_cap, policy, max_fake, use_alias,
-                       fake_cost, churn, burst_cap, burst_cost, rc):
+                       fake_cost, churn, burst_cap, burst_cost, rc,
+                       observe=None):
     """The failure-semantics variant of ``_build_scan``: the xs gain
     per-turn fault columns ``(kill_t[n], stall_t[n], stall_d[n])`` (+inf =
     no event) and the carry gains the copy-lifecycle columns of
@@ -265,11 +289,14 @@ def _build_scan_faulty(n, k, comp_cap, pend_cap, policy, max_fake, use_alias,
     spec_ratio = float(rc.spec_ratio)
 
     def body(lcfg, carry, xs):
+        if observe is not None:
+            carry, tc = carry[:-1], carry[-1]
         (q_view, learner, arr, key, last_fake, free_at,
          p_done, p_start, p_rep, p_seq, p_valid, seq_ctr,
          over_flush, over_pend,
          p_task, p_arrv, p_cost, p_dead, p_att, p_dup, p_learn, p_to,
          p_retry, resp, ctr, max_clean, turn) = carry
+        ctr_in = ctr  # window ledger deltas = end-of-turn ctr - ctr_in
         if churn:
             (times64, costs64, speeds64, active_t, rejoin_t, burst_t,
              kill_t, stall_t, stall_d) = xs
@@ -344,6 +371,7 @@ def _build_scan_faulty(n, k, comp_cap, pend_cap, policy, max_fake, use_alias,
         drain = drain.at[p_rep].add(dirty.astype(jnp.int32))
         ctr = ctr.at[rcv.CTR["comp_dirty"]].add(jnp.sum(dirty & is_real))
         dr = due & is_real
+        lat_obs, ok_obs = p_done - p_arrv, dr  # telemetry: copy latency
         resp = resp.at[jnp.where(dr, p_task, n_pad)].min(
             jnp.where(dr, p_done - p_arrv, jnp.inf))
         ctr = ctr.at[rcv.CTR["comp_real"]].add(jnp.sum(dr))
@@ -558,7 +586,18 @@ def _build_scan_faulty(n, k, comp_cap, pend_cap, policy, max_fake, use_alias,
                  over_flush, over_pend,
                  p_task, p_arrv, p_cost, p_dead, p_att, p_dup, p_learn,
                  p_to, p_retry, resp, ctr, max_clean, turn + 1)
-        return carry, mu_tr
+        if observe is None:
+            return carry, mu_tr
+        tob = obw.faulty_turn_obs(
+            observe, t=t32, resp=lat_obs, resp_ok=ok_obs, arrivals_k=k,
+            q_view=q_view, lam_hat=est.lam_hat_ema(arr),
+            mu_hat=learner.mu_hat, mu_true=speeds64, active=active_t,
+            dctr=ctr - ctr_in,
+        )
+        tc, row, flag = obw.observe_turn(observe, tc, tob)
+        if observe.emit_responses:
+            return carry + (tc,), (mu_tr, row, flag)
+        return carry + (tc,), (row, flag)
 
     @functools.partial(jax.jit, donate_argnums=(1,))
     def run(lcfg, carry0, xs):
@@ -579,6 +618,9 @@ def run_simulation_scan(
     arrival_batch: int = 1,
     pend_cap: int = PEND_CAP,
     strict_overflow: bool = True,
+    chunk_turns: int | None = None,
+    observe: "obw.ObserveConfig | None" = None,
+    obs_sink=None,
 ):
     """Drop-in for ``run_simulation`` with the whole loop scan-compiled.
 
@@ -604,7 +646,8 @@ def run_simulation_scan(
     return run_workload_scan(
         router, pool, times_np, costs_np, speeds_np,
         fake_cost=request_cost * 0.25, pend_cap=pend_cap,
-        strict_overflow=strict_overflow,
+        strict_overflow=strict_overflow, chunk_turns=chunk_turns,
+        observe=observe, obs_sink=obs_sink,
     )
 
 
@@ -642,6 +685,16 @@ def run_workload_scan(
     # run at a bounded xs footprint. Bit-identical to one unchunked scan
     # (a scan over T is the composition of scans over its chunks). The
     # tail chunk compiles its own program when T % chunk_turns != 0.
+    observe: "obw.ObserveConfig | None" = None,  # in-scan telemetry: fold
+    # windowed metrics in-carry and return the window stream in
+    # info["windows"] (records, chunk-continuous). Telemetry is read-only
+    # w.r.t. routing — responses stay bit-equal to observe=None. With
+    # observe.emit_responses=False the per-request response/μ̂ ys drop
+    # from the program (stream-only mode: empty responses, bounded
+    # memory at any horizon).
+    obs_sink=None,  # callable(list[record]) invoked once per chunk with
+    # the window records that completed in that chunk (e.g. an
+    # obs.JsonlSink) — the streaming path for long horizons
 ):
     """Scan-compile a PRE-MATERIALIZED workload — the environment engine's
     entry point (``repro.env``): any scenario that can lay out its arrival
@@ -769,7 +822,7 @@ def run_workload_scan(
             run = _build_scan_faulty(
                 n, k, min(rt.SERVE_COMP_CAP, pend_cap), pend_cap,
                 router.policy, 8, router.use_alias, fake_cost,
-                churn, burst_cap, float(burst_cost), rc,
+                churn, burst_cap, float(burst_cost), rc, observe,
             )
         else:
             run = _build_scan(
@@ -778,21 +831,49 @@ def run_workload_scan(
                 # the host loop's serve_step padding at default capacities
                 n, k, min(rt.SERVE_COMP_CAP, pend_cap), pend_cap,
                 router.policy, 8, router.use_alias, fake_cost,
-                churn, burst_cap, float(burst_cost),
+                churn, burst_cap, float(burst_cost), observe,
             )
+        if observe is not None:
+            carry0 = carry0 + (obw.init_carry(observe),)
         step = T if chunk_turns is None else max(int(chunk_turns), 1)
         carry = carry0
         resp_l, mu_l = [], []
-        for s in range(0, T, step):
+        windows: list = []
+
+        def _obs_chunk(rows, flags):
+            new = obw.records_from_rows(observe, rows, flags)
+            windows.extend(new)
+            if obs_sink is not None and new:
+                obs_sink(new)
+
+        from repro.obs import tracing as obt
+
+        for ci, s in enumerate(range(0, T, step)):
             xs = tuple(
                 jnp.asarray(x[s:s + step]) for x in xs_np
             )
-            carry, ys = run(router.lcfg, carry, xs)
+            with obt.step_annotation("serve_scan_chunk", ci):
+                carry, ys = run(router.lcfg, carry, xs)
             if faulty:
-                mu_l.append(ys)
+                if observe is None:
+                    mu_l.append(ys)
+                elif observe.emit_responses:
+                    mu_l.append(ys[0])
+                    _obs_chunk(ys[1], ys[2])
+                else:
+                    _obs_chunk(ys[0], ys[1])
             else:
-                resp_l.append(ys[0])
-                mu_l.append(ys[1])
+                if observe is None or observe.emit_responses:
+                    resp_l.append(ys[0])
+                    mu_l.append(ys[1])
+                if observe is not None:
+                    _obs_chunk(ys[-2], ys[-1])
+        if observe is not None and T > 0:
+            tail = obw.final_partial_record(observe, carry[-1])
+            if tail is not None:
+                windows.append(tail)
+                if obs_sink is not None:
+                    obs_sink([tail])
         ledger = None
         if faulty:
             # the response min-fold rides the carry (a task's copies can
@@ -823,6 +904,8 @@ def run_workload_scan(
         }
         if ledger is not None:
             info["ledger"] = ledger
+        if observe is not None:
+            info["windows"] = windows
         # advance the host-side objects to the final state, as the host
         # loop would have left them
         router.q_view = jnp.asarray(np.asarray(carry[0]))
@@ -864,7 +947,7 @@ def run_workload_scan(
 def _build_fleet_scan(n, S, k_f, comp_cap, pend_cap, policy, max_fake,
                       use_alias, fake_cost, sync_every, frozen_mu,
                       churn=False, burst_cap=0, burst_cost=0.0, mesh=None,
-                      faulty=False):
+                      faulty=False, observe=None):
     """Compile-once factory for the FLEET scan program: S full frontends
     (stale views, learners, λ̂ streams, double-buffered μ̂, herd
     bookkeeping — a ``FleetServeCarry``) ride the carry alongside the env
@@ -917,6 +1000,8 @@ def _build_fleet_scan(n, S, k_f, comp_cap, pend_cap, policy, max_fake,
         from repro.serving import recovery as rcv
 
     def body(lcfg, carry, xs):
+        if observe is not None:
+            carry, tc = carry[:-1], carry[-1]
         if faulty:
             (fl, free_at, p_done, p_start, p_rep, p_seq, p_fr, p_valid,
              seq_ctr, turn, over_flush, over_pend,
@@ -926,6 +1011,13 @@ def _build_fleet_scan(n, S, k_f, comp_cap, pend_cap, policy, max_fake,
         else:
             (fl, free_at, p_done, p_start, p_rep, p_seq, p_fr, p_valid,
              seq_ctr, turn, over_flush, over_pend) = carry
+        if observe is not None:
+            # per-frontend telemetry ledger deltas for this turn (i32[S])
+            kills_f = jnp.zeros((S,), jnp.int32)
+            dirty_f = jnp.zeros((S,), jnp.int32)
+            comp_f = jnp.zeros((S,), jnp.int32)
+            lat_obs = jnp.zeros((S, 0), jnp.float64)
+            ok_obs = jnp.zeros((S, 0), bool)
         if churn:
             (times64, costs64, speeds64, active_t, rejoin_t, changed_t,
              burst_t) = xs
@@ -952,6 +1044,9 @@ def _build_fleet_scan(n, S, k_f, comp_cap, pend_cap, policy, max_fake,
                                 free_at)
             killed = p_valid & jnp.isfinite(p_done) & (p_done > kill_t[p_rep])
             drainSn = drainSn.at[p_fr, p_rep].add(killed.astype(jnp.int32))
+            if observe is not None:
+                kills_f = kills_f.at[p_fr].add(
+                    (killed & is_real).astype(jnp.int32), mode="drop")
             ctr = ctr.at[rcv.CTR["kill_real"]].add(jnp.sum(killed & is_real))
             ctr = ctr.at[rcv.CTR["kill_fake"]].add(jnp.sum(killed & ~is_real))
             p_learn = p_learn & ~killed
@@ -1088,6 +1183,15 @@ def _build_fleet_scan(n, S, k_f, comp_cap, pend_cap, policy, max_fake,
             drainSn = drainSn.at[p_fr, p_rep].add(dirtyF.astype(jnp.int32))
             ctr = ctr.at[rcv.CTR["comp_dirty"]].add(jnp.sum(dirtyF & is_real))
             drF = due & is_real
+            if observe is not None:
+                dirty_f = dirty_f.at[p_fr].add(
+                    (dirtyF & is_real).astype(jnp.int32), mode="drop")
+                comp_f = comp_f.at[p_fr].add(
+                    (clean & is_real).astype(jnp.int32), mode="drop")
+                lat_obs = jnp.broadcast_to(
+                    (p_done - p_arrv)[None, :], (S, pend_cap))
+                ok_obs = drF[None, :] & (
+                    p_fr[None, :] == jnp.arange(S, dtype=jnp.int32)[:, None])
             resp_acc = resp_acc.at[jnp.where(drF, p_task, n_pad)].min(
                 jnp.where(drF, p_done - p_arrv, jnp.inf))
             ctr = ctr.at[rcv.CTR["comp_real"]].add(jnp.sum(drF))
@@ -1241,7 +1345,45 @@ def _build_fleet_scan(n, S, k_f, comp_cap, pend_cap, policy, max_fake,
         if faulty:
             carry = carry + (p_task, p_arrv, p_learn, resp_acc, ctr,
                              max_clean)
-        return carry, (resp, mu_tr, workers, did_sync, gaps)
+        if observe is None:
+            return carry, (resp, mu_tr, workers, did_sync, gaps)
+
+        # -- telemetry: one per-frontend fold (vmapped over S) per turn.
+        #    Plain fleet turns complete within the turn (launched =
+        #    completed = k_f); faulty turns read the per-frontend ledger
+        #    deltas scattered above and fold the flushed-completion
+        #    latencies masked by owning frontend.
+        i32o = jnp.int32
+        kf_s = jnp.full((S,), k_f, i32o)
+        z_s = jnp.zeros((S,), i32o)
+        if faulty:
+            resp_o, ok_o = lat_obs, ok_obs
+            comp_o, dirty_o, kill_o = comp_f, dirty_f, kills_f
+        else:
+            resp_o = resp.reshape(S, k_f)
+            ok_o = jnp.ones((S, k_f), bool)
+            comp_o, dirty_o, kill_o = kf_s, z_s, z_s
+        tob = obw.TurnObs(
+            t=jnp.full((S,), t32, jnp.float32),
+            resp=resp_o, resp_ok=ok_o,
+            arrivals=kf_s, q_view=q_view,
+            lam_hat=est.lam_hat_ema(arr).astype(jnp.float32),
+            mu_hat=learner.mu_hat,
+            mu_true=jnp.broadcast_to(
+                speeds64.astype(jnp.float32)[None], (S, n)),
+            active=(None if active_t is None
+                    else jnp.broadcast_to(active_t[None], (S, n))),
+            launched=kf_s, completed=comp_o, dirty=dirty_o,
+            killed=kill_o, retried=z_s,
+            collisions=obw.fleet_collisions(workers, n),
+        )
+        tc, row, flag_s = jax.vmap(
+            functools.partial(obw.observe_turn, observe))(tc, tob)
+        if observe.emit_responses:
+            ys = (resp, mu_tr, workers, did_sync, gaps, row, flag_s[0])
+        else:  # stream-only: ys carry ONLY the window stream
+            ys = (row, flag_s[0])
+        return carry + (tc,), ys
 
     @functools.partial(jax.jit, donate_argnums=(1,))
     def run(lcfg, carry0, xs):
@@ -1271,6 +1413,12 @@ def run_fleet_workload_scan(
     stall_np: np.ndarray | None = None,  # f64[T, n] blackout instants (+inf)
     stall_dur_np: np.ndarray | None = None,  # f64[T, n] blackout durations
     strict_overflow: bool = True,
+    observe: "obw.ObserveConfig | None" = None,  # in-scan telemetry: one
+    # vmapped per-frontend fold per turn; per-frontend window records in
+    # info["windows_frontends"], the fleet-aggregate fold in
+    # info["windows"]. emit_responses=False puts the program in
+    # stream-only mode (response/μ̂/placement ys dropped entirely).
+    obs_sink=None,  # callable(list[record]) — streamed per chunk
 ):
     """The one-program FLEET over a pre-materialized workload: S frontends
     × environment × serving loop as a single ``lax.scan`` (chunked when
@@ -1427,18 +1575,40 @@ def run_fleet_workload_scan(
                 jnp.zeros((rcv.NCTR,), jnp.int64),  # ctr
                 jnp.float64(0.0),  # max_clean
             )
+        if observe is not None:
+            carry0 = carry0 + (jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (S,) + x.shape),
+                obw.init_carry(observe),
+            ),)
         run = _build_fleet_scan(
             n, S, k_f, min(rt.SERVE_COMP_CAP, pend_cap), pend_cap,
             frs[0].policy, 8, use_alias, fake_cost, sync_every, frozen_mu,
-            churn, burst_cap, float(burst_cost), mesh, faulty,
+            churn, burst_cap, float(burst_cost), mesh, faulty, observe,
         )
         step = T if chunk_turns is None else max(int(chunk_turns), 1)
         carry = carry0
         ys_l = []
-        for s in range(0, T, step):
+        windows: list = []
+        windows_f: list = []
+
+        def _obs_chunk(rows, flags):
+            new, new_f = obw.fleet_records_from_rows(observe, rows, flags)
+            windows.extend(new)
+            windows_f.extend(new_f)
+            if obs_sink is not None and new:
+                obs_sink(new)
+
+        from repro.obs import tracing as obt
+
+        stream_only = observe is not None and not observe.emit_responses
+        for ci, s in enumerate(range(0, T, step)):
             xs = tuple(jnp.asarray(x[s:s + step]) for x in xs_np)
-            carry, ys = run(frs[0].lcfg, carry, xs)
-            ys_l.append(ys)
+            with obt.step_annotation("fleet_scan_chunk", ci):
+                carry, ys = run(frs[0].lcfg, carry, xs)
+            if observe is not None:
+                _obs_chunk(ys[-2], ys[-1])
+            if not stream_only:
+                ys_l.append(ys[:5])
         if ys_l:
             resp = np.concatenate(
                 [np.asarray(y[0]) for y in ys_l]
@@ -1519,6 +1689,16 @@ def run_fleet_workload_scan(
         }
         if ledger is not None:
             info["ledger"] = ledger
+        if observe is not None:
+            if T > 0:
+                tail, tail_f = obw.fleet_final_partial(observe, carry[-1])
+                if tail is not None:
+                    windows.append(tail)
+                    windows_f.append(tail_f)
+                    if obs_sink is not None:
+                        obs_sink([tail])
+            info["windows"] = windows
+            info["windows_frontends"] = windows_f
     if strict_overflow and (info["flush_overflow"] or info["pend_overflow"]):
         raise RuntimeError(
             f"fleet scan overflow: flush_overflow={info['flush_overflow']} "

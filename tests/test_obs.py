@@ -1,0 +1,257 @@
+"""Telemetry-engine tests (the in-scan observability subsystem).
+
+Covers the PR's acceptance gates: windowed-quantile accuracy against
+exact percentiles (within the pinned histogram tolerance), telemetry-off
+bit-exactness on all three execution layers, host-vs-scan window-stream
+parity (float-for-float), chunked continuity, stream-only mode, the
+fleet aggregate/per-frontend split, and the exporters (Prometheus text,
+JSONL sink, terminal dashboard, Chrome trace).
+"""
+from __future__ import annotations
+
+import json
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro import env, obs
+from repro.core import simulator as sim
+from repro.env.serving import run_scenario
+from repro.obs import windows as obw
+
+OCFG = obs.ObserveConfig(window_turns=8)
+
+
+def _run(name, *, use_scan, horizon=160.0, seed=0, **kw):
+    return run_scenario(
+        env.make(name, horizon=horizon), use_scan=use_scan,
+        sequential_pool=True, arrival_batch=8, seed=seed, **kw,
+    )
+
+
+def _assert_records_equal(wa, wb, ignore=()):
+    assert len(wa) == len(wb)
+    for a, b in zip(wa, wb):
+        assert set(a) - set(ignore) == set(b) - set(ignore)
+        for k in set(a) - set(ignore):
+            va, vb = a[k], b[k]
+            if (isinstance(va, float) and isinstance(vb, float)
+                    and math.isnan(va) and math.isnan(vb)):
+                continue
+            assert va == vb, (k, va, vb)
+
+
+# ---------------------------------------------------------------------------
+# windowed-quantile accuracy
+# ---------------------------------------------------------------------------
+
+
+def test_windowed_quantile_accuracy():
+    """Histogram quantiles track exact percentiles within the pinned
+    one-bin-ratio tolerance (samples inside [hist_lo, hist_hi])."""
+    cfg = obs.ObserveConfig(window_turns=64, hist_bins=128)
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(0)
+    n = 4
+    tc = obw.init_carry(cfg)
+    chunks = []
+    row = flag = None
+    for turn in range(cfg.window_turns):
+        samples = np.clip(rng.lognormal(0.0, 1.5, size=32), 2e-3, 5e3)
+        chunks.append(samples)
+        tob = obw.plain_turn_obs(
+            cfg, t=float(turn + 1), resp=samples, arrivals_k=32,
+            q_view=jnp.zeros((n,), jnp.int32), lam_hat=1.0,
+            mu_hat=jnp.ones((n,), jnp.float32), mu_true=np.ones(n),
+            active=None,
+        )
+        tc, row, flag = obw.observe_turn_host(cfg, tc, tob)
+    assert bool(flag)  # window_turns folds -> boundary row
+    rec = obw.record_from_state(cfg, row)
+    samples = np.concatenate(chunks)
+    assert rec["n_resp"] == samples.size
+    assert rec["arrivals"] == samples.size
+    tol = obw.quantile_tolerance(cfg)
+    for q, key in [(50.0, "p50"), (99.0, "p99"), (99.9, "p999")]:
+        exact = float(np.percentile(samples, q))
+        assert abs(rec[key] - exact) / exact <= tol + 1e-9, (key, rec[key],
+                                                            exact)
+    assert abs(rec["mean_est"] - samples.mean()) / samples.mean() <= tol
+
+
+def test_quantile_tolerance_is_one_bin_ratio():
+    cfg = obs.ObserveConfig()
+    assert obw.quantile_tolerance(cfg) == pytest.approx(
+        (cfg.hist_hi / cfg.hist_lo) ** (1 / cfg.hist_bins) - 1.0
+    )
+    edges = obw.bin_edges(cfg)
+    assert edges.shape == (cfg.hist_bins + 1,)
+    assert edges[0] == pytest.approx(cfg.hist_lo)
+    assert edges[-1] == pytest.approx(cfg.hist_hi)
+
+
+# ---------------------------------------------------------------------------
+# telemetry-off bit-exactness (all three layers)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("use_scan", [False, True])
+@pytest.mark.parametrize("name", ["churn", "crash_storm"])
+def test_telemetry_off_bit_exact_serving(name, use_scan):
+    off = _run(name, use_scan=use_scan)
+    on = _run(name, use_scan=use_scan, observe=OCFG)
+    np.testing.assert_array_equal(off["responses"], on["responses"])
+    np.testing.assert_array_equal(off["mu_trace"], on["mu_trace"])
+    assert "windows" not in off["info"]
+    assert on["info"]["windows"]
+
+
+def test_telemetry_off_bit_exact_sim():
+    ocfg = obs.ObserveConfig(window_turns=32)
+    scn = env.make("churn")
+    c0, p0, _ = scn.to_sim("ppot_sq2", rounds=2000)
+    c1, p1, _ = scn.to_sim("ppot_sq2", rounds=2000, observe=ocfg)
+    _, tr0 = sim.simulate(c0, p0, jax.random.PRNGKey(0))
+    _, tr1 = sim.simulate(c1, p1, jax.random.PRNGKey(0))
+    assert set(tr1) - set(tr0) == {"obs_row", "obs_flag"}
+    for k in tr0:
+        np.testing.assert_array_equal(
+            np.asarray(tr0[k]), np.asarray(tr1[k]), err_msg=k
+        )
+    recs = obw.sim_records_from_trace(ocfg, tr1)
+    assert recs
+    # the histogram folds exactly the real completions
+    n_done = int(np.sum(np.asarray(tr0["code"]) == sim.EV_REAL_DONE))
+    assert sum(r["n_resp"] for r in recs) == n_done
+    assert sum(sum(r["hist"]) for r in recs) == n_done
+
+
+# ---------------------------------------------------------------------------
+# host vs scan window-stream parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["null", "churn", "crash_storm"])
+def test_host_scan_window_parity(name):
+    h = _run(name, use_scan=False, observe=OCFG)
+    s = _run(name, use_scan=True, observe=OCFG)
+    wh, ws = h["info"]["windows"], s["info"]["windows"]
+    assert wh
+    _assert_records_equal(wh, ws)
+    # windows tile the horizon: full windows plus at most one partial
+    T = h["info"]["turns"]
+    assert len(wh) == -(-T // OCFG.window_turns)
+    assert all(not w["partial"] for w in wh[:-1])
+
+
+def test_crash_storm_windows_match_ledger():
+    out = _run("crash_storm", use_scan=True, observe=OCFG)
+    w = out["info"]["windows"]
+    led = out["info"]["ledger"]
+    assert sum(r["killed"] for r in w) == led["copies_real_killed"]
+    # the ledger additionally counts the end-of-run drain of copies
+    # still in flight at the horizon, which no turn (hence no window)
+    # observes — so windows lower-bound it
+    comp_w = sum(r["completed"] + r["dirty"] for r in w)
+    assert 0 < comp_w <= led["copies_real_completed"]
+
+
+# ---------------------------------------------------------------------------
+# chunked continuity + stream-only mode
+# ---------------------------------------------------------------------------
+
+
+def test_chunked_continuity():
+    """chunk_turns must not perturb responses OR the window stream —
+    the telemetry carry crosses chunk boundaries like any other state
+    (37 is coprime with the window width, so boundaries interleave)."""
+    whole = _run("churn", use_scan=True, observe=OCFG)
+    chunked = _run("churn", use_scan=True, observe=OCFG, chunk_turns=37)
+    np.testing.assert_array_equal(whole["responses"], chunked["responses"])
+    _assert_records_equal(whole["info"]["windows"],
+                          chunked["info"]["windows"])
+
+
+def test_stream_only_mode(tmp_path):
+    """emit_responses=False drops per-request ys from the program but
+    leaves the window stream untouched; a JsonlSink streams it across
+    chunk boundaries in bounded memory."""
+    so_cfg = obs.ObserveConfig(window_turns=8, emit_responses=False)
+    full = _run("churn", use_scan=True, observe=OCFG)
+    path = tmp_path / "stream.jsonl"
+    with obs.JsonlSink(str(path)) as sink:
+        so = _run("churn", use_scan=True, observe=so_cfg, chunk_turns=32,
+                  obs_sink=sink)
+    assert so["responses"].size == 0
+    _assert_records_equal(full["info"]["windows"], so["info"]["windows"])
+    lines = [json.loads(ln) for ln in path.read_text().splitlines()]
+    assert len(lines) == len(so["info"]["windows"])
+    assert [r["turn"] for r in lines] == sorted(r["turn"] for r in lines)
+
+
+# ---------------------------------------------------------------------------
+# fleet layer
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_windows_bit_exact_and_consistent():
+    kw = dict(use_scan=True, n_frontends=2)
+    off = _run("crash_storm", **kw)
+    on = _run("crash_storm", observe=OCFG, **kw)
+    np.testing.assert_array_equal(off["responses"], on["responses"])
+    agg = on["info"]["windows"]
+    per = on["info"]["windows_frontends"]
+    assert agg and len(per) == len(agg)
+    for a, ps in zip(agg, per):
+        assert [p["frontend"] for p in ps] == [0, 1]
+        # the aggregate is an exact fold of the per-frontend rows
+        assert a["n_resp"] == sum(p["n_resp"] for p in ps)
+        assert a["killed"] == sum(p["killed"] for p in ps)
+        assert a["completed"] == sum(p["completed"] for p in ps)
+        np.testing.assert_array_equal(
+            np.asarray(a["hist"]),
+            np.sum([p["hist"] for p in ps], axis=0),
+        )
+        assert a["q_max"] == max(p["q_max"] for p in ps)
+
+
+# ---------------------------------------------------------------------------
+# exporters + decision tracing
+# ---------------------------------------------------------------------------
+
+
+def test_prometheus_and_dashboard():
+    out = _run("churn", use_scan=True, observe=OCFG)
+    rec = out["info"]["windows"][0]
+    txt = obs.prometheus_snapshot(OCFG, rec, labels={"policy": "ppot_sq2"})
+    assert "rosella_latency_p99_seconds" in txt
+    assert 'policy="ppot_sq2"' in txt
+    assert 'le="+Inf"' in txt
+    # cumulative buckets end at the window's response count
+    assert f'le="+Inf"}} {sum(rec["hist"])}' in txt
+    header = obs.dashboard_header()
+    row = obs.dashboard_row(rec)
+    assert len(header.split()) == len(row.split())
+
+
+def test_decision_trace_and_chrome_export(tmp_path):
+    dt = obs.DecisionTrace(cap=65536)
+    out = _run("churn", use_scan=False, observe=OCFG, decisions=dt)
+    assert dt.seen > 0 and len(dt.ring) > 0
+    tr = dt.chrome_trace()
+    assert tr["traceEvents"]
+    # every completed task has a closed place->complete slice
+    path = tmp_path / "decisions.json"
+    dt.save(str(path))
+    loaded = json.loads(path.read_text())
+    assert loaded["traceEvents"]
+
+    wtr = obs.windows_to_chrome_trace(out["info"]["windows"])
+    counters = [e for e in wtr["traceEvents"] if e.get("ph") == "C"]
+    assert counters
+    cpath = tmp_path / "windows.json"
+    obs.save_chrome_trace(wtr, str(cpath))
+    assert json.loads(cpath.read_text())["traceEvents"]
