@@ -56,6 +56,66 @@ def write_bench(stem: str, payload: dict, *, smoke: bool = False,
     return path
 
 
+def bench_main(stem: str, run, *, smoke_kw: dict | None = None) -> None:
+    """Shared ``__main__`` for the ``(csv_rows, derived)`` figure/table
+    benchmarks: print the CSV rows (the historical stdout contract) and
+    ALSO publish the uniform ``BENCH_<stem>.json`` envelope. ``--smoke``
+    runs the reduced shapes in ``smoke_kw`` and writes the gitignored
+    ``BENCH_<stem>_smoke.json`` instead of clobbering the full record."""
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced shapes; gitignored artifact")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    kw = dict(smoke_kw or {}) if args.smoke else {}
+    rows, derived = run(seed=args.seed, **kw)
+    for r in rows:
+        print(r)
+    write_bench(stem, {"csv_rows": list(rows), "derived": derived},
+                smoke=args.smoke)
+
+
+def sustained_series(chunks: "list[dict]", *, warmup: int = 1) -> dict:
+    """Sustained-throughput report from the chunk driver's per-chunk
+    wall-clock records (``info["chunks"]`` of a ``timing=True`` run):
+    dec/s as a TIME SERIES (one point per chunk, jit warmup excluded from
+    the sustained figure but kept in the series — the first chunk pays
+    compilation), plus the memory high-water samples whose flatness is
+    the bounded-memory evidence."""
+    chunks = list(chunks)
+    out: dict = {
+        "n_chunks": len(chunks),
+        "warmup_chunks_excluded": min(warmup, max(len(chunks) - 1, 0)),
+    }
+    if not chunks:
+        return out
+    body = chunks[out["warmup_chunks_excluded"]:]
+    run_s = sum(c["run_s"] for c in body)
+    reqs = sum(c["requests"] for c in body)
+    decs = [c["requests"] / c["run_s"] for c in chunks if c["run_s"] > 0]
+    rss = [c["rss_mb"] for c in chunks]
+    out.update(
+        requests_total=int(sum(c["requests"] for c in chunks)),
+        turns_total=int(sum(c["turns"] for c in chunks)),
+        decs_series=[round(d, 1) for d in decs],
+        decs_sustained=(reqs / run_s) if run_s > 0 else float("nan"),
+        decs_min=min(decs) if decs else float("nan"),
+        decs_max=max(decs) if decs else float("nan"),
+        wall_s_total=sum(c["gen_s"] + c["run_s"] for c in chunks),
+        gen_s_total=sum(c["gen_s"] for c in chunks),
+        run_s_total=sum(c["run_s"] for c in chunks),
+        rss_mb_series=[round(r, 1) for r in rss],
+        rss_mb_peak=max(rss) if rss else float("nan"),
+        # growth across the post-warmup chunks: ~0 ⇔ streaming is truly
+        # bounded-memory (the committed acceptance check reads this)
+        rss_mb_growth=(rss[-1] - rss[out["warmup_chunks_excluded"]]
+                       if len(rss) > 1 else 0.0),
+    )
+    return out
+
+
 def run_sim(cfg, params, seed: int = 0, warmup_frac: float = 0.3):
     t0 = time.time()
     final, trace = sim.simulate(cfg, params, jax.random.PRNGKey(seed))

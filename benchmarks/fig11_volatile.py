@@ -3,7 +3,7 @@ speed sets S1 (mild) and S2 (heterogeneous), load sweep. Paper claims:
 Rosella best everywhere; gap grows with load AND with heterogeneity."""
 from __future__ import annotations
 
-from benchmarks.common import csv_row, response_stats, run_sim
+from benchmarks.common import bench_main, csv_row, response_stats, run_sim
 from repro.configs import rosella_sim as RS
 from repro.core import policies as pol
 
@@ -42,5 +42,4 @@ def run(rounds: int = 90_000, seed: int = 0):
 
 
 if __name__ == "__main__":
-    for r in run()[0]:
-        print(r)
+    bench_main("fig11_volatile", run, smoke_kw={"rounds": 4500})

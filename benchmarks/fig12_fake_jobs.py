@@ -4,7 +4,7 @@ c/(1−α̂)). Paper claims: longer windows don't substitute for fake jobs; the
 fake-job advantage grows with load and heterogeneity (S2 > S1)."""
 from __future__ import annotations
 
-from benchmarks.common import csv_row, response_stats, run_sim
+from benchmarks.common import bench_main, csv_row, response_stats, run_sim
 from repro.configs import rosella_sim as RS
 from repro.core import policies as pol
 
@@ -41,5 +41,4 @@ def run(rounds: int = 90_000, seed: int = 0):
 
 
 if __name__ == "__main__":
-    for r in run()[0]:
-        print(r)
+    bench_main("fig12_fake_jobs", run, smoke_kw={"rounds": 4500})

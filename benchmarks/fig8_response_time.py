@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import csv_row, response_stats, run_sim
+from benchmarks.common import bench_main, csv_row, response_stats, run_sim
 from repro.configs import rosella_sim as RS
 from repro.core import policies as pol
 
@@ -50,5 +50,4 @@ def run(rounds: int = 120_000, seed: int = 0):
 
 
 if __name__ == "__main__":
-    for r in run()[0]:
-        print(r)
+    bench_main("fig8_response_time", run, smoke_kw={"rounds": 6000})

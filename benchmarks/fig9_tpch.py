@@ -8,7 +8,7 @@ alone beats Sparrow; learning-based schedulers degrade under volatility
 while speed-oblivious ones (Sparrow/PoT) don't."""
 from __future__ import annotations
 
-from benchmarks.common import csv_row, response_stats, run_sim
+from benchmarks.common import bench_main, csv_row, response_stats, run_sim
 from repro.configs import rosella_sim as RS
 from repro.core import policies as pol
 
@@ -48,5 +48,4 @@ def run(rounds: int = 100_000, seed: int = 0):
 
 
 if __name__ == "__main__":
-    for r in run()[0]:
-        print(r)
+    bench_main("fig9_tpch", run, smoke_kw={"rounds": 5000})

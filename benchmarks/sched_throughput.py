@@ -48,7 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import csv_row
+from benchmarks.common import csv_row, write_bench
 from repro.core import dispatch as dsp
 from repro.core import policies as pol
 from repro.kernels.ppot_dispatch import ops as pd_ops
@@ -331,8 +331,11 @@ def run(n: int = 64, B: int = 4096, seed: int = 0, *, serial_B: int | None = Non
                     k: prev[k] for k in ("config", "policies", "ppot_sq2")
                     if k in prev
                 }
-        with open(json_path, "w") as f:
-            json.dump(summary, f, indent=1)
+        # the shared envelope (schema_version + provenance) on top of the
+        # historical top-level keys — readers of either shape keep working
+        write_bench("dispatch", summary,
+                    smoke="smoke" in os.path.basename(json_path),
+                    path=json_path)
         rows.append(csv_row("sched_bench_json", 0.0, f"wrote={json_path}"))
     return rows, {"speedups": speedups, "batched_dps": batched_dps,
                   "summary": summary}

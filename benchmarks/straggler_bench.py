@@ -8,7 +8,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import csv_row
+from benchmarks.common import bench_main, csv_row
 from repro.dist.straggler import simulate_fleet
 
 
@@ -40,5 +40,4 @@ def run(seed: int = 0):
 
 
 if __name__ == "__main__":
-    for r in run()[0]:
-        print(r)
+    bench_main("straggler_bench", run)

@@ -17,7 +17,8 @@ python -m pytest -x -q -m "not slow" \
     tests/test_learner.py tests/test_theory.py tests/test_fleet.py \
     tests/test_router_and_straggler.py tests/test_properties.py \
     tests/test_alias.py tests/test_scanloop.py tests/test_env.py \
-    tests/test_fleet_scan.py tests/test_faults.py tests/test_obs.py
+    tests/test_fleet_scan.py tests/test_faults.py tests/test_obs.py \
+    tests/test_load.py
 
 # ~10 s engine smoke: all policies, reduced shapes
 timeout 120 python benchmarks/sched_throughput.py --smoke
@@ -145,6 +146,36 @@ try:
         print("fault-smoke: no smoke_reference in BENCH_faults.json")
 except Exception as e:  # advisory only — never fail CI on the smoke
     print(f"fault-smoke: skipped ({e})")
+EOF
+
+# non-gating load-harness smoke: a ~100k-request streamed run through the
+# chunked scan driver (gitignored BENCH_loadtest_smoke.json), compared
+# against the smoke_reference recorded in the committed
+# BENCH_loadtest.json — warn beyond a 20% sustained-dec/s drop (advisory
+# on this throttled container)
+timeout 900 python benchmarks/loadtest.py --smoke --no-sweep \
+    --windows-out '' || true
+python - <<'EOF' || true
+import json
+try:
+    fresh = json.load(open("BENCH_loadtest_smoke.json"))
+    got = fresh["sustained"]["decs_sustained"]
+    reqs = fresh["requests_total"]
+    ref = json.load(open("BENCH_loadtest.json")).get("smoke_reference")
+    if ref and ref.get("decs_sustained"):
+        want = ref["decs_sustained"]
+        ratio = got / want
+        line = (f"load-smoke: {reqs} req, sustained {got/1e3:.1f}k dec/s "
+                f"vs committed smoke_reference {want/1e3:.1f}k "
+                f"({ratio:.2f}x)")
+        if ratio < 0.8:
+            line += "  ** WARNING: >20% below the committed reference **"
+        print(line)
+    else:
+        print(f"load-smoke: {reqs} req, sustained {got/1e3:.1f}k dec/s "
+              "(no smoke_reference in BENCH_loadtest.json)")
+except Exception as e:  # advisory only — never fail CI on the smoke
+    print(f"load-smoke: skipped ({e})")
 EOF
 
 # non-gating telemetry-overhead smoke: the in-scan window fold must stay

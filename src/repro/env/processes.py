@@ -188,12 +188,60 @@ class TraceArrivals:
 
     @classmethod
     def from_csv(cls, path: str, time_col: int = 0,
-                 cost_col: int | None = 1) -> "TraceArrivals":
-        raw = np.loadtxt(path, delimiter=",", ndmin=2)
-        costs = None
-        if cost_col is not None and raw.shape[1] > cost_col:
-            costs = raw[:, cost_col]
-        return cls.from_arrays(raw[:, time_col], costs)
+                 cost_col: int | None = 1,
+                 chunk_rows: int = 262_144) -> "TraceArrivals":
+        """Load a trace CSV in ``chunk_rows``-sized pieces (the file is
+        never whole-file-read, so multi-GB traces load at a bounded RSS)
+        and VALIDATE monotone timestamps instead of silently re-sorting:
+        a trace whose clock runs backwards is a corrupt trace, and the
+        error names the offending row so it can be fixed at the source."""
+        t_chunks: list = []
+        c_chunks: list = []
+        have_cost = cost_col is not None
+        row0 = 0
+        prev_last = -np.inf
+        with open(path) as f:
+            while True:
+                try:
+                    import warnings
+
+                    with warnings.catch_warnings():
+                        # EOF on the incremental handle is the loop's
+                        # normal exit, not a user-facing condition
+                        warnings.filterwarnings(
+                            "ignore", message=".*input contained no data.*")
+                        raw = np.loadtxt(f, delimiter=",", ndmin=2,
+                                         max_rows=chunk_rows)
+                except ValueError as e:
+                    raise ValueError(
+                        f"{path}: malformed CSV near row {row0} "
+                        f"(rows are 0-indexed): {e}"
+                    ) from e
+                if raw.size == 0:
+                    break
+                t = np.asarray(raw[:, time_col], float)
+                prev = np.concatenate(([prev_last], t[:-1]))
+                bad = np.nonzero(t < prev)[0]
+                if bad.size:
+                    i = int(bad[0])
+                    raise ValueError(
+                        f"{path}: non-monotone timestamp at row {row0 + i}: "
+                        f"t={t[i]!r} after t={prev[i]!r} — trace rows must "
+                        f"be sorted by arrival time"
+                    )
+                prev_last = t[-1]
+                t_chunks.append(t)
+                if have_cost and raw.shape[1] > cost_col:
+                    c_chunks.append(np.asarray(raw[:, cost_col], float))
+                else:
+                    have_cost = False
+                row0 += len(t)
+        if not t_chunks:
+            return cls(times=(), costs=None)
+        times = np.concatenate(t_chunks)
+        costs = np.concatenate(c_chunks) if have_cost and c_chunks else None
+        return cls(times=tuple(times),
+                   costs=None if costs is None else tuple(costs))
 
     @classmethod
     def tpch(cls, horizon: float, rate: float, seed: int = 0) -> "TraceArrivals":

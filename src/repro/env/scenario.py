@@ -94,6 +94,39 @@ class ServingWorkload:
         frontend_of = np.repeat(np.arange(S, dtype=np.int32), k_f)
         return times_f, costs_f, frontend_of
 
+    def iter_chunks(self, chunk_turns: int):
+        """Slice this MATERIALIZED workload into ≤ ``chunk_turns``-turn
+        ``ServingWorkload`` views (every per-turn column — times, costs,
+        speeds, membership, rejoin edges, burst targets, fault tracks —
+        sliced consistently; ``shift_times`` stays whole as run-level
+        metadata and ``trace_dropped`` rides the final chunk). The chunked
+        scan driver composes these back into exactly the monolithic
+        program — ``repro.load.run_stream_scan(iter_chunks(...))`` is
+        bit-equal to ``run_workload_scan`` on the whole arrays. Lazily
+        GENERATED chunk streams (the host never holding the full trace)
+        come from ``repro.load.ScenarioStream`` instead."""
+        step = max(int(chunk_turns), 1)
+        T = self.turns
+
+        def sl(a, s):
+            return None if a is None else a[s:s + step]
+
+        for s in range(0, T, step):
+            last = s + step >= T
+            yield dataclasses.replace(
+                self,
+                times=self.times[s:s + step],
+                costs=self.costs[s:s + step],
+                speeds=self.speeds[s:s + step],
+                active=sl(self.active, s),
+                rejoin=sl(self.rejoin, s),
+                burst=sl(self.burst, s),
+                kill_at=sl(self.kill_at, s),
+                stall_at=sl(self.stall_at, s),
+                stall_dur=sl(self.stall_dur, s),
+                trace_dropped=self.trace_dropped if last else 0,
+            )
+
 
 @dataclasses.dataclass(frozen=True)
 class Scenario:
@@ -198,6 +231,13 @@ class Scenario:
         separate stream keyed off the same seed, so a scenario + seed is
         one deterministic workload.
         """
+        if getattr(self.arrivals, "is_stream", False):
+            raise ValueError(
+                f"scenario {self.name!r} uses a streaming arrival process "
+                f"({type(self.arrivals).__name__}) — it cannot be "
+                f"materialized whole; drive it through "
+                f"repro.load.ScenarioStream / run_stream_scan instead"
+            )
         speeds0 = np.asarray(self.speeds, float)
         n = self.n
 

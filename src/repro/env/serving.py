@@ -192,6 +192,8 @@ def run_scenario(
     obs_sink=None,
     decisions=None,
     chunk_turns: int | None = None,
+    pend_cap: int | None = None,
+    comp_cap: int | None = None,
 ):
     """One scenario end to end on the serving layer.
 
@@ -273,7 +275,8 @@ def run_scenario(
             active_np=wl.active, rejoin_np=wl.rejoin, burst_np=wl.burst,
             fake_cost=fake_cost, kill_np=wl.kill_at, stall_np=wl.stall_at,
             stall_dur_np=wl.stall_dur, recovery=recovery,
-            chunk_turns=chunk_turns, observe=observe, obs_sink=obs_sink,
+            chunk_turns=chunk_turns, pend_cap=pend_cap, comp_cap=comp_cap,
+            observe=observe, obs_sink=obs_sink,
         )
     else:
         resp, mu_trace, info = run_workload(

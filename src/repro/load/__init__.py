@@ -1,0 +1,17 @@
+"""repro.load — the trace-scale streaming load harness.
+
+``traces``: cluster-trace-shaped arrival/cost generators (Azure-like
+serverless shape, Google-like batch shape) that stream in blocks.
+``stream``: ``ScenarioStream`` (lazy chunked ``compile_serving``) +
+``run_stream_scan`` (chunked scan driving with the carry crossing chunk
+boundaries device-side) — million-request horizons in bounded memory.
+"""
+from repro.load.stream import (  # noqa: F401
+    ScenarioStream,
+    run_stream_scan,
+)
+from repro.load.traces import (  # noqa: F401
+    AzureLikeTrace,
+    GoogleLikeTrace,
+    stream_arrivals,
+)

@@ -11,7 +11,9 @@ from repro.obs.export import (  # noqa: F401
     dashboard,
     dashboard_header,
     dashboard_row,
+    peak_rss_mb,
     prometheus_snapshot,
+    rss_mb,
 )
 from repro.obs.tracing import (  # noqa: F401
     DecisionTrace,

@@ -18,6 +18,30 @@ from typing import IO, Iterable
 
 from repro.obs import windows as obw
 
+
+def rss_mb() -> float:
+    """Current resident-set size in MiB (stdlib-only: /proc on Linux,
+    ``resource`` peak elsewhere — callers sampling per chunk get a flat
+    series exactly when the streamed path is truly bounded-memory)."""
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith("VmRSS:"):
+                    return float(line.split()[1]) / 1024.0
+    except OSError:
+        pass
+    return peak_rss_mb()
+
+
+def peak_rss_mb() -> float:
+    """Process-lifetime peak RSS in MiB (ru_maxrss; kilobytes on Linux)."""
+    import resource
+    import sys
+
+    peak = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    return peak / (1024.0 if sys.platform != "darwin" else 1024.0 * 1024.0)
+
+
 # record key → (prometheus metric name, type, help)
 _PROM_GAUGES = [
     ("p50", "rosella_latency_p50_seconds", "windowed p50 response time"),

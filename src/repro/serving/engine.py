@@ -23,7 +23,14 @@ Key mechanics:
     token (rows are independent under the per-row vmap, so simultaneous
     replay is exactly the sequential schedule), padded to a power-of-two
     step bucket (one compile per bucket, not per prompt-length
-    combination). Chunked prefill is the obvious extension.
+    combination). With ``prefill_chunk=C`` the replay runs CHUNKED:
+    fixed [C, n_slots] pieces through the same scan, so admission cost is
+    O(C) per dispatched chunk — one compiled program total instead of one
+    per power-of-two bucket, and the known blocker for carrying the
+    engine inside the serving scan (a fixed admission shape) is gone.
+    Bit-equal to whole-prompt replay: the scan body passes all-sentinel
+    steps through untouched, so splitting the token-step sequence at
+    chunk boundaries changes nothing.
 """
 from __future__ import annotations
 
@@ -62,13 +69,16 @@ class Slot:
 
 class ContinuousBatchingEngine:
     def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 4,
-                 max_len: int = 128):
+                 max_len: int = 128, prefill_chunk: int | None = None):
         if cfg.family == "encdec":
             raise NotImplementedError("engine drives decoder-only families")
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
+        self.prefill_chunk = prefill_chunk
         self.cache = api.init_cache(cfg, n_slots, max_len)
         self.pos = jnp.zeros((n_slots,), jnp.int32)
         self.last_tok = jnp.zeros((n_slots, 1), jnp.int32)
@@ -144,17 +154,35 @@ class ContinuousBatchingEngine:
             return accept
         P = max(len(p) - 1 for _, p in admitted)
         if P > 0:
-            bucket = 8
-            while bucket < P:
-                bucket <<= 1
+            C = self.prefill_chunk
+            if C is None:
+                # whole-prompt replay, padded to a power-of-two bucket
+                # (one compile per bucket)
+                bucket = 8
+                while bucket < P:
+                    bucket <<= 1
+            else:
+                # chunked prefill: fixed [C, n_slots] replay pieces — the
+                # scan body is identity on all-sentinel steps, so chunk
+                # boundaries (and skipped empty chunks) are bit-inert;
+                # admission cost is O(C) per chunk, independent of P, and
+                # ONE compiled shape serves every prompt length
+                bucket = -(-P // C) * C
             toks = np.full((bucket, self.n_slots), -1, np.int32)
             for i, p in admitted:
                 if len(p) > 1:
                     toks[: len(p) - 1, i] = p[:-1]
-            self.last_tok, self.pos, self.cache = self._admit_replay_multi(
-                self.params, jnp.asarray(toks), self.pos, self.last_tok,
-                self.cache,
-            )
+            step = bucket if C is None else C
+            for s in range(0, bucket, step):
+                piece = toks[s:s + step]
+                if C is not None and not (piece >= 0).any():
+                    continue
+                self.last_tok, self.pos, self.cache = (
+                    self._admit_replay_multi(
+                        self.params, jnp.asarray(piece), self.pos,
+                        self.last_tok, self.cache,
+                    )
+                )
         for i, p in admitted:
             self.last_tok = self.last_tok.at[i, 0].set(int(p[-1]))
             self.active[i] = True

@@ -47,6 +47,7 @@ so parity tests assert both counters are zero.
 from __future__ import annotations
 
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
@@ -651,6 +652,269 @@ def run_simulation_scan(
     )
 
 
+#: Target device-side xs footprint per chunk when ``chunk_turns`` is
+#: auto-sized (64 MiB keeps even fault-column workloads comfortably under
+#: typical HBM/host-RAM budgets while amortizing per-chunk dispatch).
+CHUNK_MAX_BYTES = 64 << 20
+
+
+def auto_chunk_turns(T, k, n, *, churn=False, burst_cap=0, faulty=False,
+                     pend_cap=PEND_CAP, max_bytes=None) -> int:
+    """Heuristic chunk length (turns) for the chunked scan driver.
+
+    Derivation: each turn's xs row costs ``8·(2k + n)`` bytes (times,
+    costs, speeds) plus ``2n + 4·burst_cap`` with membership columns and
+    ``24n`` with fault columns.  The cap is ``max_bytes // bytes_per_turn``
+    (default ``CHUNK_MAX_BYTES`` = 64 MiB of xs per chunk), floored at
+    ``max(64, pend_cap // k)`` so a chunk is never shorter than the
+    in-flight window the pending buffer implies (chunking finer than that
+    would re-dispatch a scan per queue drain for no memory win).  The
+    result is clamped to ``[1, T]`` — small workloads keep compiling as a
+    single chunk, so ``chunk_turns=None`` preserves today's programs
+    bit-for-bit AND compile-for-compile at test scale.
+    """
+    per_turn = 8 * (2 * k + n)
+    if churn:
+        per_turn += 2 * n + 4 * burst_cap
+    if faulty:
+        per_turn += 3 * 8 * n
+    if max_bytes is None:
+        max_bytes = CHUNK_MAX_BYTES
+    cap = int(max_bytes) // max(per_turn, 1)
+    floor = max(64, pend_cap // max(k, 1))
+    return max(1, min(int(T), max(cap, floor))) if T > 0 else 1
+
+
+def _drive_scan(
+    router: rt.RosellaRouter,
+    pool: rt.SimulatedPool,
+    xs_chunks,  # iterable of numpy xs tuples, each (times[t,k], costs[t,k],
+    # speeds[t,n][, active, rejoin, burst][, kill, stall, stall_dur])
+    *,
+    n: int,
+    k: int,
+    churn: bool,
+    burst_cap: int,
+    faulty: bool,
+    rc,  # resolved RecoveryConfig (None when not faulty)
+    fake_cost: float,
+    burst_cost: float,
+    pend_cap: int,
+    comp_cap: int | None,
+    task_cap: int,  # faulty: response-buffer capacity (total tasks the
+    # stream may launch); the ledger closes over the tasks actually seen
+    observe: "obw.ObserveConfig | None",
+    obs_sink,
+    strict_overflow: bool,
+    timing: bool = False,  # record per-chunk wall-clock (gen vs run,
+    # block_until_ready-fenced) + RSS into info["chunks"] — the sustained-
+    # throughput methodology of the load harness
+):
+    """The chunk driver: pull xs chunks from an iterator, thread the DONATED
+    carry device-to-device across chunk boundaries, and close the books.
+
+    This is the shared engine under ``run_workload_scan`` (which feeds it
+    slices of a pre-materialized workload) and ``repro.load.run_stream_scan``
+    (which feeds it lazily generated chunks so the host never holds the
+    full trace).  A scan over T turns is the composition of scans over its
+    chunks, so chunking — however the chunks are produced — is bit-equal
+    to one unchunked scan."""
+    from repro.serving import recovery as rcv
+    from repro.obs import tracing as obt
+
+    if comp_cap is None:
+        # the flush batch can never exceed the pending buffer; the
+        # SERVE_COMP_CAP shape keeps the learner fold identical to the
+        # host loop's serve_step padding at default capacities
+        comp_cap = min(rt.SERVE_COMP_CAP, pend_cap)
+    else:
+        comp_cap = min(int(comp_cap), pend_cap)
+    from jax.experimental import enable_x64
+
+    with enable_x64():
+        carry0 = (
+            jnp.asarray(router.q_view),
+            router.learner,
+            router.arr,
+            jnp.asarray(router.key),
+            jnp.float32(router.last_fake_time),
+            jnp.asarray(pool.free_at, jnp.float64),
+            jnp.full((pend_cap,), jnp.inf, jnp.float64),  # p_done
+            jnp.zeros((pend_cap,), jnp.float64),  # p_start
+            jnp.zeros((pend_cap,), jnp.int32),  # p_rep
+            jnp.zeros((pend_cap,), jnp.int32),  # p_seq
+            jnp.zeros((pend_cap,), bool),  # p_valid
+            jnp.int32(0),  # seq_ctr
+            jnp.int32(0),  # over_flush
+            jnp.int32(0),  # over_pend
+        )
+        if faulty:
+            carry0 = carry0 + (
+                jnp.full((pend_cap,), -1, jnp.int32),  # p_task
+                jnp.zeros((pend_cap,), jnp.float64),  # p_arrv
+                jnp.ones((pend_cap,), jnp.float64),  # p_cost
+                jnp.full((pend_cap,), jnp.inf, jnp.float64),  # p_dead
+                jnp.zeros((pend_cap,), jnp.int32),  # p_att
+                jnp.zeros((pend_cap,), bool),  # p_dup
+                jnp.ones((pend_cap,), bool),  # p_learn
+                jnp.zeros((pend_cap,), bool),  # p_to
+                jnp.zeros((pend_cap,), bool),  # p_retry
+                jnp.full((task_cap + 1,), jnp.inf, jnp.float64),  # resp
+                jnp.zeros((rcv.NCTR,), jnp.int64),  # ctr
+                jnp.float64(0.0),  # max_clean
+                jnp.int32(0),  # turn
+            )
+            run = _build_scan_faulty(
+                n, k, comp_cap, pend_cap,
+                router.policy, 8, router.use_alias, fake_cost,
+                churn, burst_cap, float(burst_cost), rc, observe,
+            )
+        else:
+            run = _build_scan(
+                n, k, comp_cap, pend_cap,
+                router.policy, 8, router.use_alias, fake_cost,
+                churn, burst_cap, float(burst_cost), observe,
+            )
+        if observe is not None:
+            carry0 = carry0 + (obw.init_carry(observe),)
+        carry = carry0
+        resp_l, mu_l = [], []
+        windows: list = []
+
+        def _obs_chunk(rows, flags):
+            new = obw.records_from_rows(observe, rows, flags)
+            windows.extend(new)
+            if obs_sink is not None and new:
+                obs_sink(new)
+
+        turns = 0
+        active_last = None
+        chunks_meta: list = []
+        it = iter(xs_chunks)
+        ci = 0
+        while True:
+            t0 = time.perf_counter() if timing else 0.0
+            try:
+                chunk = next(it)
+            except StopIteration:
+                break
+            t_gen = (time.perf_counter() - t0) if timing else 0.0
+            c_turns = int(np.asarray(chunk[0]).shape[0])
+            if c_turns == 0:
+                continue
+            if faulty and (turns + c_turns) * k > task_cap:
+                raise RuntimeError(
+                    f"stream exceeded task_cap={task_cap}: chunk {ci} would "
+                    f"bring the launched-task count to {(turns + c_turns) * k}"
+                    f" — size task_cap to the stream's total turns × k"
+                )
+            xs = tuple(jnp.asarray(x) for x in chunk)
+            t1 = time.perf_counter() if timing else 0.0
+            with obt.step_annotation("serve_scan_chunk", ci):
+                carry, ys = run(router.lcfg, carry, xs)
+            if timing:
+                jax.block_until_ready((carry, ys))
+                from repro.obs import export as oex
+
+                chunks_meta.append({
+                    "chunk": ci,
+                    "turns": c_turns,
+                    "requests": c_turns * k,
+                    "gen_s": t_gen,
+                    "run_s": time.perf_counter() - t1,
+                    "rss_mb": oex.rss_mb(),
+                })
+            if faulty:
+                if observe is None:
+                    mu_l.append(ys)
+                elif observe.emit_responses:
+                    mu_l.append(ys[0])
+                    _obs_chunk(ys[1], ys[2])
+                else:
+                    _obs_chunk(ys[0], ys[1])
+            else:
+                if observe is None or observe.emit_responses:
+                    resp_l.append(ys[0])
+                    mu_l.append(ys[1])
+                if observe is not None:
+                    _obs_chunk(ys[-2], ys[-1])
+            turns += c_turns
+            if churn:
+                active_last = np.asarray(chunk[3][-1], bool)
+            ci += 1
+        if observe is not None and turns > 0:
+            tail = obw.final_partial_record(observe, carry[-1])
+            if tail is not None:
+                windows.append(tail)
+                if obs_sink is not None:
+                    obs_sink([tail])
+        ledger = None
+        n_tasks = turns * k
+        if faulty:
+            # the response min-fold rides the carry (a task's copies can
+            # complete many turns after its launch); finalize with the
+            # shared numpy epilogue so host and scan close the books
+            # identically
+            validF = np.asarray(carry[10])
+            resp_acc = np.asarray(carry[23])[:n_tasks].copy()
+            ctr = np.asarray(carry[24]).copy()
+            rcv.drain_pending(
+                resp_acc, ctr, np.asarray(carry[6])[validF],
+                np.asarray(carry[14])[validF], np.asarray(carry[15])[validF],
+            )
+            resp, ledger = rcv.build_ledger(
+                resp_acc, ctr, n_tasks, float(carry[25]))
+            mu_trace = (np.concatenate([np.asarray(m) for m in mu_l])
+                        if mu_l else np.zeros((0, n), np.float32))
+        elif resp_l:
+            resp = np.concatenate([np.asarray(r) for r in resp_l]).reshape(-1)
+            mu_trace = np.concatenate([np.asarray(m) for m in mu_l])
+        else:
+            resp = np.empty(0)
+            mu_trace = np.zeros((0, n), np.float32)
+        info = {
+            "turns": turns,
+            "flush_overflow": int(carry[12]),
+            "pend_overflow": int(carry[13]),
+        }
+        if ledger is not None:
+            info["ledger"] = ledger
+        if observe is not None:
+            info["windows"] = windows
+        if timing:
+            info["chunks"] = chunks_meta
+        # advance the host-side objects to the final state, as the host
+        # loop would have left them
+        router.q_view = jnp.asarray(np.asarray(carry[0]))
+        router.learner = jax.tree.map(
+            lambda x: jnp.asarray(np.asarray(x)), carry[1]
+        )
+        router.arr = jax.tree.map(lambda x: jnp.asarray(np.asarray(x)), carry[2])
+        router.key = jnp.asarray(np.asarray(carry[3]))
+        router.last_fake_time = float(carry[4])
+        router.mu_front = router.learner.mu_hat
+        router._mu_pending = None
+        pool.free_at = np.asarray(carry[5])
+    if churn and active_last is not None:
+        router.active = jnp.asarray(active_last, bool)
+    if router.use_alias:
+        import repro.core.dispatch as dsp
+
+        router.table_front = dsp.build_alias_table(
+            router.mu_front, router.active
+        )
+    if strict_overflow and (info["flush_overflow"] or info["pend_overflow"]):
+        raise RuntimeError(
+            f"scan capacities overflowed (flush_overflow="
+            f"{info['flush_overflow']}, pend_overflow="
+            f"{info['pend_overflow']}): results silently dropped work. "
+            f"Raise pend_cap (current {pend_cap}; pend_cap=None auto-sizes "
+            f"to the total-submission bound) or pass strict_overflow=False "
+            f"to inspect the counters."
+        )
+    return resp, mu_trace, info
+
+
 def run_workload_scan(
     router: rt.RosellaRouter,
     pool: rt.SimulatedPool,
@@ -685,6 +949,20 @@ def run_workload_scan(
     # run at a bounded xs footprint. Bit-identical to one unchunked scan
     # (a scan over T is the composition of scans over its chunks). The
     # tail chunk compiles its own program when T % chunk_turns != 0.
+    # None → auto-sized by ``auto_chunk_turns``: the largest chunk whose
+    # xs rows fit ``chunk_max_bytes`` (default 64 MiB), floored at
+    # max(64, pend_cap // k) turns so chunks never undercut the in-flight
+    # window; small workloads resolve to a single chunk, i.e. exactly the
+    # old whole-horizon program.
+    chunk_max_bytes: int | None = None,  # auto-sizing memory hint — the
+    # per-chunk xs byte budget fed to ``auto_chunk_turns`` (ignored when
+    # chunk_turns is given)
+    comp_cap: int | None = None,  # per-turn completion-flush capacity.
+    # None → min(SERVE_COMP_CAP, pend_cap), the host loop's padding (keeps
+    # the learner fold identical at default capacities). Raise it for
+    # large arrival batches (k ≳ 256) or post-burst drains, where > 256
+    # completions can come due in one turn and would count as
+    # flush_overflow. Absent overflow the cap does not change results.
     observe: "obw.ObserveConfig | None" = None,  # in-scan telemetry: fold
     # windowed metrics in-carry and return the window stream in
     # info["windows"] (records, chunk-continuous). Telemetry is read-only
@@ -754,188 +1032,53 @@ def run_workload_scan(
         pend_cap = PEND_CAP
         while pend_cap < need and pend_cap < 65536:
             pend_cap <<= 1
-    n_tasks = T * k
 
-    from jax.experimental import enable_x64
-
-    with enable_x64():
-        xs_np = (
-            np.asarray(times_np, np.float64),
-            np.asarray(costs_np, np.float64),
-            np.asarray(speeds_np, np.float64),
-        )
-        if churn:
-            rej = (
-                rejoin_np if rejoin_np is not None
-                else np.zeros((T, n), bool)
-            )
-            bw = (
-                burst_np if burst_np is not None
-                else np.zeros((T, 0), np.int32)
-            )
-            xs_np = xs_np + (
-                np.asarray(active_np, bool),
-                np.asarray(rej, bool),
-                np.asarray(bw, np.int32),
-            )
-        if faulty:
-            xs_np = xs_np + (
-                np.asarray(kill_np, np.float64) if kill_np is not None
-                else np.full((T, n), np.inf),
-                np.asarray(stall_np, np.float64) if stall_np is not None
-                else np.full((T, n), np.inf),
-                np.asarray(stall_dur_np, np.float64)
-                if stall_dur_np is not None else np.zeros((T, n)),
-            )
-        carry0 = (
-            jnp.asarray(router.q_view),
-            router.learner,
-            router.arr,
-            jnp.asarray(router.key),
-            jnp.float32(router.last_fake_time),
-            jnp.asarray(pool.free_at, jnp.float64),
-            jnp.full((pend_cap,), jnp.inf, jnp.float64),  # p_done
-            jnp.zeros((pend_cap,), jnp.float64),  # p_start
-            jnp.zeros((pend_cap,), jnp.int32),  # p_rep
-            jnp.zeros((pend_cap,), jnp.int32),  # p_seq
-            jnp.zeros((pend_cap,), bool),  # p_valid
-            jnp.int32(0),  # seq_ctr
-            jnp.int32(0),  # over_flush
-            jnp.int32(0),  # over_pend
-        )
-        if faulty:
-            carry0 = carry0 + (
-                jnp.full((pend_cap,), -1, jnp.int32),  # p_task
-                jnp.zeros((pend_cap,), jnp.float64),  # p_arrv
-                jnp.ones((pend_cap,), jnp.float64),  # p_cost
-                jnp.full((pend_cap,), jnp.inf, jnp.float64),  # p_dead
-                jnp.zeros((pend_cap,), jnp.int32),  # p_att
-                jnp.zeros((pend_cap,), bool),  # p_dup
-                jnp.ones((pend_cap,), bool),  # p_learn
-                jnp.zeros((pend_cap,), bool),  # p_to
-                jnp.zeros((pend_cap,), bool),  # p_retry
-                jnp.full((n_tasks + 1,), jnp.inf, jnp.float64),  # resp
-                jnp.zeros((rcv.NCTR,), jnp.int64),  # ctr
-                jnp.float64(0.0),  # max_clean
-                jnp.int32(0),  # turn
-            )
-            run = _build_scan_faulty(
-                n, k, min(rt.SERVE_COMP_CAP, pend_cap), pend_cap,
-                router.policy, 8, router.use_alias, fake_cost,
-                churn, burst_cap, float(burst_cost), rc, observe,
-            )
-        else:
-            run = _build_scan(
-                # the flush batch can never exceed the pending buffer; the
-                # SERVE_COMP_CAP shape keeps the learner fold identical to
-                # the host loop's serve_step padding at default capacities
-                n, k, min(rt.SERVE_COMP_CAP, pend_cap), pend_cap,
-                router.policy, 8, router.use_alias, fake_cost,
-                churn, burst_cap, float(burst_cost), observe,
-            )
-        if observe is not None:
-            carry0 = carry0 + (obw.init_carry(observe),)
-        step = T if chunk_turns is None else max(int(chunk_turns), 1)
-        carry = carry0
-        resp_l, mu_l = [], []
-        windows: list = []
-
-        def _obs_chunk(rows, flags):
-            new = obw.records_from_rows(observe, rows, flags)
-            windows.extend(new)
-            if obs_sink is not None and new:
-                obs_sink(new)
-
-        from repro.obs import tracing as obt
-
-        for ci, s in enumerate(range(0, T, step)):
-            xs = tuple(
-                jnp.asarray(x[s:s + step]) for x in xs_np
-            )
-            with obt.step_annotation("serve_scan_chunk", ci):
-                carry, ys = run(router.lcfg, carry, xs)
-            if faulty:
-                if observe is None:
-                    mu_l.append(ys)
-                elif observe.emit_responses:
-                    mu_l.append(ys[0])
-                    _obs_chunk(ys[1], ys[2])
-                else:
-                    _obs_chunk(ys[0], ys[1])
-            else:
-                if observe is None or observe.emit_responses:
-                    resp_l.append(ys[0])
-                    mu_l.append(ys[1])
-                if observe is not None:
-                    _obs_chunk(ys[-2], ys[-1])
-        if observe is not None and T > 0:
-            tail = obw.final_partial_record(observe, carry[-1])
-            if tail is not None:
-                windows.append(tail)
-                if obs_sink is not None:
-                    obs_sink([tail])
-        ledger = None
-        if faulty:
-            # the response min-fold rides the carry (a task's copies can
-            # complete many turns after its launch); finalize with the
-            # shared numpy epilogue so host and scan close the books
-            # identically
-            validF = np.asarray(carry[10])
-            resp_acc = np.asarray(carry[23])[:n_tasks].copy()
-            ctr = np.asarray(carry[24]).copy()
-            rcv.drain_pending(
-                resp_acc, ctr, np.asarray(carry[6])[validF],
-                np.asarray(carry[14])[validF], np.asarray(carry[15])[validF],
-            )
-            resp, ledger = rcv.build_ledger(
-                resp_acc, ctr, n_tasks, float(carry[25]))
-            mu_trace = (np.concatenate([np.asarray(m) for m in mu_l])
-                        if mu_l else np.zeros((0, n), np.float32))
-        elif resp_l:
-            resp = np.concatenate([np.asarray(r) for r in resp_l]).reshape(-1)
-            mu_trace = np.concatenate([np.asarray(m) for m in mu_l])
-        else:
-            resp = np.empty(0)
-            mu_trace = np.zeros((0, n), np.float32)
-        info = {
-            "turns": T,
-            "flush_overflow": int(carry[12]),
-            "pend_overflow": int(carry[13]),
-        }
-        if ledger is not None:
-            info["ledger"] = ledger
-        if observe is not None:
-            info["windows"] = windows
-        # advance the host-side objects to the final state, as the host
-        # loop would have left them
-        router.q_view = jnp.asarray(np.asarray(carry[0]))
-        router.learner = jax.tree.map(
-            lambda x: jnp.asarray(np.asarray(x)), carry[1]
-        )
-        router.arr = jax.tree.map(lambda x: jnp.asarray(np.asarray(x)), carry[2])
-        router.key = jnp.asarray(np.asarray(carry[3]))
-        router.last_fake_time = float(carry[4])
-        router.mu_front = router.learner.mu_hat
-        router._mu_pending = None
-        pool.free_at = np.asarray(carry[5])
+    xs_np = (
+        np.asarray(times_np, np.float64),
+        np.asarray(costs_np, np.float64),
+        np.asarray(speeds_np, np.float64),
+    )
     if churn:
-        router.active = jnp.asarray(active_np[-1], bool)
-    if router.use_alias:
-        import repro.core.dispatch as dsp
+        rej = (
+            rejoin_np if rejoin_np is not None
+            else np.zeros((T, n), bool)
+        )
+        bw = (
+            burst_np if burst_np is not None
+            else np.zeros((T, 0), np.int32)
+        )
+        xs_np = xs_np + (
+            np.asarray(active_np, bool),
+            np.asarray(rej, bool),
+            np.asarray(bw, np.int32),
+        )
+    if faulty:
+        xs_np = xs_np + (
+            np.asarray(kill_np, np.float64) if kill_np is not None
+            else np.full((T, n), np.inf),
+            np.asarray(stall_np, np.float64) if stall_np is not None
+            else np.full((T, n), np.inf),
+            np.asarray(stall_dur_np, np.float64)
+            if stall_dur_np is not None else np.zeros((T, n)),
+        )
+    if chunk_turns is None:
+        chunk_turns = auto_chunk_turns(
+            T, k, n, churn=churn, burst_cap=burst_cap, faulty=faulty,
+            pend_cap=pend_cap, max_bytes=chunk_max_bytes,
+        )
+    step = max(int(chunk_turns), 1)
 
-        router.table_front = dsp.build_alias_table(
-            router.mu_front, router.active
-        )
-    if strict_overflow and (info["flush_overflow"] or info["pend_overflow"]):
-        raise RuntimeError(
-            f"scan capacities overflowed (flush_overflow="
-            f"{info['flush_overflow']}, pend_overflow="
-            f"{info['pend_overflow']}): results silently dropped work. "
-            f"Raise pend_cap (current {pend_cap}; pend_cap=None auto-sizes "
-            f"to the total-submission bound) or pass strict_overflow=False "
-            f"to inspect the counters."
-        )
-    return resp, mu_trace, info
+    def _slices():
+        for s in range(0, T, step):
+            yield tuple(x[s:s + step] for x in xs_np)
+
+    return _drive_scan(
+        router, pool, _slices(), n=n, k=k, churn=churn, burst_cap=burst_cap,
+        faulty=faulty, rc=rc, fake_cost=fake_cost,
+        burst_cost=float(burst_cost), pend_cap=pend_cap, comp_cap=comp_cap,
+        task_cap=T * k, observe=observe, obs_sink=obs_sink,
+        strict_overflow=strict_overflow,
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -105,6 +105,84 @@ def test_engine_batch_admission_matches_sequential():
     assert results[3] == _sequential_generate(cfg, params, list(prompts[3]), n_new)
 
 
+def _traced_engine(cfg, params, shapes, **kw):
+    """Engine whose admission-replay dispatch shapes are recorded — the
+    chunked-prefill cost model is 'you pay per dispatched piece shape'."""
+    eng = ContinuousBatchingEngine(cfg, params, **kw)
+    orig = eng._admit_replay_multi
+    eng._admit_replay_multi = (
+        lambda *a: (shapes.append(int(a[1].shape[0])) or True) and orig(*a)
+    )
+    return eng
+
+
+def test_engine_chunked_prefill_matches_whole_prompt():
+    """prefill_chunk=C replays admission in fixed [C, n_slots] pieces; the
+    decoded outputs are bit-equal to whole-prompt replay (the scan body is
+    identity on all-sentinel steps, so splitting is inert)."""
+    cfg = _cfg()
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(3)
+    prompts = [rng.randint(1, cfg.vocab, size=ln) for ln in (9, 17, 4)]
+    n_new = 4
+
+    outs, shapes = {}, {}
+    for C in (None, 8):
+        seen: list = []
+        eng = _traced_engine(cfg, params, seen, n_slots=3, max_len=64,
+                             prefill_chunk=C)
+        assert eng.try_admit_batch(
+            [(rid, p, n_new) for rid, p in enumerate(prompts)]
+        ) == [True] * 3
+        results = {}
+        for _ in range(n_new + 2):
+            for rid, toks in eng.step():
+                results[rid] = toks
+        outs[C], shapes[C] = results, seen
+    # P = 16 token steps: one 16-step bucket vs two 8-step chunks
+    assert shapes[None] == [16]
+    assert shapes[8] == [8, 8]
+    assert outs[None] == outs[8]
+    for rid, p in enumerate(prompts):
+        assert outs[8][rid] == _sequential_generate(cfg, params, list(p), n_new)
+
+
+def test_engine_chunked_prefill_cost_scales_with_chunk():
+    """Admission dispatch shape under prefill_chunk is the CHUNK length,
+    independent of prompt length — ONE compiled replay program serves
+    every prompt; legacy bucketing compiles one per power-of-two bucket
+    and its dispatch cost is O(prompt length)."""
+    cfg = _cfg()
+    params = api.init_params(cfg, jax.random.PRNGKey(4))
+    rng = np.random.RandomState(4)
+    prompts = {rid: rng.randint(1, cfg.vocab, size=ln)
+               for rid, ln in enumerate((21, 71))}
+
+    shapes = {}
+    for C in (None, 16):
+        seen: list = []
+        eng = _traced_engine(cfg, params, seen, n_slots=2, max_len=128,
+                             prefill_chunk=C)
+        for rid, p in prompts.items():
+            assert eng.try_admit(rid, p, 1)
+            eng.step()
+        shapes[C] = seen
+    # chunked: every dispatch is exactly C — ⌈20/16⌉ + ⌈70/16⌉ pieces
+    assert set(shapes[16]) == {16}
+    assert len(shapes[16]) == 2 + 5
+    # legacy: per-length power-of-two buckets (a new compile each)
+    assert shapes[None] == [32, 128]
+
+
+def test_engine_prefill_chunk_validates():
+    cfg = _cfg()
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    import pytest
+
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        ContinuousBatchingEngine(cfg, params, prefill_chunk=0)
+
+
 def test_engine_slot_reuse_and_capacity():
     cfg = _cfg()
     params = api.init_params(cfg, jax.random.PRNGKey(0))

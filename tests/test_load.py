@@ -1,0 +1,406 @@
+"""Streaming load-harness tests (repro.load + the chunked scan driver).
+
+The PR's acceptance gates: chunked streaming is BIT-EQUAL to the
+monolithic ``run_workload_scan`` on small horizons (responses, μ̂ trace,
+fault ledger, telemetry windows) — including a chunk boundary landing
+exactly on a membership / capacity event turn; window records stay
+gap-free and float-identical when ``chunk_turns`` is coprime with
+``window_turns``; ``TraceArrivals.from_csv`` streams large files in
+bounded chunks and rejects malformed / non-monotone rows loudly with the
+offending row named; ``auto_chunk_turns`` sizing is pinned; and the
+synthesized cluster-trace generators are rate- and cost-calibrated.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import pytest
+
+from repro import env, obs
+from repro.core import metrics as M
+from repro.env import processes as prc
+from repro.env.scenario import Scenario
+from repro.load import (
+    AzureLikeTrace,
+    GoogleLikeTrace,
+    ScenarioStream,
+    run_stream_scan,
+    stream_arrivals,
+)
+from repro.serving import router as rt
+from repro.serving import scanloop
+
+OCFG = obs.ObserveConfig(window_turns=8)
+
+
+def _router_pool(scn, seed=0):
+    speeds = np.asarray(scn.speeds, float)
+    router = rt.RosellaRouter(
+        scn.n, mu_bar=float(speeds.sum()), policy="ppot_sq2", seed=seed,
+        async_mu=False, use_alias=True, c_window=10.0,
+    )
+    return router, rt.SimulatedPool(speeds)
+
+
+def _pad_burst(burst, turns, width):
+    """Pad a monolithic burst array to the stream's FIXED width (-1 slots
+    are inert in the scan body, so this changes program shape only)."""
+    out = np.full((turns, width), -1, np.int32)
+    if burst is not None:
+        out[:, : burst.shape[1]] = burst
+    return out
+
+
+def _mono(scn, wl, *, seed=0, burst_pad=None, observe=None, recovery=None,
+          **kw):
+    router, pool = _router_pool(scn, seed)
+    burst = wl.burst
+    if burst_pad is not None:
+        burst = _pad_burst(burst, wl.turns, burst_pad)
+    resp, mu, info = scanloop.run_workload_scan(
+        router, pool, wl.times, wl.costs, wl.speeds,
+        active_np=wl.active, rejoin_np=wl.rejoin, burst_np=burst,
+        fake_cost=scn.request_cost * 0.25, kill_np=wl.kill_at,
+        stall_np=wl.stall_at, stall_dur_np=wl.stall_dur,
+        recovery=recovery, observe=observe, **kw,
+    )
+    return resp, mu, info
+
+
+def _assert_windows_equal(wa, wb):
+    assert len(wa) == len(wb)
+    for a, b in zip(wa, wb):
+        assert set(a) == set(b)
+        for k in a:
+            va, vb = a[k], b[k]
+            if isinstance(va, np.ndarray) or isinstance(vb, np.ndarray):
+                np.testing.assert_array_equal(np.asarray(va),
+                                              np.asarray(vb))
+            elif (isinstance(va, float) and isinstance(vb, float)
+                    and math.isnan(va) and math.isnan(vb)):
+                continue
+            else:
+                assert va == vb, (k, va, vb)
+
+
+# ---------------------------------------------------------------------------
+# chunked streaming == monolithic (bit parity)
+# ---------------------------------------------------------------------------
+
+
+def test_stream_parity_churn_boundary_on_membership_event():
+    """ScenarioStream chunks with a chunk boundary EXACTLY on the first
+    rejoin turn: responses, μ̂ trace and telemetry windows bit-equal to
+    the monolithic program (burst padded to the stream's fixed width)."""
+    scn = env.make("churn", horizon=360.0)
+    wl = scn.compile_serving(seed=0, arrival_batch=8)
+    ev = int(np.nonzero(wl.rejoin.any(axis=1))[0][0])
+    assert ev > 0, "scenario must have a rejoin inside the horizon"
+
+    stream = ScenarioStream(scn, seed=0, arrival_batch=8)
+    router, pool = _router_pool(scn)
+    r1, m1, i1 = run_stream_scan(
+        router, pool, stream, chunk_turns=ev,
+        fake_cost=scn.request_cost * 0.25, observe=OCFG, timing=True,
+    )
+    r0, m0, i0 = _mono(scn, wl, burst_pad=stream.burst_cap, observe=OCFG,
+                       pend_cap=scanloop.PEND_CAP)
+    np.testing.assert_array_equal(np.asarray(r0), np.asarray(r1))
+    np.testing.assert_array_equal(np.asarray(m0), np.asarray(m1))
+    _assert_windows_equal(i0["windows"], i1["windows"])
+    assert i1["turns"] == wl.turns
+    assert len(i1["chunks"]) == math.ceil(wl.turns / ev)
+    assert i1["flush_overflow"] == 0 and i1["pend_overflow"] == 0
+
+
+def test_stream_parity_faulty_ledger():
+    """Fault streams (crash_storm): the task-indexed ledger, μ̂ trace and
+    loss accounting survive chunk boundaries bit-for-bit."""
+    scn = env.make("crash_storm", horizon=240.0)
+    wl = scn.compile_serving(seed=0, arrival_batch=8)
+    task_cap = wl.turns * 8
+
+    stream = ScenarioStream(scn, seed=0, arrival_batch=8)
+    router, pool = _router_pool(scn)
+    r1, m1, i1 = run_stream_scan(
+        router, pool, stream, chunk_turns=13,
+        fake_cost=scn.request_cost * 0.25, task_cap=task_cap,
+    )
+    r0, m0, i0 = _mono(scn, wl, burst_pad=stream.burst_cap,
+                       pend_cap=scanloop.PEND_CAP)
+    np.testing.assert_array_equal(np.asarray(r0), np.asarray(r1))
+    np.testing.assert_array_equal(np.asarray(m0), np.asarray(m1))
+    assert i0["ledger"] == i1["ledger"]
+    assert i1["ledger"]["conserved"]
+
+
+def test_iter_chunks_parity_boundary_on_capacity_event():
+    """Materialized-workload chunking (``ServingWorkload.iter_chunks``)
+    with the boundary exactly on the co-tenant shock turn."""
+    scn = env.make("cotenant_shock")
+    wl = scn.compile_serving(seed=0, arrival_batch=8)
+    ev = int(np.searchsorted(wl.times[:, -1], 120.0, side="left"))
+    assert 0 < ev < wl.turns
+
+    router, pool = _router_pool(scn)
+    r1, m1, i1 = run_stream_scan(
+        router, pool, wl.iter_chunks(ev),
+        fake_cost=scn.request_cost * 0.25,
+    )
+    r0, m0, _ = _mono(scn, wl, pend_cap=scanloop.PEND_CAP)
+    np.testing.assert_array_equal(np.asarray(r0), np.asarray(r1))
+    np.testing.assert_array_equal(np.asarray(m0), np.asarray(m1))
+    assert i1["turns"] == wl.turns
+
+
+def test_stream_chunks_concat_equals_compile_serving():
+    """The CONCATENATION of ScenarioStream chunks is bit-identical to the
+    monolithic ``compile_serving`` arrays — same RandomState call order,
+    same event→turn assignment — independent of chunk_turns."""
+    for name, kw in (("churn", dict(horizon=360.0)),
+                     ("crash_storm", dict(horizon=240.0)),
+                     ("flash_crowd", dict())):
+        scn = env.make(name, **kw)
+        wl = scn.compile_serving(seed=0, arrival_batch=8)
+        for step in (7, wl.turns):
+            stream = ScenarioStream(scn, seed=0, arrival_batch=8)
+            parts = list(stream.chunks(step))
+            cat = np.concatenate([p.times for p in parts])
+            np.testing.assert_array_equal(cat, wl.times)
+            np.testing.assert_array_equal(
+                np.concatenate([p.costs for p in parts]), wl.costs)
+            np.testing.assert_array_equal(
+                np.concatenate([p.speeds for p in parts]), wl.speeds)
+            if wl.active is not None:
+                np.testing.assert_array_equal(
+                    np.concatenate([p.active for p in parts]), wl.active)
+                np.testing.assert_array_equal(
+                    np.concatenate([p.rejoin for p in parts]), wl.rejoin)
+            if wl.kill_at is not None:
+                np.testing.assert_array_equal(
+                    np.concatenate([p.kill_at for p in parts]), wl.kill_at)
+                np.testing.assert_array_equal(
+                    np.concatenate([p.stall_at for p in parts]),
+                    wl.stall_at)
+
+
+# ---------------------------------------------------------------------------
+# chunk × window boundary invariants (telemetry continuity)
+# ---------------------------------------------------------------------------
+
+
+def test_windows_gap_free_with_coprime_chunking():
+    """chunk_turns coprime with window_turns AND a chunk boundary on a
+    membership event: the window stream is float-identical to the
+    monolithic run and gap-free (consecutive ids, abutting time ranges,
+    turns summing to T, only the final record partial)."""
+    scn = env.make("churn", horizon=360.0)
+    wl = scn.compile_serving(seed=0, arrival_batch=8)
+    ev = int(np.nonzero(wl.rejoin.any(axis=1))[0][0])
+    wt = next(w for w in (7, 9, 11, 13, 5) if math.gcd(ev, w) == 1)
+    cfg = obs.ObserveConfig(window_turns=wt)
+
+    stream = ScenarioStream(scn, seed=0, arrival_batch=8)
+    router, pool = _router_pool(scn)
+    _, _, i1 = run_stream_scan(
+        router, pool, stream, chunk_turns=ev,
+        fake_cost=scn.request_cost * 0.25, observe=cfg,
+    )
+    _, _, i0 = _mono(scn, wl, burst_pad=stream.burst_cap, observe=cfg,
+                     pend_cap=scanloop.PEND_CAP)
+    w = i1["windows"]
+    _assert_windows_equal(i0["windows"], w)
+    assert [r["window"] for r in w] == list(range(len(w)))
+    assert all(not r["partial"] for r in w[:-1])
+    assert sum(r["turns"] for r in w) == wl.turns
+    for a, b in zip(w, w[1:]):
+        assert b["t_start"] == a["t_end"]
+
+
+# ---------------------------------------------------------------------------
+# TraceArrivals.from_csv: chunked streaming + loud validation
+# ---------------------------------------------------------------------------
+
+
+def test_from_csv_malformed_names_row(tmp_path):
+    p = tmp_path / "bad.csv"
+    p.write_text("0.5,1.0\n0.75,oops\n1.0,1.0\n")
+    with pytest.raises(ValueError, match="malformed CSV near row 0"):
+        prc.TraceArrivals.from_csv(str(p))
+
+
+def test_from_csv_non_monotone_names_row(tmp_path):
+    p = tmp_path / "bad.csv"
+    p.write_text("0.5,1.0\n0.75,1.0\n0.6,1.0\n0.9,1.0\n")
+    with pytest.raises(ValueError,
+                       match="non-monotone timestamp at row 2"):
+        prc.TraceArrivals.from_csv(str(p))
+
+
+def test_from_csv_non_monotone_across_chunk_boundary(tmp_path):
+    """The regression the chunked reader invites: a violation whose two
+    rows land in DIFFERENT read chunks must still be caught."""
+    p = tmp_path / "bad.csv"
+    t = np.arange(10, dtype=float)
+    t[4] = 2.5  # row 4 < row 3, with chunk_rows=4 splitting them
+    p.write_text("".join(f"{x:.3f}\n" for x in t))
+    with pytest.raises(ValueError,
+                       match="non-monotone timestamp at row 4"):
+        prc.TraceArrivals.from_csv(str(p), chunk_rows=4)
+
+
+def test_from_csv_streams_million_rows(tmp_path):
+    """A 1M-row trace parses in bounded chunks (forced small chunk_rows ⇒
+    many reads) with values intact end to end."""
+    n = 1_000_000
+    t = np.round(np.cumsum(np.full(n, 0.001)), 6)
+    p = tmp_path / "big.csv"
+    with open(p, "w") as f:
+        f.writelines(f"{x:.6f}\n" for x in t)
+    tr = prc.TraceArrivals.from_csv(str(p), chunk_rows=131_072)
+    times = np.asarray(tr.times)
+    assert times.shape == (n,)
+    assert times[0] == pytest.approx(0.001)
+    assert times[-1] == pytest.approx(1000.0)
+    assert tr.costs is None
+    assert np.all(np.diff(times) >= 0)
+
+
+def test_from_csv_costs_roundtrip(tmp_path):
+    p = tmp_path / "t.csv"
+    p.write_text("0.5,2.0\n1.5,0.5\n2.0,1.0\n")
+    tr = prc.TraceArrivals.from_csv(str(p))
+    np.testing.assert_allclose(tr.times, [0.5, 1.5, 2.0])
+    np.testing.assert_allclose(tr.costs, [2.0, 0.5, 1.0])
+
+
+# ---------------------------------------------------------------------------
+# auto chunk sizing
+# ---------------------------------------------------------------------------
+
+
+def test_auto_chunk_turns_pins():
+    A = scanloop.auto_chunk_turns
+    # small workloads resolve to ONE chunk — chunk_turns=None keeps the
+    # historical whole-horizon program at test scale
+    assert A(100, 8, 5) == 100
+    assert A(0, 8, 5) == 1
+    # 64 MiB default budget: plain xs rows cost 8·(2k+n) bytes
+    assert A(1_000_000, 128, 64) == (64 << 20) // (8 * (2 * 128 + 64))
+    # membership (+2n+4·burst_cap) and fault (+24n) columns shrink it
+    assert A(1_000_000, 128, 64, churn=True, burst_cap=256,
+             faulty=True) == (64 << 20) // (2560 + 128 + 1024 + 1536)
+    # explicit byte hint
+    assert A(10 ** 6, 128, 64, max_bytes=1 << 20) == (1 << 20) // 2560
+    # the pend_cap floor: never chunk finer than the in-flight window
+    assert A(10 ** 6, 128, 64, pend_cap=65536, max_bytes=0) == 512
+    assert A(10 ** 6, 8, 5, max_bytes=0) == 128  # PEND_CAP // 8
+
+
+# ---------------------------------------------------------------------------
+# synthesized trace generators
+# ---------------------------------------------------------------------------
+
+
+def _rate_integral(rate: prc.PiecewiseRate, horizon: float) -> float:
+    bp = np.append(np.asarray(rate.bp, float), horizon)
+    val = np.asarray(rate.val, float)
+    widths = np.clip(np.diff(bp), 0.0, None)[: len(val)]
+    return float((val * widths).sum())
+
+
+@pytest.mark.parametrize("tr", [
+    AzureLikeTrace(period=600.0, depth=0.3, dwell=(60.0, 10.0)),
+    GoogleLikeTrace(spike_rate=1 / 120.0),
+])
+def test_generator_rate_calibration(tr):
+    """Realized arrival counts match the compiled rate's integral (exact
+    thinning ⇒ Poisson with that mean; 5σ tolerance)."""
+    rng = np.random.RandomState(0)
+    rate = tr.compile_rate(5.0, 800.0, rng)
+    times = np.concatenate(list(stream_arrivals(rate, 800.0, rng)))
+    mean = _rate_integral(rate, 800.0)
+    assert abs(times.size - mean) < 5.0 * math.sqrt(mean)
+    assert np.all(np.diff(times) > 0) and times[-1] < 800.0
+
+
+@pytest.mark.parametrize("tr", [AzureLikeTrace(), GoogleLikeTrace()])
+def test_generator_costs_mean_one(tr):
+    """Durations are normalized to mean 1 so λ/μ̄ utilization math holds."""
+    rng = np.random.RandomState(1)
+    c = tr.draw_costs(rng, 200_000)
+    assert c.min() > 0
+    assert abs(c.mean() - 1.0) < 0.05
+
+
+def test_compile_serving_refuses_stream_arrivals():
+    scn = Scenario(name="s", speeds=(1.0, 1.0), rate=3.0, horizon=50.0,
+                   arrivals=AzureLikeTrace())
+    with pytest.raises(ValueError, match="ScenarioStream"):
+        scn.compile_serving(seed=0, arrival_batch=4)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end stream-only run + whole-horizon reports
+# ---------------------------------------------------------------------------
+
+
+def test_stream_only_end_to_end_bounded():
+    """A generated-trace scenario runs end to end in stream-only telemetry
+    mode: no per-request ys, gap-free windows, per-chunk timing records,
+    and the whole-horizon calibration/sustained reports compute."""
+    scn = Scenario(
+        name="mini_azure", speeds=(2.0, 1.0, 1.0, 0.5), rate=4.0,
+        horizon=300.0,
+        arrivals=AzureLikeTrace(period=120.0, depth=0.3, dwell=(30.0, 8.0),
+                                cost_sigma=1.0),
+    )
+    router, pool = _router_pool(scn)
+    stream = ScenarioStream(scn, seed=0, arrival_batch=8)
+    cfg = obs.ObserveConfig(window_turns=8, emit_responses=False)
+    resp, mu, info = run_stream_scan(
+        router, pool, stream, chunk_turns=16,
+        fake_cost=scn.request_cost * 0.25, observe=cfg, timing=True,
+    )
+    assert np.asarray(resp).size == 0  # stream-only: responses never land
+    assert info["turns"] > 32
+    assert len(info["chunks"]) == math.ceil(info["turns"] / 16)
+    for c in info["chunks"]:
+        assert c["requests"] == c["turns"] * 8
+        assert c["run_s"] > 0 and c["rss_mb"] > 0
+    w = info["windows"]
+    assert sum(r["turns"] for r in w) == info["turns"]
+
+    rep = M.calibration_report(cfg, w, warmup_windows=1)
+    assert rep["requests"] == info["turns"] * 8
+    assert rep["completed"] > 0
+    assert rep["p50"] > 0 and rep["p999"] >= rep["p99"] >= rep["p50"]
+    assert 0.2 < rep["lam_calibration"]["mean"] < 5.0
+
+    common = pytest.importorskip("benchmarks.common")
+    s = common.sustained_series(info["chunks"], warmup=1)
+    assert s["requests_total"] == info["turns"] * 8
+    assert s["n_chunks"] == len(info["chunks"])
+    assert len(s["decs_series"]) == s["n_chunks"]
+    assert s["decs_sustained"] > 0
+    # series entries are rounded to 0.1 MB for the artifact; round the
+    # peak the same way so the comparison is immune to round-up ties
+    assert round(s["rss_mb_peak"], 1) >= s["rss_mb_series"][-1]
+
+
+def test_run_stream_scan_requires_task_cap_for_faults():
+    scn = env.make("crash_storm", horizon=120.0)
+    router, pool = _router_pool(scn)
+    with pytest.raises(ValueError, match="task_cap"):
+        run_stream_scan(router, pool,
+                        ScenarioStream(scn, seed=0, arrival_batch=8),
+                        chunk_turns=8)
+
+
+def test_run_stream_scan_requires_chunk_turns_for_streams():
+    scn = env.make("null")
+    router, pool = _router_pool(scn)
+    with pytest.raises(ValueError, match="chunk_turns"):
+        run_stream_scan(router, pool, ScenarioStream(scn, seed=0,
+                                                     arrival_batch=8))
