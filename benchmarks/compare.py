@@ -1,0 +1,250 @@
+"""Bench-trajectory diff: compare the working tree's BENCH_*.json
+artifacts (and gitignored BENCH_*_smoke.json smokes) against the
+committed records, key by key.
+
+Every benchmark in this repo writes through the shared
+``benchmarks.common.write_bench`` envelope, so all artifacts share a
+uniform shape: payload keys at the top level plus ``schema_version``,
+``provenance`` and either ``smoke: true`` or a ``smoke_reference``
+section.  That uniformity is what makes a generic differ possible —
+this tool strips the envelope, flattens both sides to dotted numeric
+leaf paths, and reports the relative deltas:
+
+  * full artifacts diff against ``git show <ref>:BENCH_<stem>.json``
+    (default ref HEAD) or against the same filename under ``--baseline
+    DIR``;
+  * smoke artifacts diff against the ``smoke_reference`` section of
+    the committed full artifact, the same join the ci.sh heredocs do
+    one metric at a time.
+
+The report is advisory: keys whose |relative delta| exceeds
+``--threshold`` (default 20%) are flagged, added/removed keys are
+listed, and the exit code is 0 regardless — unless ``--strict`` is
+passed (then flagged regressions fail).  ci.sh runs it non-gating
+after the smoke benchmarks so every perf trajectory gets one unified
+regression report instead of a per-bench heredoc.
+
+Run:  PYTHONPATH=src:. python benchmarks/compare.py [--threshold 0.2]
+      python benchmarks/compare.py --baseline /path/to/old/checkout
+      python benchmarks/compare.py --only detect,loadtest --top 10
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import math
+import os
+import subprocess
+import sys
+
+#: envelope keys added by write_bench — never part of the payload diff
+ENVELOPE_KEYS = {"schema_version", "provenance", "smoke", "smoke_reference"}
+
+#: payload keys that are volatile by construction (timings of the bench
+#: process itself, free-text) — skipped so the report stays about the
+#: measured system, not the harness
+SKIP_LEAVES = {"wall_s", "elapsed_s", "note", "description", "timestamp"}
+
+
+def strip_envelope(doc: dict) -> dict:
+    return {k: v for k, v in doc.items() if k not in ENVELOPE_KEYS}
+
+
+def _flatten(obj, prefix, out):
+    # dotted-path → numeric leaf.  Bools count as 0/1 (the bit-exact
+    # check booleans are exactly the kind of key a diff should watch);
+    # strings and numeric lists are skipped — series belong to the
+    # bench files themselves, not a regression report.
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            if k in SKIP_LEAVES:
+                continue
+            _flatten(v, f"{prefix}.{k}" if prefix else str(k), out)
+    elif isinstance(obj, bool):
+        out[prefix] = float(obj)
+    elif isinstance(obj, (int, float)):
+        if math.isfinite(obj):
+            out[prefix] = float(obj)
+    # strings, lists, None: not comparable leaves
+
+
+def numeric_leaves(doc: dict) -> dict:
+    out: dict = {}
+    _flatten(strip_envelope(doc), "", out)
+    return out
+
+
+def diff_leaves(old: dict, new: dict, *, threshold: float):
+    """Return (flagged, changed, added, removed).  ``flagged`` are the
+    shared keys whose relative delta magnitude is >= threshold;
+    ``changed`` is every shared key that moved at all."""
+    flagged, changed = [], []
+    for key in sorted(old.keys() & new.keys()):
+        a, b = old[key], new[key]
+        if a == b:
+            continue
+        denom = max(abs(a), 1e-12)
+        rel = (b - a) / denom
+        row = (key, a, b, rel)
+        changed.append(row)
+        if abs(rel) >= threshold:
+            flagged.append(row)
+    flagged.sort(key=lambda r: -abs(r[3]))
+    changed.sort(key=lambda r: -abs(r[3]))
+    added = sorted(new.keys() - old.keys())
+    removed = sorted(old.keys() - new.keys())
+    return flagged, changed, added, removed
+
+
+def align_reference(ref_leaves: dict, fresh_leaves: dict):
+    """smoke_reference sections are hand-pruned subsets whose paths
+    drop intermediate levels (``churn.pot.p50`` for the payload's
+    ``scenarios.churn.policies.pot.p50``).  Align each reference leaf
+    to the unique fresh leaf whose path components contain the
+    reference's as an ordered subsequence; ambiguous or unmatched
+    reference keys are reported, not guessed."""
+    def subseq(short, long):
+        it = iter(long)
+        return all(c in it for c in short)
+
+    aligned_old, aligned_new, unmatched = {}, {}, []
+    fresh_split = {k: k.split(".") for k in fresh_leaves}
+    for rkey, rval in ref_leaves.items():
+        comps = rkey.split(".")
+        hits = [fk for fk, fc in fresh_split.items() if subseq(comps, fc)]
+        if len(hits) == 1:
+            aligned_old[rkey] = rval
+            aligned_new[rkey] = fresh_leaves[hits[0]]
+        else:
+            unmatched.append((rkey, len(hits)))
+    return aligned_old, aligned_new, unmatched
+
+
+def committed_doc(name: str, *, ref: str, baseline: str | None):
+    """The baseline side: a file under --baseline, else git show ref:name."""
+    if baseline is not None:
+        path = os.path.join(baseline, name)
+        if not os.path.exists(path):
+            return None, f"{baseline}/{name} (missing)"
+        with open(path) as f:
+            return json.load(f), path
+    try:
+        blob = subprocess.run(
+            ["git", "show", f"{ref}:{name}"],
+            capture_output=True, text=True, check=True,
+        ).stdout
+    except (subprocess.CalledProcessError, OSError):
+        return None, f"{ref}:{name} (not committed)"
+    return json.loads(blob), f"{ref}:{name}"
+
+
+def _fmt(v: float) -> str:
+    if v == int(v) and abs(v) < 1e15:
+        return str(int(v))
+    return f"{v:.6g}"
+
+
+def report_pair(label: str, old_doc: dict, new_doc: dict, *,
+                threshold: float, top: int, align: bool = False) -> int:
+    old = numeric_leaves(old_doc)
+    new = numeric_leaves(new_doc)
+    unmatched = []
+    if align:
+        old, new, unmatched = align_reference(old, new)
+    flagged, changed, added, removed = diff_leaves(old, new,
+                                                  threshold=threshold)
+    shared = len(old.keys() & new.keys())
+    print(f"== {label}: {shared} shared keys, {len(changed)} changed, "
+          f"{len(flagged)} beyond {threshold:.0%}, "
+          f"+{len(added)}/-{len(removed)} keys")
+    for key, a, b, rel in flagged[:top]:
+        print(f"   {rel:+8.1%}  {key}: {_fmt(a)} -> {_fmt(b)}")
+    if len(flagged) > top:
+        print(f"   ... {len(flagged) - top} more beyond threshold")
+    for key in added[:top]:
+        print(f"   + {key} = {_fmt(new[key])}")
+    for key in removed[:top]:
+        print(f"   - {key} (was {_fmt(old[key])})")
+    for key, hits in unmatched[:top]:
+        why = "ambiguous" if hits else "unmatched"
+        print(f"   ? {key} ({why} in fresh smoke payload)")
+    return len(flagged)
+
+
+def stem_of(name: str) -> str:
+    base = os.path.basename(name)
+    base = base[len("BENCH_"):-len(".json")]
+    if base.endswith("_smoke"):
+        base = base[:-len("_smoke")]
+    return base
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
+    ap.add_argument("--ref", default="HEAD",
+                    help="git ref holding the baseline artifacts")
+    ap.add_argument("--baseline", default=None,
+                    help="directory of baseline BENCH_*.json "
+                         "(overrides --ref)")
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="|relative delta| that flags a key")
+    ap.add_argument("--top", type=int, default=8,
+                    help="max flagged/added/removed rows per artifact")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated stems, e.g. detect,loadtest")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit nonzero when any key is flagged")
+    args = ap.parse_args()
+
+    only = set(args.only.split(",")) if args.only else None
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    os.chdir(root)
+
+    n_flagged = n_pairs = 0
+
+    # full artifacts: working tree vs committed record
+    for path in sorted(glob.glob("BENCH_*.json")):
+        if path.endswith("_smoke.json"):
+            continue
+        if only and stem_of(path) not in only:
+            continue
+        with open(path) as f:
+            fresh = json.load(f)
+        base, src = committed_doc(path, ref=args.ref,
+                                  baseline=args.baseline)
+        if base is None:
+            print(f"== {path}: no baseline ({src}), skipped")
+            continue
+        n_pairs += 1
+        n_flagged += report_pair(f"{path} vs {src}", base, fresh,
+                                 threshold=args.threshold, top=args.top)
+
+    # smoke artifacts: fresh smoke payload vs the committed full
+    # artifact's smoke_reference section
+    for path in sorted(glob.glob("BENCH_*_smoke.json")):
+        if only and stem_of(path) not in only:
+            continue
+        full_name = f"BENCH_{stem_of(path)}.json"
+        base, src = committed_doc(full_name, ref=args.ref,
+                                  baseline=args.baseline)
+        ref_section = (base or {}).get("smoke_reference")
+        if not isinstance(ref_section, dict):
+            print(f"== {path}: no smoke_reference in {src}, skipped")
+            continue
+        with open(path) as f:
+            fresh = json.load(f)
+        n_pairs += 1
+        n_flagged += report_pair(f"{path} vs {src}:smoke_reference",
+                                 ref_section, fresh,
+                                 threshold=args.threshold, top=args.top,
+                                 align=True)
+
+    print(f"compare: {n_pairs} artifact pairs, {n_flagged} keys beyond "
+          f"{args.threshold:.0%}"
+          + ("  ** STRICT: failing **" if args.strict and n_flagged else ""))
+    return 1 if (args.strict and n_flagged) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,236 @@
+"""Detection suite — the introspection layer's benchmark: every
+registered scenario × {rosella, pot}, with the in-scan regime detector
+on, publishing detection latency, false-alarm counts, kind attribution
+and time-to-alert vs time-to-adapt (the join of
+``obs.detect.detection_report`` with ``metrics.adaptation_report``).
+
+The suite also records the PR's correctness anchors as booleans:
+
+  * ``detector_off_bit_exact`` — running with ``detect=None`` is
+    bit-equal (responses AND μ̂ trace) to running with the detector on,
+    across the host loop, the single scan, the faulty scan and the
+    fleet scan (S=4);
+  * ``null_zero_false_alarms`` — the stationary scenario never fires;
+  * per-scenario ``alert_before_adapt`` — of the shifts where both a
+    detection latency and a positive adaptation time were measured, the
+    fraction where the system knew before it had re-adapted.
+
+Writes BENCH_detect.json (committed). ``--smoke`` runs a reduced
+scenario set at a short horizon and writes BENCH_detect_smoke.json
+(gitignored) for the non-gating CI smoke; the committed file carries a
+``smoke_reference`` section for the like-for-like comparison.
+
+Run:  PYTHONPATH=src:. python benchmarks/detect_suite.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import math
+
+import numpy as np
+
+from benchmarks.common import write_bench
+from repro import env, obs
+from repro.core import metrics as M
+from repro.core import policies as pol
+from repro.obs.detect import DetectConfig, detection_report
+
+POLICIES = [("rosella", pol.PPOT_SQ2), ("pot", pol.POT)]
+
+FULL_SCENARIOS = [
+    "null", "reshuffle", "flash_crowd", "diurnal", "cotenant_shock",
+    "speed_drift", "churn", "churn_heavy", "crash_storm", "blackout",
+    "grey_failure", "trace_replay",
+]
+SMOKE_SCENARIOS = ["null", "churn", "crash_storm"]
+
+#: Suite observation shape: 2-turn windows (≈5.3 s at the base rate and
+#: batch) resolve detection latency below the adaptation times the
+#: scenario suite measures; warmup covers the λ̂/μ̂ cold start. The
+#: DetectConfig defaults ARE the suite configuration — the bench pins
+#: them.
+WINDOW_TURNS = 2
+ARRIVAL_BATCH = 8
+HORIZON = 720.0
+DCFG = DetectConfig(warmup_windows=8)
+OCFG = obs.ObserveConfig(window_turns=WINDOW_TURNS, detect=DCFG)
+
+
+def _round(v, nd=3):
+    if v is None:
+        return None
+    v = float(v)
+    return round(v, nd) if math.isfinite(v) else None
+
+
+def _run_one(scn, policy, seed):
+    out = env.run_scenario(
+        scn, policy=policy, seed=seed, arrival_batch=ARRIVAL_BATCH,
+        use_scan=True, sequential_pool=True, observe=OCFG,
+    )
+    recs = out["info"]["windows"]
+    wl = out["workload"]
+    adaptation = None
+    if len(wl.shift_times):
+        adaptation = M.adaptation_report(
+            wl.times[:, -1], out["mu_trace"], wl.speeds, wl.shift_times,
+            active=wl.active,
+        )
+    rep = detection_report(
+        recs, shift_events=scn.shift_events(seed), adaptation=adaptation,
+        drifting=scn.drifting,
+    )
+
+    # the alert-before-adapt join: shifts with a measured latency AND a
+    # positive finite adaptation time
+    both, beat = 0, 0
+    for ps in rep["per_shift"].values():
+        ad = ps["adaptation_time"]
+        if ps["latency"] is None or ad is None or not math.isfinite(ad):
+            continue
+        if ad <= 0.0:
+            continue  # absorbed instantly: nothing to beat
+        both += 1
+        beat += ps["latency"] <= ad
+    entry = {
+        "fired": rep["n_detections"] > 0,
+        "n_detections": rep["n_detections"],
+        "n_shifts": rep["n_shifts"],
+        "n_detected_shifts": rep["n_detected_shifts"],
+        "false_alarms": rep["false_alarms"],
+        "repeats": rep["repeats"],
+        "mean_latency_s": _round(rep["mean_latency"]),
+        "max_latency_s": _round(rep["max_latency"]),
+        "kind_match_rate": _round(rep["kind_match_rate"]),
+        "mean_adaptation_s": _round(rep["mean_adaptation"]),
+        "alert_vs_adapt": {"comparable_shifts": both, "alert_first": beat},
+        "detections": [
+            {"t": _round(d["t"]), "turn": d["turn"], "label": d["label"]}
+            for d in rep["detections"][:16]
+        ],
+    }
+    return entry
+
+
+def _bit_exact(scn, seed, **kw):
+    off = env.run_scenario(scn, seed=seed, arrival_batch=ARRIVAL_BATCH,
+                           sequential_pool=True, **kw)
+    on = env.run_scenario(scn, seed=seed, arrival_batch=ARRIVAL_BATCH,
+                          sequential_pool=True, observe=OCFG, **kw)
+    # equal_nan: lost/timed-out requests carry NaN responses in the
+    # faulty shapes — a NaN on both sides is the same outcome
+    return bool(np.array_equal(off["responses"], on["responses"],
+                               equal_nan=True)
+                and np.array_equal(off["mu_trace"], on["mu_trace"],
+                                   equal_nan=True))
+
+
+def bit_exact_checks(seed=0, horizon=160.0):
+    """Detector-off bit-exactness across all four program shapes (the
+    acceptance anchors, recorded into the bench artifact)."""
+    churn = env.make("churn", horizon=horizon)
+    storm = env.make("crash_storm", horizon=horizon)
+    return {
+        "host": _bit_exact(churn, seed, use_scan=False),
+        "scan": _bit_exact(churn, seed, use_scan=True),
+        "faulty_scan": _bit_exact(storm, seed, use_scan=True),
+        "fleet_scan_s4": _bit_exact(churn, seed, use_scan=True,
+                                    n_frontends=4),
+    }
+
+
+def run_suite(scenario_names, *, horizon, seed=0):
+    results: dict = {}
+    for name in scenario_names:
+        scn = env.make(name, horizon=horizon)
+        entry: dict = {
+            "description": scn.description,
+            "drifting": scn.drifting,
+            "n_shift_events": len(scn.shift_events(seed)),
+            "policies": {},
+        }
+        for pname, policy in POLICIES:
+            r = _run_one(scn, policy, seed)
+            entry["policies"][pname] = r
+            print(f"{name:15s} {pname:8s} fired={int(r['fired'])} "
+                  f"hit={r['n_detected_shifts']}/{r['n_shifts']} "
+                  f"fa={r['false_alarms']} lat={r['mean_latency_s']}")
+        results[name] = entry
+    return results
+
+
+def summarize(results) -> dict:
+    fired = sum(1 for e in results.values()
+                if any(p["fired"] for p in e["policies"].values()))
+    fa = sum(p["false_alarms"] or 0 for e in results.values()
+             for p in e["policies"].values())
+    null = results.get("null")
+    null_clean = (null is None or
+                  all(p["n_detections"] == 0
+                      for p in null["policies"].values()))
+    both = sum(p["alert_vs_adapt"]["comparable_shifts"]
+               for e in results.values() for p in e["policies"].values())
+    beat = sum(p["alert_vs_adapt"]["alert_first"]
+               for e in results.values() for p in e["policies"].values())
+    return {
+        "scenarios": len(results),
+        "scenarios_fired": fired,
+        "total_false_alarms": fa,
+        "null_zero_false_alarms": null_clean,
+        "alert_vs_adapt": {"comparable_shifts": both, "alert_first": beat},
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced set; writes BENCH_detect_smoke.json")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = {
+        "window_turns": WINDOW_TURNS,
+        "arrival_batch": ARRIVAL_BATCH,
+        "seed": args.seed,
+        "detect": {
+            "warmup_windows": DCFG.warmup_windows,
+            "ema_alpha": DCFG.ema_alpha,
+            "k_sigma": DCFG.k_sigma,
+            "h_sigma": DCFG.h_sigma,
+            "cusum_decay": DCFG.cusum_decay,
+            "rel_floor": list(DCFG.rel_floor),
+        },
+        "note": "scan layer, sequential_pool, detector in-carry; latency "
+                "= first detection after each ground-truth shift event "
+                "(Scenario.shift_events); adaptation join via "
+                "metrics.adaptation_report",
+    }
+    if args.smoke:
+        results = run_suite(SMOKE_SCENARIOS, horizon=240.0, seed=args.seed)
+        out = {"config": {**cfg, "horizon": 240.0},
+               "scenarios": results, "summary": summarize(results)}
+        write_bench("detect", out, smoke=True)
+        return
+    results = run_suite(FULL_SCENARIOS, horizon=HORIZON, seed=args.seed)
+    checks = bit_exact_checks(seed=args.seed)
+    print("bit-exact:", checks)
+    smoke_ref = run_suite(SMOKE_SCENARIOS, horizon=240.0, seed=args.seed)
+    out = {
+        "config": {**cfg, "horizon": HORIZON},
+        "scenarios": results,
+        "summary": summarize(results),
+        "detector_off_bit_exact": checks,
+    }
+    write_bench("detect", out, smoke_reference={
+        "summary": summarize(smoke_ref),
+        "scenarios": {
+            name: {p: {"n_detections": r["n_detections"],
+                       "false_alarms": r["false_alarms"]}
+                   for p, r in e["policies"].items()}
+            for name, e in smoke_ref.items()
+        },
+    })
+
+
+if __name__ == "__main__":
+    main()

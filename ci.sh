@@ -18,7 +18,7 @@ python -m pytest -x -q -m "not slow" \
     tests/test_router_and_straggler.py tests/test_properties.py \
     tests/test_alias.py tests/test_scanloop.py tests/test_env.py \
     tests/test_fleet_scan.py tests/test_faults.py tests/test_obs.py \
-    tests/test_load.py
+    tests/test_load.py tests/test_detect.py
 
 # ~10 s engine smoke: all policies, reduced shapes
 timeout 120 python benchmarks/sched_throughput.py --smoke
@@ -180,9 +180,24 @@ EOF
 
 # non-gating telemetry-overhead smoke: the in-scan window fold must stay
 # near-free — warn when any telemetry mode costs >10% warm wall-clock vs
-# the telemetry-off scan (writes gitignored BENCH_obs_smoke.json; the
-# warning prints from the benchmark itself)
+# the telemetry-off scan, and the regime detector must stay within 10%
+# of the telemetry-only mode (writes gitignored BENCH_obs_smoke.json;
+# the warnings print from the benchmark itself)
 timeout 600 python benchmarks/obs_overhead.py --smoke || true
+
+# non-gating detection smoke: reduced scenario set with the in-scan
+# regime detector on (gitignored BENCH_detect_smoke.json) — zero false
+# alarms on null and a firing churn/crash_storm detector, compared via
+# the unified bench diff below against the smoke_reference of the
+# committed BENCH_detect.json
+timeout 900 python benchmarks/detect_suite.py --smoke || true
+
+# non-gating unified bench-trajectory report: every working-tree
+# BENCH_*.json (and gitignored *_smoke.json vs the committed
+# smoke_reference sections) diffed key-by-key against the committed
+# records — one regression report across all perf trajectories,
+# complementing the per-bench headline heredocs above
+python benchmarks/compare.py || true
 
 # informational: full not-slow suite (known model-layer failures tolerated)
 python -m pytest -q -m "not slow" || true

@@ -81,6 +81,7 @@ class HomogeneousPoisson:
 
     is_homogeneous = True
     is_trace = False
+    shift_like = False  # constant: no discrete shifts, no drift
 
     def compile_rate(self, base_rate: float, horizon: float,
                      rng: np.random.RandomState) -> PiecewiseRate:
@@ -105,6 +106,7 @@ class MMPP:
     dwell: tuple = (45.0, 9.0)  # mean dwell time per regime
     is_homogeneous = False
     is_trace = False
+    shift_like = True  # discrete regime switches at the compiled bps
 
     def compile_rate(self, base_rate, horizon, rng) -> PiecewiseRate:
         t, r = 0.0, 0
@@ -129,6 +131,7 @@ class Diurnal:
     bins_per_period: int = 32
     is_homogeneous = False
     is_trace = False
+    shift_like = False  # continuous drift — bps are discretization, not shifts
 
     def compile_rate(self, base_rate, horizon, rng) -> PiecewiseRate:
         del rng
@@ -178,6 +181,7 @@ class TraceArrivals:
     costs: tuple | None = None  # optional per-request costs
     is_homogeneous = False
     is_trace = True
+    shift_like = False  # empirical rate bins carry no shift semantics
 
     @classmethod
     def from_arrays(cls, times, costs=None) -> "TraceArrivals":
@@ -269,6 +273,7 @@ class StaticCapacity:
     """Speeds never change — the null capacity process."""
 
     is_static = True
+    shift_like = False
 
     def compile(self, speeds0, horizon, rng):
         del horizon, rng
@@ -283,6 +288,7 @@ class StepSchedule:
 
     entries: tuple  # ((t, speeds), ...)
     is_static = False
+    shift_like = True  # every entry is a discrete capacity shift
 
     def compile(self, speeds0, horizon, rng):
         del horizon, rng
@@ -306,6 +312,7 @@ class OnOffInterference:
     t_off: float = 240.0
     period: float | None = None
     is_static = False
+    shift_like = True  # on/off edges are discrete capacity shifts
 
     def compile(self, speeds0, horizon, rng):
         del rng
@@ -345,6 +352,7 @@ class OUDrift:
     tau: float = 60.0
     dt: float = 10.0
     is_static = False
+    shift_like = False  # continuous wander — dt steps are not shift events
 
     def compile(self, speeds0, horizon, rng):
         s0 = np.asarray(speeds0, float)
@@ -367,6 +375,7 @@ class Reshuffle:
 
     period: float = 60.0
     is_static = False
+    shift_like = True  # each permutation instant is a capacity shift
 
     def compile(self, speeds0, horizon, rng):
         s0 = np.asarray(speeds0, float)

@@ -218,6 +218,47 @@ class Scenario:
         _, (cap_bp, _), memb, flt = self._compile_env(seed)
         return self._shifts_from(cap_bp, memb, flt)
 
+    @property
+    def drifting(self) -> bool:
+        """True when an axis changes CONTINUOUSLY (diurnal wave, OU
+        drift, empirical trace rate): its compiled breakpoints are
+        discretization artifacts, not shift events, so detector
+        false-alarm accounting is undefined on this scenario
+        (``obs.detect.detection_report(drifting=True)``)."""
+        arr, cap = self.arrivals, self.capacity
+        arr_drifts = not (getattr(arr, "is_homogeneous", False)
+                          or getattr(arr, "shift_like", False))
+        cap_drifts = not (getattr(cap, "is_static", False)
+                          or getattr(cap, "shift_like", False))
+        return arr_drifts or cap_drifts
+
+    def shift_events(self, seed: int = 0) -> list:
+        """Ground-truth (time, kind) shift events for detector
+        attribution (``obs.detect.detection_report``), kinds in
+        {"load", "capacity", "membership", "fault"}.
+
+        Unlike ``shift_times`` (which feeds the adaptation harness and
+        keeps its historical capacity+membership+fault definition), this
+        includes ARRIVAL breakpoints — but only for processes that mark
+        themselves ``shift_like`` (MMPP regime switches, step schedules,
+        …); drift discretization bins (diurnal, OU) are excluded because
+        their breakpoints are not events anything should detect.
+        Deterministic in ``seed``; sorted; times < horizon."""
+        rate, (cap_bp, _), memb, flt = self._compile_env(seed)
+        events: set = set()
+        if getattr(self.arrivals, "shift_like", False):
+            events |= {(float(t), "load") for t in np.asarray(rate.bp)[1:]}
+        if getattr(self.capacity, "shift_like", False):
+            events |= {(float(t), "capacity")
+                       for t in np.asarray(cap_bp)[1:]}
+        if memb is not None:
+            events |= {(float(t), "membership")
+                       for t in np.asarray(memb[0])[1:]}
+        if flt is not None:
+            events |= {(float(t), "fault")
+                       for t in np.concatenate([flt[0], flt[1]])}
+        return sorted((t, k) for t, k in events if t < self.horizon)
+
     # -- serving compile ----------------------------------------------------
 
     def compile_serving(self, seed: int = 0,

@@ -2,10 +2,22 @@
 
 ``windows``: the in-carry windowed metric fold (TelemetryCarry pytree +
 pure fold functions shared by scan bodies and host loops).
+``detect``: in-carry CUSUM regime detection over the window stream
+(``ObserveConfig(detect=DetectConfig())``) + ``detection_report``
+ground-truth attribution.
+``slo``: declarative SLO objectives with multi-window burn-rate
+alerting over the record stream.
 ``export``: Prometheus / JSONL / terminal-dashboard sinks.
 ``tracing``: decision-lifecycle ring → Chrome trace JSON, profiler
 annotations.
 """
+from repro.obs.detect import (  # noqa: F401
+    REGIMES,
+    SIGNALS,
+    DetectConfig,
+    detection_report,
+    detections_from_records,
+)
 from repro.obs.export import (  # noqa: F401
     JsonlSink,
     dashboard,
@@ -14,6 +26,14 @@ from repro.obs.export import (  # noqa: F401
     peak_rss_mb,
     prometheus_snapshot,
     rss_mb,
+)
+from repro.obs.slo import (  # noqa: F401
+    SinkWithSLO,
+    SLObjective,
+    SLOTracker,
+    annotate,
+    default_objectives,
+    hist_frac_above,
 )
 from repro.obs.tracing import (  # noqa: F401
     DecisionTrace,

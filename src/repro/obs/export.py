@@ -57,6 +57,11 @@ _PROM_GAUGES = [
     ("collision_rate", "rosella_herd_collision_rate",
      "share of placements colliding across frontends"),
     ("in_flight", "rosella_tasks_in_flight", "launched - completed - killed"),
+    ("n_active", "rosella_workers_active", "active-worker membership count"),
+    # regime-detector keys (present when ObserveConfig.detect is on)
+    ("regime", "rosella_regime", "regime label code (obs.detect.REGIMES)"),
+    ("detected", "rosella_regime_detected",
+     "regime kind fired this window (0 = none)"),
 ]
 _PROM_COUNTERS = [
     ("launched", "rosella_copies_launched_total"),
@@ -64,6 +69,7 @@ _PROM_COUNTERS = [
     ("dirty", "rosella_completions_dirty_total"),
     ("killed", "rosella_copies_killed_total"),
     ("retried", "rosella_retries_total"),
+    ("det_count", "rosella_regime_detections_total"),
 ]
 
 
@@ -93,6 +99,26 @@ def prometheus_snapshot(cfg: obw.ObserveConfig, record: dict,
         if _finite(v):
             lines.append(f"# TYPE {name} counter")
             lines.append(f"{name}{lab} {int(v)}")
+    slo = record.get("slo")
+    if slo:
+        base = lab[1:-1] if lab else ""
+        sep = "," if base else ""
+        for metric, help_ in (
+            ("burn_fast", "fast-window SLO burn rate"),
+            ("burn_slow", "slow-window SLO burn rate"),
+            ("alert", "1 while the multi-window burn alert is active"),
+        ):
+            name = f"rosella_slo_{metric}"
+            lines.append(f"# HELP {name} {help_}")
+            lines.append(f"# TYPE {name} gauge")
+            for obj_name, st in slo.items():
+                v = st.get(metric)
+                val = float(bool(v)) if metric == "alert" else v
+                if _finite(val):
+                    lines.append(
+                        f'{name}{{{base}{sep}objective="{obj_name}"}} '
+                        f"{float(val):.9g}"
+                    )
     hist = record.get("hist")
     if hist is not None:
         edges = obw.bin_edges(cfg)
@@ -188,7 +214,18 @@ def dashboard_row(record: dict) -> str:
             cells.append(f"{'-':>{len(fmt.format(0))}s}")
         else:
             cells.append(fmt.format(int(v) if "d" in fmt else float(v)))
-    return " ".join(cells)
+    line = " ".join(cells)
+    # active introspection state rides the row's tail: the regime label
+    # while non-stable (detector on) and any firing SLO burn alerts
+    if record.get("regime", 0):
+        line += f"  << {record.get('regime_label', record['regime'])}"
+        if record.get("detected", 0):
+            line += " !"
+    alerts = [n for n, st in (record.get("slo") or {}).items()
+              if st.get("alert")]
+    if alerts:
+        line += f"  ** SLO ALERT: {','.join(alerts)} **"
+    return line
 
 
 def dashboard(records: Iterable[dict], *, title: str | None = None,

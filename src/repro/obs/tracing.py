@@ -193,9 +193,13 @@ def windows_to_chrome_trace(records: list) -> dict:
 
     The stream-only companion to ``DecisionTrace``: derived entirely
     from the in-scan window ys, so it exists even when no per-task
-    trace was materialized.
+    trace was materialized. Regime detections (``obs.detect``) and SLO
+    burn-rate alerts (``obs.slo`` annotations) become instant markers
+    on the same timeline, so a Perfetto view shows WHEN the system
+    noticed each shift against the metric curves.
     """
     events = []
+    slo_active: set = set()
     for rec in records:
         ts = float(rec["t_end"]) * _US
         for key, name in _COUNTER_KEYS:
@@ -209,6 +213,31 @@ def windows_to_chrome_trace(records: list) -> dict:
                 "name": name, "ph": "C", "ts": ts, "pid": 0,
                 "args": {name: v},
             })
+        if rec.get("detected", 0):
+            events.append({
+                "name": f"regime:{rec.get('detected_label', 'shift')}",
+                "ph": "i", "s": "g", "ts": ts, "pid": 0, "tid": 0,
+                "args": {"turn": rec.get("turn"),
+                         "window": rec.get("window"),
+                         "regime": rec.get("regime_label")},
+            })
+        for obj_name, st in (rec.get("slo") or {}).items():
+            firing = bool(st.get("alert"))
+            was = obj_name in slo_active
+            if firing and not was:
+                slo_active.add(obj_name)
+                events.append({
+                    "name": f"slo-alert:{obj_name}", "ph": "i", "s": "g",
+                    "ts": ts, "pid": 0, "tid": 0,
+                    "args": {"burn_fast": st.get("burn_fast"),
+                             "burn_slow": st.get("burn_slow")},
+                })
+            elif was and not firing:
+                slo_active.discard(obj_name)
+                events.append({
+                    "name": f"slo-clear:{obj_name}", "ph": "i", "s": "g",
+                    "ts": ts, "pid": 0, "tid": 0, "args": {},
+                })
     return {"traceEvents": events, "displayTimeUnit": "ms"}
 
 

@@ -48,6 +48,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import detect as _detect
+from repro.obs.detect import DetectConfig
+
 
 @dataclasses.dataclass(frozen=True)
 class ObserveConfig:
@@ -59,7 +62,11 @@ class ObserveConfig:
     ratio (see ``quantile_tolerance``). ``emit_responses=False`` puts
     the scan in stream-only mode: the per-request response ys (and μ̂
     trace) are dropped from the program entirely, so a million-turn
-    horizon materializes only the window stream.
+    horizon materializes only the window stream. ``detect`` switches on
+    the in-carry regime detector (``obs.detect``): the CUSUM fold runs
+    at every window boundary inside the same programs, and the window
+    records gain the regime/alarm keys; ``None`` keeps the detector
+    arithmetic out of the trace and the record schema unchanged.
     """
 
     window_turns: int = 16
@@ -67,6 +74,7 @@ class ObserveConfig:
     hist_lo: float = 1e-3
     hist_hi: float = 1e4
     emit_responses: bool = True
+    detect: DetectConfig | None = None
 
     def __post_init__(self):
         if self.window_turns < 1:
@@ -75,6 +83,9 @@ class ObserveConfig:
             raise ValueError("need 0 < hist_lo < hist_hi")
         if self.hist_bins < 2:
             raise ValueError("hist_bins must be >= 2")
+        if self.detect is not None and not isinstance(self.detect,
+                                                      DetectConfig):
+            raise TypeError("detect must be a DetectConfig or None")
 
 
 def bin_ratio(cfg: ObserveConfig) -> float:
@@ -118,6 +129,20 @@ class TelemetryCarry(NamedTuple):
     cum_launched: jax.Array  # i32 global launched counter
     cum_completed: jax.Array  # i32 global clean+dirty completions
     cum_killed: jax.Array  # i32 global killed counter
+    n_active: jax.Array  # i32 active-worker count gauge at last fold
+    # regime-detector state (obs.detect; all global — never reset at
+    # window boundaries, updated only ON boundaries, inert zeros when
+    # ObserveConfig.detect is None)
+    det_mean: jax.Array  # f32[NSIG] EMA signal baselines
+    det_scale: jax.Array  # f32[NSIG] EMA |dev| scales
+    det_pos: jax.Array  # f32[NSIG] CUSUM positive accumulators
+    det_neg: jax.Array  # f32[NSIG] CUSUM negative accumulators
+    det_wins: jax.Array  # i32 windows folded by the detector
+    det_cool: jax.Array  # i32 cooldown windows remaining
+    det_regime: jax.Array  # i32 current regime label code
+    det_fired: jax.Array  # i32 kind fired at the LAST boundary (0 none)
+    det_last_turn: jax.Array  # i32 turn_idx of the last alarm
+    det_count: jax.Array  # i32 total alarms fired
 
 
 class TurnObs(NamedTuple):
@@ -157,6 +182,8 @@ def init_carry(cfg: ObserveConfig) -> TelemetryCarry:
         lam_hat=f32(0.0), t_start=f32(0.0), t_last=f32(0.0),
         turns=i32(0), turn_idx=i32(0),
         cum_launched=i32(0), cum_completed=i32(0), cum_killed=i32(0),
+        n_active=i32(0),
+        **_detect.init_state(cfg.detect),
     )
 
 
@@ -197,10 +224,12 @@ def fold_turn(cfg: ObserveConfig, tc: TelemetryCarry,
     if obs.active is None:
         q_mean = jnp.mean(qf)
         q_hi = jnp.max(obs.q_view).astype(i32)
+        n_active = i32(obs.q_view.shape[-1])
     else:
         nact = jnp.maximum(jnp.sum(obs.active.astype(f32)), f32(1.0))
         q_mean = jnp.sum(jnp.where(obs.active, qf, 0.0)) / nact
         q_hi = jnp.max(jnp.where(obs.active, obs.q_view, 0)).astype(i32)
+        n_active = jnp.sum(obs.active, dtype=i32)
     return TelemetryCarry(
         hist=_hist_fold(cfg, tc.hist, obs.resp, obs.resp_ok),
         n_resp=tc.n_resp + jnp.sum(obs.resp_ok, dtype=i32),
@@ -223,6 +252,14 @@ def fold_turn(cfg: ObserveConfig, tc: TelemetryCarry,
         cum_launched=tc.cum_launched + obs.launched,
         cum_completed=(tc.cum_completed + obs.completed + obs.dirty),
         cum_killed=tc.cum_killed + obs.killed,
+        n_active=n_active,
+        # detector fields pass through the per-turn fold untouched —
+        # obs.detect.update_row folds them at window boundaries only
+        det_mean=tc.det_mean, det_scale=tc.det_scale,
+        det_pos=tc.det_pos, det_neg=tc.det_neg,
+        det_wins=tc.det_wins, det_cool=tc.det_cool,
+        det_regime=tc.det_regime, det_fired=tc.det_fired,
+        det_last_turn=tc.det_last_turn, det_count=tc.det_count,
     )
 
 
@@ -252,6 +289,11 @@ def observe_turn(cfg: ObserveConfig, tc: TelemetryCarry, obs: TurnObs):
     """
     row = fold_turn(cfg, tc, obs)
     flag = (row.turn_idx % cfg.window_turns) == 0
+    if cfg.detect is not None:
+        # regime detector folds over the completed window's stats; the
+        # update is where(flag)-gated inside, so off-boundary turns are
+        # pass-through and the boundary row carries its own alarm state
+        row = _detect.update_row(cfg.detect, row, flag)
     fresh = reset_window(row)
     tc_next = jax.tree_util.tree_map(
         lambda a, b: jnp.where(flag, a, b), fresh, row
@@ -416,8 +458,11 @@ def record_from_state(cfg: ObserveConfig, row) -> dict:
                            if launched > 0 else 0.0),
         "in_flight": int(row.cum_launched) - int(row.cum_completed)
         - int(row.cum_killed),
+        "n_active": int(row.n_active),
         "hist": hist.tolist(),
     }
+    if cfg.detect is not None:
+        rec.update(_detect.record_fields(row, partial=rec["partial"]))
     return rec
 
 
@@ -472,7 +517,14 @@ def aggregate_rows(cfg: ObserveConfig, rows_s) -> "_RowView":
             a.t_last = v.max(axis=0)
         elif f in ("turns", "turn_idx"):
             setattr(a, f, v.max(axis=0))
-        else:  # counts and lam_hat: sum across frontends
+        elif f in ("det_mean", "det_scale", "det_pos", "det_neg"):
+            setattr(a, f, v.mean(axis=0))  # detector float state: mean view
+        elif f in ("n_active", "det_wins", "det_cool", "det_regime",
+                   "det_fired", "det_last_turn"):
+            # membership is global (same on every frontend) and the
+            # aggregate regime/alarm view is "any frontend detected"
+            setattr(a, f, v.max(axis=0))
+        else:  # counts, lam_hat and det_count: sum across frontends
             setattr(a, f, v.sum(axis=0))
     return a
 
